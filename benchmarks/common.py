@@ -1,0 +1,38 @@
+"""Shared benchmark utilities: timing + subprocess multi-device runs."""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import time
+
+REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+SRC = os.path.join(REPO, "src")
+RESULTS = os.path.join(REPO, "results")
+
+
+def time_us(fn, *, warmup: int = 3, iters: int = 20) -> float:
+    for _ in range(warmup):
+        fn()
+    t0 = time.perf_counter()
+    for _ in range(iters):
+        fn()
+    return (time.perf_counter() - t0) / iters * 1e6
+
+
+def run_multidevice(code: str, devices: int, timeout: int = 1200) -> str:
+    """Run code in a subprocess with N forced host devices; returns stdout."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = f"--xla_force_host_platform_device_count={devices}"
+    env["PYTHONPATH"] = SRC + os.pathsep + env.get("PYTHONPATH", "")
+    proc = subprocess.run([sys.executable, "-c", code], env=env,
+                          capture_output=True, text=True, timeout=timeout)
+    if proc.returncode != 0:
+        raise RuntimeError(f"bench subprocess failed:\n{proc.stderr[-3000:]}")
+    return proc.stdout
+
+
+def emit(rows: list[tuple]) -> list[tuple]:
+    for name, us, derived in rows:
+        print(f"{name},{us if us is not None else ''},{derived}")
+    return rows

@@ -1,0 +1,36 @@
+"""Paper Fig. 3: modeled single ping-pong cost by message class on Lassen.
+
+Reproduces the three-way split (intra-socket / inter-socket / inter-node)
+using the Bienz-et-al. parameter fits behind core/cost_model.py; the paper's
+qualitative claims asserted: inter-node ≫ inter-socket ≫ intra-socket for
+small messages, with the eager→rendezvous jump at 8 KiB.
+"""
+from __future__ import annotations
+
+from repro.core.cost_model import LinkParams, ProtocolParams, _p
+
+from .common import emit
+
+INTRA_SOCKET = ProtocolParams(eager=_p(0.45, 20.0), rendezvous=_p(1.3, 38.0))
+INTER_SOCKET = ProtocolParams(eager=_p(0.9, 9.0), rendezvous=_p(2.4, 20.0))
+INTER_NODE = ProtocolParams(eager=_p(1.8, 5.0), rendezvous=_p(5.2, 11.5))
+
+SIZES = [8, 64, 512, 4096, 8192, 65536, 1 << 20]
+
+
+def main() -> list[tuple]:
+    rows = []
+    for nbytes in SIZES:
+        a = INTRA_SOCKET.msg_cost(nbytes) * 1e6
+        b = INTER_SOCKET.msg_cost(nbytes) * 1e6
+        c = INTER_NODE.msg_cost(nbytes) * 1e6
+        assert c > b > a, "locality ordering must hold"
+        rows.append((f"fig3/pingpong_{nbytes}B_intra_socket", round(a, 3),
+                     f"ratio_internode={c / a:.1f}x"))
+        rows.append((f"fig3/pingpong_{nbytes}B_inter_socket", round(b, 3), ""))
+        rows.append((f"fig3/pingpong_{nbytes}B_inter_node", round(c, 3), ""))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Paper Fig. 7: modeled standard vs locality-aware Bruck across node counts
+and processes-per-node (PPN), Lassen parameters, 4-byte payload per rank."""
+from __future__ import annotations
+
+from repro.core import cost_model as CM
+from repro.core.topology import ceil_log
+
+from .common import emit
+
+
+def main() -> list[tuple]:
+    rows = []
+    block = 4.0
+    for ppn in (4, 8, 16, 32):
+        for nodes in (16, 64, 256, 1024, 4096):
+            p = nodes * ppn
+            std = CM.bruck_model(p, block, CM.LASSEN) * 1e6
+            loc = CM.locality_bruck_model(p, ppn, block, CM.LASSEN) * 1e6
+            rows.append((f"fig7/ppn{ppn}_nodes{nodes}_bruck", round(std, 3),
+                         f"nonlocal_msgs={ceil_log(2, p)}"))
+            rows.append((f"fig7/ppn{ppn}_nodes{nodes}_locality", round(loc, 3),
+                         f"nonlocal_msgs={ceil_log(ppn, nodes)} "
+                         f"speedup={std / loc:.2f}x"))
+    # paper claim: improvements amplified with more processes per region
+    gain = {ppn: (CM.bruck_model(1024 * ppn, block, CM.LASSEN) /
+                  CM.locality_bruck_model(1024 * ppn, ppn, block, CM.LASSEN))
+            for ppn in (4, 32)}
+    assert gain[32] > gain[4], "gain must grow with PPN"
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

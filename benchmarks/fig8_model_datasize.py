@@ -1,0 +1,23 @@
+"""Paper Fig. 8: modeled cost vs data size (1024 regions × 16 ranks)."""
+from __future__ import annotations
+
+from repro.core import cost_model as CM
+
+from .common import emit
+
+
+def main() -> list[tuple]:
+    rows = []
+    p_local = 16
+    p = 1024 * p_local
+    for block in (4, 16, 64, 256, 1024, 4096):
+        std = CM.bruck_model(p, float(block), CM.LASSEN) * 1e6
+        loc = CM.locality_bruck_model(p, p_local, float(block), CM.LASSEN) * 1e6
+        rows.append((f"fig8/block{block}B_bruck", round(std, 3), ""))
+        rows.append((f"fig8/block{block}B_locality", round(loc, 3),
+                     f"speedup={std / loc:.2f}x"))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

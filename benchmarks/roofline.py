@@ -1,0 +1,85 @@
+"""§Roofline aggregation: read results/dryrun/*.json into the per-cell table.
+
+Run the dry-run sweep first (python -m repro.launch.dryrun --all --mesh
+single/multi). Emits one row per (arch × shape × mesh) with the three
+roofline terms, the dominant bottleneck, and the useful-FLOPs ratio; also
+writes results/roofline_table.md for EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import glob
+import json
+import os
+
+from repro.core.hlo_analysis import Roofline
+
+from .common import RESULTS, emit
+
+DRYRUN = os.path.join(RESULTS, "dryrun")
+
+
+def load_cells(tag: str | None = None) -> list[dict]:
+    cells = []
+    for path in sorted(glob.glob(os.path.join(DRYRUN, "*.json"))):
+        with open(path) as f:
+            r = json.load(f)
+        want_tag = tag or ""
+        if r.get("tag", "") != want_tag:
+            continue
+        if r["status"] == "ok":
+            # recompute the roofline row from raw fields (keeps older JSONs
+            # consistent with the current term definitions)
+            roof = Roofline(
+                flops=float(r["cost"].get("flops", 0.0)),
+                hbm_bytes=float(r["cost"].get("bytes accessed", 0.0)),
+                collective_bytes=float(r["roofline"]["collective_bytes"]),
+                n_chips=r["n_chips"], model_flops=r["model_flops"])
+            r["roofline"] = roof.row()
+        cells.append(r)
+    return cells
+
+
+def table_md(cells: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute_s | memory_s | collective_s | "
+           "dominant | useful | roofline |\n"
+           "|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in cells:
+        if r["status"] == "skipped":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                         f"| — | skipped ({r['reason']}) | — | — |")
+            continue
+        if r["status"] != "ok":
+            lines.append(f"| {r['arch']} | {r['shape']} | {r['mesh']} | — | — "
+                         f"| — | ERROR | — | — |")
+            continue
+        f = r["roofline"]
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {f['compute_s']:.2e} | {f['memory_s']:.2e} "
+            f"| {f['collective_s']:.2e} | {f['dominant']} "
+            f"| {f['useful_fraction']:.2f} | {f['roofline_fraction']:.3f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main() -> list[tuple]:
+    cells = load_cells()
+    rows = []
+    for r in cells:
+        if r["status"] != "ok":
+            rows.append((f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}",
+                         None, r["status"]))
+            continue
+        f = r["roofline"]
+        step_s = max(f["compute_s"], f["memory_s"], f["collective_s"])
+        rows.append((f"roofline/{r['arch']}_{r['shape']}_{r['mesh']}",
+                     round(step_s * 1e6, 1),
+                     f"dom={f['dominant']} frac={f['roofline_fraction']:.3f}"))
+    os.makedirs(RESULTS, exist_ok=True)
+    with open(os.path.join(RESULTS, "roofline_table.md"), "w") as f:
+        f.write(table_md(cells))
+    return emit(rows)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,46 @@
+"""Benchmark harness entry: one module per paper table/figure.
+
+``PYTHONPATH=src python -m benchmarks.run [--only fig7,...]``
+
+Prints ``name,us_per_call,derived`` CSV rows per benchmark.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+from . import (collective_hlo_audit, fig3_pingpong, fig7_model_scaling,
+               fig8_model_datasize, fig9_measured, roofline)
+
+BENCHES = {
+    "fig3": fig3_pingpong,
+    "fig7": fig7_model_scaling,
+    "fig8": fig8_model_datasize,
+    "fig9": fig9_measured,
+    "hlo_audit": collective_hlo_audit,
+    "roofline": roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default=None,
+                    help="comma-separated subset of " + ",".join(BENCHES))
+    args = ap.parse_args()
+    names = args.only.split(",") if args.only else list(BENCHES)
+    print("name,us_per_call,derived")
+    failed = []
+    for name in names:
+        try:
+            BENCHES[name].main()
+        except Exception:
+            failed.append(name)
+            traceback.print_exc()
+    if failed:
+        print(f"FAILED benchmarks: {failed}", file=sys.stderr)
+        sys.exit(1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,33 @@
+"""Architecture registry: ``get(name)`` / ``get_smoke(name)`` / ``ARCHS``."""
+from __future__ import annotations
+
+import importlib
+
+from .base import ModelConfig, ShapeSpec, SHAPES, SHAPES_BY_NAME, reduced
+
+ARCHS = (
+    "zamba2-1.2b",
+    "qwen2-moe-a2.7b",
+    "llama4-scout-17b-a16e",
+    "h2o-danube-3-4b",
+    "gemma2-9b",
+    "llama3.2-3b",
+    "yi-6b",
+    "mamba2-780m",
+    "whisper-tiny",
+    "internvl2-26b",
+)
+
+_MODULES = {name: name.replace("-", "_").replace(".", "_") for name in ARCHS}
+
+
+def get(name: str) -> ModelConfig:
+    if name not in _MODULES:
+        raise KeyError(f"unknown arch {name!r}; available: {list(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return mod.CONFIG
+
+
+def get_smoke(name: str) -> ModelConfig:
+    mod = importlib.import_module(f"repro.configs.{_MODULES[name]}")
+    return getattr(mod, "SMOKE", None) or reduced(mod.CONFIG)

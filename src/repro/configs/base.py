@@ -1,0 +1,268 @@
+"""Model/arch configuration schema shared by the model zoo and the launcher.
+
+A ``ModelConfig`` fully determines an architecture: the layer plan (which
+mixer — attention variant or Mamba2 — plus which MLP — dense or MoE — at
+every depth), all dimensions, and the modality frontend stub. ``shapes()``
+yields the assigned input-shape set; ``input_specs()`` builds the
+ShapeDtypeStruct stand-ins used by the multi-pod dry-run (never allocates).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+
+# ---------------------------------------------------------------------------
+# Per-layer plan entries
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class LayerSpec:
+    """One layer of the stack: a (mixer, mlp) pair.
+
+    mixer: 'attn' | 'mamba2' | 'shared_attn' (zamba2 weight-reuse block)
+    attn:  'full' | 'window' | 'chunked' | 'none' (bidirectional for encoders
+           is selected by the model kind, not per-layer)
+    mlp:   'dense' | 'moe' | 'none'
+    rope:  rotary applied to this layer's attention (False => NoPE)
+    """
+
+    mixer: str = "attn"
+    attn: str = "full"
+    mlp: str = "dense"
+    rope: bool = True
+
+    def key(self) -> tuple:
+        return (self.mixer, self.attn, self.mlp, self.rope)
+
+
+# ---------------------------------------------------------------------------
+# Shapes assigned to every LM-family architecture
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass(frozen=True)
+class ShapeSpec:
+    name: str
+    seq_len: int
+    global_batch: int
+    kind: str  # 'train' | 'prefill' | 'decode'
+
+
+SHAPES = (
+    ShapeSpec("train_4k", 4_096, 256, "train"),
+    ShapeSpec("prefill_32k", 32_768, 32, "prefill"),
+    ShapeSpec("decode_32k", 32_768, 128, "decode"),
+    ShapeSpec("long_500k", 524_288, 1, "decode"),
+)
+SHAPES_BY_NAME = {s.name: s for s in SHAPES}
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                     # dense | moe | ssm | hybrid | audio | vlm
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int = 0               # 0 => d_model // n_heads
+
+    # --- attention options ---------------------------------------------------
+    rope_theta: float = 10_000.0
+    window: int = 0                 # sliding-window size (0 = unused)
+    chunk: int = 0                  # chunked-local attention size (llama4 iRoPE)
+    attn_pattern: tuple[str, ...] = ("full",)   # per-layer cycle
+    nope_every: int = 0             # every k-th layer: global attention, no RoPE
+    attn_softcap: float = 0.0
+    final_softcap: float = 0.0
+    qk_norm: bool = False
+    sandwich_norm: bool = False     # gemma2 post-norms
+    mlp_act: str = "silu"           # silu (SwiGLU) | gelu (GeGLU) | gelu_mlp
+    scale_embed: bool = False       # gemma2/whisper: x *= sqrt(d_model)
+    norm_type: str = "rms"          # rms | ln (whisper)
+
+    # --- MoE ------------------------------------------------------------------
+    n_experts: int = 0
+    top_k: int = 0
+    d_expert: int = 0               # expert hidden dim (0 => d_ff)
+    n_shared_experts: int = 0
+    d_shared_expert: int = 0        # hidden dim of the always-on shared FFN
+    moe_every: int = 1              # MoE MLP at layers where i % moe_every == 0
+    router_norm_topk: bool = True   # normalize top-k weights to sum to 1
+    router_act: str = "softmax"     # softmax | sigmoid (llama4)
+    capacity_factor: float = 1.25
+
+    # --- SSM (Mamba2) ----------------------------------------------------------
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_headdim: int = 64
+    ssm_ngroups: int = 1
+    ssm_conv: int = 4
+    ssm_chunk: int = 256
+
+    # --- hybrid (zamba2): shared attention block every k mamba layers ----------
+    shared_attn_every: int = 0
+
+    # --- enc-dec (whisper) ------------------------------------------------------
+    n_enc_layers: int = 0
+    enc_seq: int = 0                # stub frontend sequence length (frames)
+
+    # --- vlm -------------------------------------------------------------------
+    n_img_tokens: int = 0           # stub patch-embedding prefix length
+
+    # --- embedding / misc --------------------------------------------------------
+    tie_embeddings: bool = True
+    vocab_pad_multiple: int = 256
+    norm_eps: float = 1e-5
+    dtype: Any = jnp.bfloat16       # activation/compute dtype
+    param_dtype: Any = jnp.float32
+
+    # ------------------------------------------------------------------ helpers
+    @property
+    def head_dim_(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def sub_quadratic(self) -> bool:
+        """True if decode state is o(seq): SSM/hybrid/windowed/chunked-local.
+
+        Archs with ANY full-attention layer (incl. gemma2's alternating global
+        layers and llama4's NoPE global layers) hold a full-length KV cache on
+        those layers, but remain sub-quadratic in *compute* per token; the
+        long_500k applicability rule tracks attention-free/windowed archs plus
+        chunked/hybrid designs (see DESIGN.md §Arch-applicability).
+        """
+        if self.family in ("ssm", "hybrid"):
+            return True
+        plan = self.layer_plan()
+        return all(s.attn in ("window", "chunked", "none") or s.mixer != "attn"
+                   for s in plan)
+
+    @property
+    def runs_long_500k(self) -> bool:
+        # per assignment: run for SSM/hybrid/linear-attn (+ windowed/chunked
+        # which are O(1)-state per token); skip pure full-attention archs.
+        if self.family in ("ssm", "hybrid"):
+            return True
+        plan = self.layer_plan()
+        n_full = sum(1 for s in plan if s.mixer == "attn" and s.attn == "full")
+        return n_full == 0 or (self.chunk > 0)  # llama4: 3/4 chunked
+
+    def shapes(self) -> tuple[ShapeSpec, ...]:
+        out = []
+        for s in SHAPES:
+            if s.name == "long_500k" and not self.runs_long_500k:
+                continue
+            out.append(s)
+        return tuple(out)
+
+    # ------------------------------------------------------------------ plan
+    def layer_plan(self) -> tuple[LayerSpec, ...]:
+        """The (mixer, mlp) pair at every depth, derived from the family."""
+        plan: list[LayerSpec] = []
+        if self.family == "ssm":
+            return tuple(LayerSpec(mixer="mamba2", attn="none", mlp="none")
+                         for _ in range(self.n_layers))
+        if self.family == "hybrid":
+            # zamba2: mamba2 trunk; a weight-shared attention block is applied
+            # after every `shared_attn_every` mamba layers.
+            for i in range(self.n_layers):
+                plan.append(LayerSpec(mixer="mamba2", attn="none", mlp="none"))
+                if self.shared_attn_every and (i + 1) % self.shared_attn_every == 0:
+                    plan.append(LayerSpec(mixer="shared_attn", attn="full",
+                                          mlp="dense"))
+            return tuple(plan)
+        for i in range(self.n_layers):
+            if self.nope_every and (i + 1) % self.nope_every == 0:
+                attn, rope = "full", False          # llama4 global-NoPE layer
+            else:
+                attn = self.attn_pattern[i % len(self.attn_pattern)]
+                rope = True
+            mlp = "moe" if (self.n_experts and i % self.moe_every == 0) else "dense"
+            plan.append(LayerSpec(mixer="attn", attn=attn, mlp=mlp, rope=rope))
+        return tuple(plan)
+
+    # ------------------------------------------------------------------ inputs
+    def input_specs(self, shape: ShapeSpec | str) -> dict[str, jax.ShapeDtypeStruct]:
+        """ShapeDtypeStruct stand-ins for every model input of ``shape``.
+
+        train:   tokens/labels (B, S) — next-token targets.
+        prefill: tokens (B, S) — returns logits for the last position + cache.
+        decode:  tokens (B, 1) + the KV/SSM cache for a context of S tokens
+                 (cache specs come from ``serve.cache_specs``; this returns the
+                 token-side inputs only — the launcher composes the two).
+        Modality stubs: whisper adds precomputed frame embeddings; internvl2
+        adds patch embeddings that occupy the first ``n_img_tokens`` positions.
+        """
+        if isinstance(shape, str):
+            shape = SHAPES_BY_NAME[shape]
+        B, S = shape.global_batch, shape.seq_len
+        i32 = jnp.int32
+        sd = jax.ShapeDtypeStruct
+        out: dict[str, jax.ShapeDtypeStruct] = {}
+        if shape.kind == "train":
+            out["tokens"] = sd((B, S), i32)
+            out["labels"] = sd((B, S), i32)
+        elif shape.kind == "prefill":
+            out["tokens"] = sd((B, S), i32)
+        else:  # decode
+            out["tokens"] = sd((B, 1), i32)
+        if self.family == "audio":
+            out["frames"] = sd((B, self.enc_seq, self.d_model), self.dtype)
+        if self.family == "vlm" and shape.kind != "decode":
+            out["img_embeds"] = sd((B, self.n_img_tokens, self.d_model), self.dtype)
+        return out
+
+    # ------------------------------------------------------------------ sizes
+    def param_count(self) -> int:
+        """Exact parameter count of the built model (embedding included once
+        if tied). Used for MODEL_FLOPS = 6·N·D roofline accounting."""
+        from repro.models import transformer, encdec  # local import, no cycle
+        if self.family == "audio":
+            return encdec.param_count(self)
+        return transformer.param_count(self)
+
+    def active_param_count(self) -> int:
+        """Params touched per token (MoE: shared + top_k experts only)."""
+        from repro.models import transformer, encdec
+        if self.family == "audio":
+            return encdec.param_count(self)
+        return transformer.param_count(self, active_only=True)
+
+
+def reduced(cfg: ModelConfig, **overrides) -> ModelConfig:
+    """A tiny same-family variant for CPU smoke tests."""
+    base = dict(
+        n_layers=min(cfg.n_layers, 4),
+        d_model=128,
+        n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2),
+        d_ff=256,
+        vocab_size=512,
+        head_dim=32,
+        window=min(cfg.window, 64) if cfg.window else 0,
+        chunk=min(cfg.chunk, 64) if cfg.chunk else 0,
+        n_experts=min(cfg.n_experts, 8) if cfg.n_experts else 0,
+        d_expert=64 if cfg.n_experts else 0,
+        n_shared_experts=min(cfg.n_shared_experts, 2),
+        d_shared_expert=64 if cfg.n_shared_experts else 0,
+        ssm_state=min(cfg.ssm_state, 16) if cfg.ssm_state else 0,
+        ssm_headdim=16 if cfg.ssm_state else 64,
+        ssm_chunk=32,
+        shared_attn_every=2 if cfg.shared_attn_every else 0,
+        n_enc_layers=min(cfg.n_enc_layers, 2),
+        enc_seq=32 if cfg.enc_seq else 0,
+        n_img_tokens=8 if cfg.n_img_tokens else 0,
+        vocab_pad_multiple=64,
+        name=cfg.name + "-smoke",
+    )
+    base.update(overrides)
+    return dataclasses.replace(cfg, **base)

@@ -1,0 +1,25 @@
+"""internvl2-26b [vlm] — InternLM2-20B backbone; InternViT frontend STUB.
+
+48L, d_model=6144, 48H (kv=8), d_ff=16384, vocab=92553.
+``input_specs()`` supplies precomputed patch embeddings (B, 256, d_model)
+that occupy the first 256 backbone positions. [arXiv:2404.16821; hf].
+long_500k skipped (full attention).
+"""
+from .base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="internvl2-26b",
+    family="vlm",
+    n_layers=48,
+    d_model=6144,
+    n_heads=48,
+    n_kv_heads=8,
+    d_ff=16384,
+    vocab_size=92553,
+    head_dim=128,
+    rope_theta=1000000.0,
+    n_img_tokens=256,
+    tie_embeddings=False,
+)
+
+SMOKE = reduced(CONFIG)

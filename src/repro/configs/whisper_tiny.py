@@ -1,0 +1,28 @@
+"""whisper-tiny [audio] — encoder-decoder; conv frontend STUB.
+
+4 enc + 4 dec layers, d_model=384, 6H (kv=6), d_ff=1536, vocab=51865.
+``input_specs()`` supplies precomputed frame embeddings (B, 1500, 384).
+[arXiv:2212.04356]. LayerNorm + plain GELU MLP; sinusoidal positions both
+sides (DESIGN.md). long_500k skipped (full attention).
+"""
+from .base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="whisper-tiny",
+    family="audio",
+    n_layers=4,
+    n_enc_layers=4,
+    enc_seq=1500,
+    d_model=384,
+    n_heads=6,
+    n_kv_heads=6,
+    d_ff=1536,
+    vocab_size=51865,
+    head_dim=64,
+    norm_type="ln",
+    mlp_act="gelu_mlp",
+    scale_embed=False,
+    tie_embeddings=True,
+)
+
+SMOKE = reduced(CONFIG)

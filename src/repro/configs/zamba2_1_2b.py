@@ -1,0 +1,29 @@
+"""zamba2-1.2b [hybrid] — Mamba2 trunk + one weight-shared attention block.
+
+38 Mamba2 layers, d_model=2048, shared attn block (32H, kv=32, d_ff=8192)
+applied every 6 Mamba2 layers, vocab 32000, ssm_state=64.
+[arXiv:2411.15242; hf]. Zamba2's per-application LoRA deltas on the shared
+block are simplified to pure weight reuse (DESIGN.md §Arch-applicability).
+"""
+from .base import ModelConfig, reduced
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    n_layers=38,
+    d_model=2048,
+    n_heads=32,
+    n_kv_heads=32,
+    d_ff=8192,
+    vocab_size=32000,
+    head_dim=64,
+    ssm_state=64,
+    ssm_expand=2,
+    ssm_headdim=64,
+    ssm_chunk=128,   # §Perf: halves the (H,Q,Q) dual-form score footprint
+
+    shared_attn_every=6,
+    mlp_act="gelu",
+)
+
+SMOKE = reduced(CONFIG)

@@ -1,0 +1,31 @@
+"""Algorithm selection from the postal model — paper §4 as a runtime policy.
+
+Given (p, p_local, message bytes, machine), evaluate the modeled cost of
+every allgather algorithm and return the cheapest. The train step's
+``grad_sync="auto"`` resolves through this with the TPU parameter set; the
+benchmarks sweep it across the paper's (Lassen/Quartz) parameter sets to
+reproduce Figs. 7–8.
+"""
+from __future__ import annotations
+
+from .cost_model import MACHINES, MODELS, MachineParams
+
+
+def pick_allgather(p: int, p_local: int, nbytes_per_rank: float,
+                   machine: MachineParams | str = "tpu_v5e") -> str:
+    if isinstance(machine, str):
+        machine = MACHINES[machine]
+    if p_local <= 1 or p <= p_local:
+        return "bruck"
+    block = nbytes_per_rank
+    costs = {name: fn(p, p_local, block, machine)
+             for name, fn in MODELS.items()}
+    return min(costs, key=costs.get)
+
+
+def model_costs(p: int, p_local: int, nbytes_per_rank: float,
+                machine: MachineParams | str = "tpu_v5e") -> dict[str, float]:
+    if isinstance(machine, str):
+        machine = MACHINES[machine]
+    return {name: fn(p, p_local, nbytes_per_rank, machine)
+            for name, fn in MODELS.items()}

@@ -1,0 +1,425 @@
+"""The paper's allgather algorithms as JAX collectives (shard_map + ppermute).
+
+Every algorithm here is a *pure function of per-device shards*, usable inside
+``jax.shard_map`` over any subset of mesh axes. Point-to-point MPI sends map
+onto ``jax.lax.ppermute`` (XLA ``collective-permute`` with explicit
+``source_target_pairs``) — one ppermute per communication round. Locality is
+expressed through the (outer_axes, local_axes) split: ``outer`` axes cross the
+expensive boundary (inter-pod DCN), ``local`` axes stay inside it (intra-pod
+ICI). The flat rank over ``outer + local`` is region-major, matching
+``topology.RegionMap``.
+
+Because each algorithm is a composition of linear ops (ppermute / concat /
+roll / slice), JAX autodiff transposes an allgather into the matching
+reduce-scatter with the *reversed schedule* for free — used by the FSDP
+parameter gathering in ``train/``.
+
+Algorithms (same five as ``core/schedules.py``, which is the oracle):
+  bruck_allgather           Algorithm 1  [Bruck et al. '97]
+  ring_allgather            [Chan et al. '07]
+  hierarchical_allgather    master-per-region [Träff '06]
+  multilane_allgather       one lane per local rank [Träff & Hunold '20]
+  locality_bruck_allgather  Algorithm 2 — THE paper's contribution
+
+plus reductions built on them:
+  reduce_scatter            linear transpose of any allgather
+  locality_allreduce        local RS → per-lane outer allreduce → local AG
+"""
+from __future__ import annotations
+
+import functools
+import math
+from typing import Sequence
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+Axes = str | Sequence[str]
+
+
+def _tup(axes: Axes) -> tuple[str, ...]:
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
+def _varying(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Mark ``x`` device-varying over ``axes`` (no-op if already varying).
+
+    shard_map's vma tracking treats unvarying inputs as replicated values;
+    collectives on them transpose into psums. All algorithms here assume a
+    genuinely per-device shard, so we normalize at entry.
+    """
+    missing = tuple(a for a in axes if a not in jax.typeof(x).vma)
+    return lax.pcast(x, missing, to="varying") if missing else x
+
+
+def _size(axes: tuple[str, ...]) -> int:
+    return math.prod(lax.axis_size(a) for a in axes)
+
+
+def _stack_to_tiled(buf: jax.Array, x_shape: tuple[int, ...]) -> jax.Array:
+    """[p, *x_shape] -> concatenation along axis 0 (lax.all_gather tiled=True)."""
+    p = buf.shape[0]
+    if not x_shape:
+        return buf
+    return buf.reshape((p * x_shape[0],) + x_shape[1:])
+
+
+def _out(buf: jax.Array, tiled: bool, x_shape: tuple[int, ...]) -> jax.Array:
+    return _stack_to_tiled(buf, x_shape) if tiled else buf
+
+
+# =============================================================================
+# Algorithm 1 — standard Bruck allgather: log2(p) rounds, doubling buffers.
+# =============================================================================
+def bruck_allgather(x: jax.Array, axes: Axes, *, tiled: bool = False,
+                    assume_varying: bool = False) -> jax.Array:
+    """Bruck allgather over ``axes``. Returns [p, *x.shape] (or tiled concat).
+
+    Round i (distance d=2^i): every rank sends its entire current buffer
+    (first min(d, p-d) blocks) to rank id-d and receives from id+d; a final
+    rotation by ``axis_index`` restores canonical block order.
+
+    assume_varying: skip the vma normalization — required when the gather is
+    *differentiated* inside a ``check_vma=False`` region (the inserted pcast
+    would transpose into an invalid psum); the caller asserts the input is
+    genuinely per-device.
+    """
+    axes = _tup(axes)
+    p = _size(axes)
+    if not assume_varying:
+        x = _varying(x, axes)
+    if p == 1:
+        return _out(x[None], tiled, x.shape)
+    idx = lax.axis_index(axes)
+    with jax.named_scope(f"bruck_ag_p{p}"):
+        buf = x[None]                       # buf[k] = block (idx + k) mod p
+        d = 1
+        while d < p:
+            cnt = min(d, p - d)
+            perm = [(s, (s - d) % p) for s in range(p)]
+            recv = lax.ppermute(buf[:cnt], axes, perm)
+            buf = jnp.concatenate([buf, recv], axis=0)
+            d *= 2
+        buf = jnp.roll(buf, idx, axis=0)    # out[j] = block j
+    return _out(buf, tiled, x.shape)
+
+
+# =============================================================================
+# Ring allgather: p-1 neighbor rounds (bandwidth-optimal, locality-friendly).
+# =============================================================================
+def ring_allgather(x: jax.Array, axes: Axes, *, tiled: bool = False) -> jax.Array:
+    axes = _tup(axes)
+    p = _size(axes)
+    x = _varying(x, axes)
+    if p == 1:
+        return _out(x[None], tiled, x.shape)
+    idx = lax.axis_index(axes)
+    perm = [(s, (s - 1) % p) for s in range(p)]
+    with jax.named_scope(f"ring_ag_p{p}"):
+        def body(cur, _):
+            nxt = lax.ppermute(cur, axes, perm)
+            return nxt, nxt
+
+        _, rest = lax.scan(body, x, None, length=p - 1)
+        buf = jnp.concatenate([x[None], rest], axis=0)  # buf[k] = block idx+k
+        buf = jnp.roll(buf, idx, axis=0)
+    return _out(buf, tiled, x.shape)
+
+
+# =============================================================================
+# Hierarchical allgather [Träff '06]: binomial gather to a master per region,
+# Bruck among masters, binomial broadcast. Non-masters idle during phase 2.
+# =============================================================================
+def hierarchical_allgather(x: jax.Array, outer: Axes, local: Axes, *,
+                           tiled: bool = False) -> jax.Array:
+    outer, local = _tup(outer), _tup(local)
+    r, pl = _size(outer), _size(local)
+    x = _varying(x, outer + local)
+    if pl == 1:
+        return bruck_allgather(x, outer + local, tiled=tiled)
+    R = lax.axis_index(outer)
+    l = lax.axis_index(local)
+    flat = lambda Rg, lg: Rg * pl + lg
+    zeros = lambda shape: jnp.zeros(shape, x.dtype) + x.reshape(-1)[0] * 0
+
+    with jax.named_scope(f"hier_ag_r{r}_pl{pl}"):
+        # --- Phase 1: binomial gather to lane-0 master --------------------------
+        # B[k] = block of lane k of own region (zeros where unknown).
+        B = lax.dynamic_update_slice(
+            zeros((pl,) + x.shape), x[None], (l,) + (0,) * x.ndim)
+        d = 1
+        while d < pl:
+            # lanes with l % 2d == d send their subtree slots [l, l+d) to lane l-d
+            pairs = [(flat(Rg, lg), flat(Rg, lg - d))
+                     for Rg in range(r) for lg in range(d, pl, 2 * d)]
+            payload = lax.dynamic_slice(
+                B, (jnp.minimum(l, pl - d),) + (0,) * x.ndim, (d,) + x.shape)
+            recv = lax.ppermute(payload, outer + local, pairs)
+            is_recv = (l % (2 * d) == 0) & (l + d < pl)
+            upd = lax.dynamic_update_slice(
+                B, recv, (jnp.minimum(l + d, pl - d),) + (0,) * x.ndim)
+            B = jnp.where(is_recv, upd, B)
+            d *= 2
+
+        # --- Phase 2: Bruck allgather among masters (lane 0) over regions -------
+        buf = B[None]                       # [chunks, pl, ...]; chunk k = region R+k
+        d = 1
+        while d < r:
+            cnt = min(d, r - d)
+            pairs = [(flat(Rg, 0), flat((Rg - d) % r, 0)) for Rg in range(r)]
+            recv = lax.ppermute(buf[:cnt], outer + local, pairs)
+            buf = jnp.concatenate([buf, recv], axis=0)
+            d *= 2
+        buf = jnp.roll(buf, R, axis=0)      # canonical region order (masters)
+
+        # --- Phase 3: binomial broadcast of the full buffer within each region --
+        have = 1
+        while have < pl:
+            pairs = [(flat(Rg, lg), flat(Rg, lg + have))
+                     for Rg in range(r) for lg in range(min(have, pl - have))]
+            recv = lax.ppermute(buf, outer + local, pairs)
+            is_recv = (l >= have) & (l < 2 * have)
+            buf = jnp.where(is_recv, recv, buf)
+            have *= 2
+
+        buf = buf.reshape((r * pl,) + x.shape)
+    return _out(buf, tiled, x.shape)
+
+
+# =============================================================================
+# Multi-lane allgather [Träff & Hunold '20]: every lane runs a Bruck over the
+# regions concurrently (its own block only), then one local allgather combines
+# the lanes. Non-local bytes drop by p_local; message count unchanged.
+# =============================================================================
+def multilane_allgather(x: jax.Array, outer: Axes, local: Axes, *,
+                        tiled: bool = False) -> jax.Array:
+    outer, local = _tup(outer), _tup(local)
+    r, pl = _size(outer), _size(local)
+    x = _varying(x, outer + local)
+    with jax.named_scope(f"multilane_ag_r{r}_pl{pl}"):
+        lane = bruck_allgather(x, outer)      # [r, ...] canonical region order
+        allb = bruck_allgather(lane, local)   # [pl, r, ...] lane-major
+        buf = jnp.moveaxis(allb, 1, 0)        # [r, pl, ...] region-major
+        buf = buf.reshape((r * pl,) + x.shape)
+    return _out(buf, tiled, x.shape)
+
+
+# =============================================================================
+# Algorithm 2 — locality-aware Bruck allgather (the paper's contribution).
+# =============================================================================
+def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
+                             tiled: bool = False) -> jax.Array:
+    """Paper Algorithm 2 over mesh axes.
+
+    1. Local Bruck allgather inside each region (``local`` axes).
+    2. ceil(log_{p_ℓ}(r)) non-local rounds: with ``group`` regions' data held,
+       lane ℓ ∈ [1, active) sends its ENTIRE buffer to region R - ℓ·group
+       (same lane) and receives from R + ℓ·group — one non-local message per
+       rank per round, each pair of regions exchanging disjoint data. Lane 0
+       stays idle (paper §3) and re-contributes its own buffer.
+    3. A local allgather of the received buffers redistributes them in-region.
+
+    SPMD adaptation (recorded in DESIGN.md): where the paper uses
+    MPI_Allgatherv for non-power region counts, we run the uniform local
+    allgather and statically discard the `pl - active` empty units — identical
+    non-local traffic, slightly padded local traffic.
+    """
+    outer, local = _tup(outer), _tup(local)
+    r, pl = _size(outer), _size(local)
+    x = _varying(x, outer + local)
+    if pl == 1:
+        return bruck_allgather(x, outer + local, tiled=tiled)
+    R = lax.axis_index(outer)
+    l = lax.axis_index(local)
+    flat = lambda Rg, lg: Rg * pl + lg
+
+    with jax.named_scope(f"loc_bruck_ag_r{r}_pl{pl}"):
+        # Step 0 (Alg. 2 line 1): local allgather of initial values.
+        buf = bruck_allgather(x, local)       # [pl, ...] canonical lane order
+        # Invariant: buf = region chunks [R, R+group) (mod r), chunk = pl blocks.
+        group = 1
+        step = 0
+        while group < r:
+            n_groups = -(-r // group)         # distinct groups remaining
+            active = min(pl, n_groups)
+            pairs = [(flat(Rg, lg), flat((Rg - lg * group) % r, lg))
+                     for Rg in range(r) for lg in range(1, active)]
+            with jax.named_scope(f"nonlocal_step{step}"):
+                recv = lax.ppermute(buf, outer + local, pairs)
+            # Lane 0 re-contributes its current buffer; lanes >= active carry
+            # no new data (their unit is discarded below).
+            unit = jnp.where(l == 0, buf, recv)
+            with jax.named_scope(f"redistribute_step{step}"):
+                stacked = bruck_allgather(unit, local)  # [pl, group*pl, ...]
+            stacked = stacked[:active]
+            buf = stacked.reshape((active * group * pl,) + x.shape)
+            group *= active
+            step += 1
+
+        if group > r:                          # non-power wrap: drop duplicates
+            buf = buf[: r * pl]
+        chunks = buf.reshape((r, pl) + x.shape)
+        chunks = jnp.roll(chunks, R, axis=0)   # canonical region order
+        buf = chunks.reshape((r * pl,) + x.shape)
+    return _out(buf, tiled, x.shape)
+
+
+# =============================================================================
+# Dispatcher
+# =============================================================================
+ALLGATHERS = {
+    "bruck": lambda x, outer, local, tiled: bruck_allgather(
+        x, _tup(outer) + _tup(local), tiled=tiled),
+    "ring": lambda x, outer, local, tiled: ring_allgather(
+        x, _tup(outer) + _tup(local), tiled=tiled),
+    "hierarchical": lambda x, outer, local, tiled: hierarchical_allgather(
+        x, outer, local, tiled=tiled),
+    "multilane": lambda x, outer, local, tiled: multilane_allgather(
+        x, outer, local, tiled=tiled),
+    "locality_bruck": lambda x, outer, local, tiled: locality_bruck_allgather(
+        x, outer, local, tiled=tiled),
+    "xla": lambda x, outer, local, tiled: lax.all_gather(
+        x, _tup(outer) + _tup(local), tiled=tiled),
+}
+
+
+def allgather(x: jax.Array, outer: Axes, local: Axes = (), *,
+              algorithm: str = "locality_bruck", tiled: bool = False) -> jax.Array:
+    """Gather ``x`` shards over ``outer + local`` mesh axes (region-major)."""
+    if not _tup(local):
+        algorithm = "bruck" if algorithm in ("locality_bruck", "hierarchical",
+                                             "multilane") else algorithm
+    return ALLGATHERS[algorithm](x, outer, local, tiled)
+
+
+# =============================================================================
+# Reductions
+# =============================================================================
+def reduce_scatter(y: jax.Array, outer: Axes, local: Axes = (), *,
+                   algorithm: str = "locality_bruck") -> jax.Array:
+    """Sum-reduce-scatter: linear transpose of the chosen allgather.
+
+    ``y`` has leading dim divisible by p; rank i ends with the i-th tile of
+    the sum over ranks. The transposed schedule communicates exactly the same
+    edges as the forward allgather, reversed — so the locality structure (and
+    the non-local message/byte counts of paper Eq. 4) carry over.
+    """
+    outer, local = _tup(outer), _tup(local)
+    p = _size(outer + local)
+    assert y.shape[0] % p == 0, f"leading dim {y.shape[0]} not divisible by {p}"
+    x_shape = (y.shape[0] // p,) + y.shape[1:]
+    y = _varying(y, outer + local)
+
+    def ag(x):
+        return allgather(x, outer, local, algorithm=algorithm, tiled=True)
+
+    # vjp at a *device-varying* zero primal: an unvarying primal would make
+    # the vma-aware transpose psum the cotangent (replicated-input semantics).
+    primal = jnp.zeros(x_shape, y.dtype) + y.reshape(-1)[0] * 0
+    _, vjp = jax.vjp(ag, primal)
+    (out,) = vjp(y)
+    return out
+
+
+def _rhd_reduce_scatter(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Recursive-halving reduce-scatter over ``axes`` (XOR partners).
+
+    Leading dim must be divisible by p. Rank i ends with tile i of the sum.
+    log2(p) rounds; round k exchanges 1/2^{k+1} of the buffer.
+    """
+    p = _size(axes)
+    idx = lax.axis_index(axes)
+    assert x.shape[0] % p == 0
+    assert p & (p - 1) == 0, "recursive halving needs power-of-two size"
+    buf = x
+    d = p // 2
+    while d >= 1:
+        pairs = [(s, s ^ d) for s in range(p)]
+        half = buf.shape[0] // 2
+        bit = (idx & d) != 0
+        # keep the half matching our bit (MSB-first -> final tile index = idx)
+        send_start = jnp.where(bit, 0, half)
+        keep_start = jnp.where(bit, half, 0)
+        starts = lambda s: (s,) + (0,) * (buf.ndim - 1)
+        send = lax.dynamic_slice(buf, starts(send_start), (half,) + buf.shape[1:])
+        keep = lax.dynamic_slice(buf, starts(keep_start), (half,) + buf.shape[1:])
+        recv = lax.ppermute(send, axes, pairs)
+        buf = keep + recv
+        d //= 2
+    return buf
+
+
+def _rd_allreduce(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+    """Recursive-doubling allreduce: log2(p) full-buffer exchanges (latency-opt)."""
+    p = _size(axes)
+    assert p & (p - 1) == 0, "recursive doubling needs power-of-two size"
+    buf = x
+    d = 1
+    while d < p:
+        pairs = [(s, s ^ d) for s in range(p)]
+        buf = buf + lax.ppermute(buf, axes, pairs)
+        d *= 2
+    return buf
+
+
+def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
+                       outer_algorithm: str = "rhd") -> jax.Array:
+    """Locality-aware allreduce (paper's structure applied to reductions).
+
+    local reduce-scatter → per-lane allreduce across regions → local
+    allgather (Bruck). Non-local traffic per rank: 2·log2(r) messages of
+    b/p_ℓ bytes ("rhd"), or log2(r) messages ("rd", latency-optimal), or
+    XLA's choice ("psum") — vs ~2·b bytes for a flat ring allreduce.
+
+    Works on arbitrary-shaped ``x`` (flattens + pads internally).
+    """
+    outer, local = _tup(outer), _tup(local)
+    r, pl = _size(outer), _size(local)
+    x = _varying(x, outer + local)
+    shape = x.shape
+    flat = x.reshape(-1)
+    n = flat.shape[0]
+    pad = (-n) % pl
+    if pad:
+        flat = jnp.pad(flat, (0, pad))
+
+    with jax.named_scope(f"loc_allreduce_r{r}_pl{pl}"):
+        if pl > 1:
+            part = lax.psum_scatter(flat, local, scatter_dimension=0, tiled=True)
+        else:
+            part = flat
+        if r > 1:
+            if outer_algorithm == "rhd":
+                npart = part.shape[0]
+                pad2 = (-npart) % r
+                if pad2:
+                    part = jnp.pad(part, (0, pad2))
+                rs = _rhd_reduce_scatter(part, outer)
+                part = bruck_allgather(rs, outer, tiled=True)
+                if pad2:
+                    part = part[:npart]
+            elif outer_algorithm == "rd":
+                part = _rd_allreduce(part, outer)
+            elif outer_algorithm == "psum":
+                part = lax.psum(part, outer)
+            else:
+                raise ValueError(f"unknown outer_algorithm {outer_algorithm!r}")
+        if pl > 1:
+            full = bruck_allgather(part, local, tiled=True)
+        else:
+            full = part
+    if pad:
+        full = full[:n]
+    return full.reshape(shape)
+
+
+def allreduce(x: jax.Array, outer: Axes, local: Axes = (), *,
+              algorithm: str = "locality", outer_algorithm: str = "rhd") -> jax.Array:
+    """Allreduce dispatcher: 'locality' (paper-structured) or 'xla' (lax.psum)."""
+    outer, local = _tup(outer), _tup(local)
+    if algorithm == "xla" or (not local) or _size(local) == 1:
+        return lax.psum(x, outer + local)
+    if algorithm == "locality":
+        return locality_allreduce(x, outer, local, outer_algorithm=outer_algorithm)
+    raise ValueError(f"unknown allreduce algorithm {algorithm!r}")

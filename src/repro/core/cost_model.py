@@ -1,0 +1,228 @@
+"""Postal cost models — paper §2 Eq. 1 and §3/§4 Eqs. 2-4.
+
+Two uses:
+  1. Reproduce the paper's modeled figures (Figs. 7-8) with the Lassen CPU
+     parameter sets (eager/rendezvous split at 8192 bytes, following [6]).
+  2. Project the same trade-off onto the TPU v5e target (ICI = local,
+     DCN = non-local) to drive ``core/autotune.py``.
+
+All times in seconds, sizes in bytes.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+from .topology import RegionMap, ceil_log
+
+
+@dataclasses.dataclass(frozen=True)
+class LinkParams:
+    """One α/β parameter pair (postal model for a single message class)."""
+
+    alpha: float          # per-message latency [s]
+    beta: float           # per-byte transport cost [s/B]
+
+    def msg_cost(self, nbytes: float) -> float:
+        return self.alpha + self.beta * nbytes
+
+
+@dataclasses.dataclass(frozen=True)
+class ProtocolParams:
+    """Eager/rendezvous split (paper §4: >= 8192 bytes uses rendezvous)."""
+
+    eager: LinkParams
+    rendezvous: LinkParams
+    eager_limit: int = 8192
+
+    def msg_cost(self, nbytes: float) -> float:
+        p = self.rendezvous if nbytes >= self.eager_limit else self.eager
+        return p.msg_cost(nbytes)
+
+
+@dataclasses.dataclass(frozen=True)
+class MachineParams:
+    """Local + non-local message classes for one machine (paper Eq. 2)."""
+
+    name: str
+    local: ProtocolParams       # α_ℓ, β_ℓ
+    nonlocal_: ProtocolParams   # α, β
+
+    def cost(self, *, n_local: int, s_local: float, n_nonlocal: int,
+             s_nonlocal: float) -> float:
+        """Eq. 2 with per-class mean message size (n messages, s total bytes)."""
+        t = 0.0
+        if n_local:
+            t += n_local * self.local.msg_cost(s_local / n_local)
+        if n_nonlocal:
+            t += n_nonlocal * self.nonlocal_.msg_cost(s_nonlocal / n_nonlocal)
+        return t
+
+
+def _p(alpha_us: float, bw_gbs: float) -> LinkParams:
+    return LinkParams(alpha=alpha_us * 1e-6, beta=1.0 / (bw_gbs * 1e9))
+
+
+# ---------------------------------------------------------------------------
+# Parameter sets.
+#
+# LASSEN values approximate the intra-socket / inter-node CPU ping-pong fits
+# of Bienz et al. 2021 [6] (paper Fig. 3): sub-µs eager latency through cache
+# within a socket vs multi-µs injection over EDR InfiniBand.
+# QUARTZ (Intel Xeon E5, Omni-Path) treats the node as the region.
+# TPU_V5E maps local→ICI (intra-pod) and non-local→DCN (inter-pod); α from
+# typical collective-permute launch overheads, β from 50 GB/s/link ICI and
+# ~25 GB/s effective per-chip DCN share.
+# ---------------------------------------------------------------------------
+LASSEN = MachineParams(
+    name="lassen",
+    local=ProtocolParams(eager=_p(0.45, 20.0), rendezvous=_p(1.3, 38.0)),
+    nonlocal_=ProtocolParams(eager=_p(1.8, 5.0), rendezvous=_p(5.2, 11.5)),
+)
+
+QUARTZ = MachineParams(
+    name="quartz",
+    local=ProtocolParams(eager=_p(0.6, 10.0), rendezvous=_p(1.6, 16.0)),
+    nonlocal_=ProtocolParams(eager=_p(1.5, 4.0), rendezvous=_p(4.1, 10.0)),
+)
+
+TPU_V5E = MachineParams(
+    name="tpu_v5e",
+    local=ProtocolParams(eager=_p(1.0, 50.0), rendezvous=_p(1.0, 50.0)),
+    nonlocal_=ProtocolParams(eager=_p(10.0, 25.0), rendezvous=_p(10.0, 25.0)),
+)
+
+MACHINES = {m.name: m for m in (LASSEN, QUARTZ, TPU_V5E)}
+
+
+# ---------------------------------------------------------------------------
+# Closed forms — paper Eqs. 3 and 4.
+# ---------------------------------------------------------------------------
+def bruck_model(p: int, block_bytes: float, m: MachineParams) -> float:
+    """Eq. 3: T = log2(p)·α + (b-1)·β  (all traffic non-local, worst rank)."""
+    n = ceil_log(2, p)
+    b = block_bytes * p
+    s = b - block_bytes / max(p, 1)  # (p-1)/p · b == "b - 1 value" in the paper
+    if n == 0:
+        return 0.0
+    return m.cost(n_local=0, s_local=0.0, n_nonlocal=n, s_nonlocal=s)
+
+
+def locality_bruck_model(p: int, p_local: int, block_bytes: float,
+                         m: MachineParams) -> float:
+    """Eq. 4: T = log_{p_ℓ}(r)·α + (b/p_ℓ)·β + (log_{p_ℓ}(r)+1)·α_ℓ·log2(p_ℓ)
+                 + (b-1)·β_ℓ.
+
+    The paper's Eq. 4 counts one α_ℓ per *local allgather phase*; each local
+    phase is itself a Bruck over p_ℓ ranks, i.e. log2(p_ℓ) messages. We keep
+    the per-message accounting (matching the measured implementation); with
+    log2(p_ℓ) = 1 both reduce to the paper's form.
+    """
+    region = RegionMap(p=p, p_local=p_local)
+    r = region.n_regions
+
+    # Simulate the (group, active) round sequence exactly — for r a power of
+    # p_ℓ this reduces to the paper's closed form (non-local bytes ≈ b/p_ℓ,
+    # local bytes = b − 1); for other region counts the final round has only
+    # ``active`` distinct peer groups, which the closed form over-counts.
+    n_nl = 0
+    s_nl = 0.0
+    s_l = block_bytes * (p_local - 1)            # initial local allgather
+    n_l = ceil_log(2, p_local)
+    group = 1
+    while group < r:
+        n_groups = -(-r // group)
+        active = min(p_local, n_groups)
+        n_nl += 1
+        s_nl += block_bytes * group * p_local            # entire buffer
+        # redistribution: (active-1) new chunks of group·p_ℓ blocks each
+        s_l += block_bytes * (active - 1) * group * p_local
+        n_l += ceil_log(2, p_local)
+        group *= active
+
+    return m.cost(n_local=n_l, s_local=s_l, n_nonlocal=n_nl, s_nonlocal=s_nl)
+
+
+def hierarchical_model(p: int, p_local: int, block_bytes: float,
+                       m: MachineParams) -> float:
+    """Master-per-region gather → Bruck among masters → broadcast [Träff'06]."""
+    region = RegionMap(p=p, p_local=p_local)
+    r = region.n_regions
+    b = block_bytes * p
+    lg_l = ceil_log(2, p_local)
+    lg_r = ceil_log(2, r)
+    # Master rank dominates: it does the non-local Bruck over region blocks.
+    s_nl = block_bytes * p_local * max(r - 1, 0)
+    # Master also receives the gather and sends the bcast (full buffer).
+    s_l = block_bytes * p_local + b * lg_l  # gather in + bcast out (binomial)
+    return m.cost(n_local=2 * lg_l, s_local=s_l, n_nonlocal=lg_r, s_nonlocal=s_nl)
+
+
+def multilane_model(p: int, p_local: int, block_bytes: float,
+                    m: MachineParams) -> float:
+    """One lane per local rank [Träff & Hunold'20]: lane Bruck then local AG."""
+    region = RegionMap(p=p, p_local=p_local)
+    r = region.n_regions
+    lg_r = ceil_log(2, r)
+    lg_l = ceil_log(2, p_local)
+    s_nl = block_bytes * max(r - 1, 0)            # each lane moves its own block
+    s_l = block_bytes * r * max(p_local - 1, 0)   # local combine of all lanes
+    return m.cost(n_local=lg_l, s_local=s_l, n_nonlocal=lg_r, s_nonlocal=s_nl)
+
+
+def ring_model(p: int, block_bytes: float, m: MachineParams,
+               p_local: int | None = None) -> float:
+    """Ring: p-1 neighbor messages; with regions, only the region-boundary
+    crossings are non-local (p_ℓ-1 of every p_ℓ steps stay local)."""
+    if p <= 1:
+        return 0.0
+    if p_local:
+        region = RegionMap(p=p, p_local=p_local)
+        n_nl = region.n_regions if region.n_regions > 1 else 0
+        n_l = (p - 1) - n_nl
+    else:
+        n_nl, n_l = p - 1, 0
+    return m.cost(n_local=n_l, s_local=block_bytes * n_l,
+                  n_nonlocal=n_nl, s_nonlocal=block_bytes * n_nl)
+
+
+MODELS = {
+    "bruck": lambda p, pl, bb, m: bruck_model(p, bb, m),
+    "ring": lambda p, pl, bb, m: ring_model(p, bb, m, pl),
+    "hierarchical": hierarchical_model,
+    "multilane": multilane_model,
+    "locality_bruck": locality_bruck_model,
+}
+
+
+def schedule_cost(schedule, m: MachineParams, block_bytes: float,
+                  region: RegionMap | None = None, *,
+                  mode: str = "round") -> float:
+    """Evaluate a generated ``Schedule`` under machine ``m``.
+
+    mode="postal": paper Eq. 2 on the worst single rank's aggregate counts.
+    mode="round":  synchronous rounds; each round costs the max over ranks of
+                   its per-rank send cost (closer to measured behaviour).
+    """
+    if mode == "postal":
+        best = 0.0
+        for (n_l, s_l, n_nl, s_nl) in schedule.per_rank_stats(region).values():
+            t = m.cost(n_local=n_l, s_local=s_l * block_bytes,
+                       n_nonlocal=n_nl, s_nonlocal=s_nl * block_bytes)
+            best = max(best, t)
+        return best
+
+    reg = region or schedule.region
+    total = 0.0
+    for rnd in schedule.rounds:
+        worst = 0.0
+        per_rank: dict[int, float] = {}
+        for s in rnd.sends:
+            local = reg.is_local(s.src, s.dst) if reg else False
+            proto = m.local if local else m.nonlocal_
+            per_rank[s.src] = per_rank.get(s.src, 0.0) + proto.msg_cost(
+                len(s.blocks) * block_bytes)
+        if per_rank:
+            worst = max(per_rank.values())
+        total += worst
+    return total

@@ -1,0 +1,348 @@
+"""Allgather schedule generators — the paper's algorithms in pure python.
+
+Each generator *executes* its algorithm over an abstract network and returns
+the complete schedule (every point-to-point send of every round) plus the
+final buffer contents of every rank. These serve three roles:
+
+  1. Correctness oracle for the JAX/shard_map implementations
+     (``core/collectives.py``) — same math, independent code.
+  2. Input to the postal cost model (``core/cost_model.py``) — the paper's
+     Eq. 2 evaluated on *actual* per-rank message/byte counts.
+  3. Reproduction of the paper's §4 closed forms (tests assert them).
+
+Algorithms:
+  * ``bruck``            — Algorithm 1 (standard Bruck) [Bruck et al. '97]
+  * ``ring``             — ring allgather [Chan et al. '07]
+  * ``hierarchical``     — master-per-region gather/allgather/bcast [Träff '06]
+  * ``multilane``        — one lane per local rank [Träff & Hunold '20]
+  * ``locality_bruck``   — Algorithm 2, THE paper's contribution
+
+A "block" is one rank's initial contribution (m/p values). Buffers are lists
+of *origin rank ids* in canonical receive order; byte counts are in block
+units (multiply by block_bytes for real sizes).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+from .topology import RegionMap, ceil_log
+
+
+@dataclasses.dataclass(frozen=True)
+class Send:
+    src: int
+    dst: int
+    blocks: tuple[int, ...]   # origin ids moved by this message
+
+
+@dataclasses.dataclass(frozen=True)
+class Round:
+    sends: tuple[Send, ...]
+    phase: str                # human-readable phase tag
+
+
+@dataclasses.dataclass
+class Schedule:
+    p: int
+    rounds: list[Round]
+    buffers: list[list[int]]  # final buffer (origin ids, canonical order) per rank
+    algorithm: str
+    region: RegionMap | None = None
+
+    # ---- derived stats (paper §4 terms) ------------------------------------
+    def per_rank_stats(self, region: RegionMap | None = None):
+        """Returns dict rank -> (n_local, s_local, n_nonlocal, s_nonlocal).
+
+        n = message count, s = blocks sent, split by locality. With no region
+        map everything is counted non-local (flat network, paper Eq. 1).
+        """
+        region = region or self.region
+        stats = {r: [0, 0, 0, 0] for r in range(self.p)}
+        for rnd in self.rounds:
+            for s in rnd.sends:
+                local = region.is_local(s.src, s.dst) if region else False
+                k = 0 if local else 2
+                stats[s.src][k] += 1
+                stats[s.src][k + 1] += len(s.blocks)
+        return {r: tuple(v) for r, v in stats.items()}
+
+    def max_nonlocal_msgs(self, region: RegionMap | None = None) -> int:
+        return max(v[2] for v in self.per_rank_stats(region).values())
+
+    def max_nonlocal_blocks(self, region: RegionMap | None = None) -> int:
+        return max(v[3] for v in self.per_rank_stats(region).values())
+
+    def n_rounds(self) -> int:
+        return len(self.rounds)
+
+    def validate(self) -> None:
+        """Every rank must end with every block exactly once, canonical order."""
+        want = list(range(self.p))
+        for r, buf in enumerate(self.buffers):
+            if sorted(set(buf)) != want:
+                missing = set(want) - set(buf)
+                raise AssertionError(
+                    f"{self.algorithm}: rank {r} buffer incomplete, missing {sorted(missing)[:8]}")
+            if buf != want:
+                raise AssertionError(
+                    f"{self.algorithm}: rank {r} buffer not canonical: {buf[:8]}...")
+
+
+def _exchange(bufs: list[list[int]], sends: list[Send]) -> None:
+    """Apply one round of sends simultaneously (MPI_Isend/Irecv semantics)."""
+    incoming: dict[int, list[int]] = {}
+    for s in sends:
+        incoming.setdefault(s.dst, []).extend(s.blocks)
+    for dst, blocks in incoming.items():
+        seen = set(bufs[dst])
+        bufs[dst].extend(b for b in blocks if b not in seen)
+
+
+# =============================================================================
+# Algorithm 1 — standard Bruck allgather
+# =============================================================================
+def bruck(p: int, region: RegionMap | None = None) -> Schedule:
+    bufs = [[r] for r in range(p)]
+    rounds: list[Round] = []
+    d = 1
+    step = 0
+    while d < p:
+        cnt = min(d, p - d)
+        sends = tuple(
+            Send(src=r, dst=(r - d) % p, blocks=tuple(bufs[r][:cnt])) for r in range(p))
+        _exchange(bufs, list(sends))
+        rounds.append(Round(sends=sends, phase=f"bruck-step{step}"))
+        d *= 2
+        step += 1
+    # final rotation: bruck leaves rank r with [r, r+1, ..., r+p-1] (mod p)
+    bufs = [sorted(buf) for buf in bufs]
+    return Schedule(p=p, rounds=rounds, buffers=bufs, algorithm="bruck", region=region)
+
+
+# =============================================================================
+# Ring allgather
+# =============================================================================
+def ring(p: int, region: RegionMap | None = None) -> Schedule:
+    bufs = [[r] for r in range(p)]
+    last = list(range(p))  # most recently received block per rank
+    rounds: list[Round] = []
+    for step in range(p - 1):
+        sends = tuple(Send(src=r, dst=(r - 1) % p, blocks=(last[r],)) for r in range(p))
+        new_last = [last[(r + 1) % p] for r in range(p)]
+        _exchange(bufs, list(sends))
+        last = new_last
+        rounds.append(Round(sends=sends, phase=f"ring-step{step}"))
+    bufs = [sorted(buf) for buf in bufs]
+    return Schedule(p=p, rounds=rounds, buffers=bufs, algorithm="ring", region=region)
+
+
+# =============================================================================
+# Hierarchical allgather [Träff '06]: gather -> master allgather -> broadcast
+# =============================================================================
+def hierarchical(p: int, p_local: int) -> Schedule:
+    region = RegionMap(p=p, p_local=p_local)
+    pl, r = p_local, region.n_regions
+    bufs = [[rank] for rank in range(p)]
+    rounds: list[Round] = []
+
+    # Phase 1: binomial-tree gather to master (local rank 0) in each region.
+    d = 1
+    while d < pl:
+        sends = []
+        for rank in range(p):
+            l = region.local_rank_of(rank)
+            if l % (2 * d) == d:
+                sends.append(Send(src=rank, dst=rank - d, blocks=tuple(bufs[rank])))
+        _exchange(bufs, sends)
+        rounds.append(Round(sends=tuple(sends), phase=f"hier-gather-d{d}"))
+        d *= 2
+
+    # Phase 2: Bruck allgather among masters only.
+    d = 1
+    step = 0
+    while d < r:
+        cnt = min(d, r - d)
+        sends = []
+        for R in range(r):
+            src = region.rank_of(R, 0)
+            dst = region.rank_of((R - d) % r, 0)
+            # master sends its first cnt *region-blocks* (cnt * pl origin blocks)
+            sends.append(Send(src=src, dst=dst, blocks=tuple(bufs[src][: cnt * pl])))
+        _exchange(bufs, sends)
+        rounds.append(Round(sends=tuple(sends), phase=f"hier-bruck-step{step}"))
+        d *= 2
+        step += 1
+
+    # Phase 3: binomial broadcast from master within each region.
+    d = 1
+    while d < pl:
+        sends = []
+        for rank in range(p):
+            l = region.local_rank_of(rank)
+            if l < d and l + d < pl:
+                sends.append(Send(src=rank, dst=rank + d, blocks=tuple(bufs[rank])))
+        _exchange(bufs, sends)
+        rounds.append(Round(sends=tuple(sends), phase=f"hier-bcast-d{d}"))
+        d *= 2
+
+    bufs = [sorted(buf) for buf in bufs]
+    return Schedule(p=p, rounds=rounds, buffers=bufs, algorithm="hierarchical", region=region)
+
+
+# =============================================================================
+# Multi-lane allgather [Träff & Hunold '20]
+# =============================================================================
+def multilane(p: int, p_local: int) -> Schedule:
+    region = RegionMap(p=p, p_local=p_local)
+    pl, r = p_local, region.n_regions
+    bufs = [[rank] for rank in range(p)]
+    rounds: list[Round] = []
+
+    # Phase 1: per-lane Bruck over regions (all lanes concurrently; each lane
+    # carries only its own block -> non-local bytes reduced by p_local).
+    d = 1
+    step = 0
+    while d < r:
+        cnt = min(d, r - d)
+        sends = []
+        for rank in range(p):
+            R, l = region.region_of(rank), region.local_rank_of(rank)
+            dst = region.rank_of((R - d) % r, l)
+            sends.append(Send(src=rank, dst=dst, blocks=tuple(bufs[rank][:cnt])))
+        _exchange(bufs, sends)
+        rounds.append(Round(sends=tuple(sends), phase=f"lane-bruck-step{step}"))
+        d *= 2
+        step += 1
+
+    # Phase 2: local Bruck allgather combining the lanes.
+    d = 1
+    step = 0
+    while d < pl:
+        cnt = min(d, pl - d)
+        sends = []
+        for rank in range(p):
+            R, l = region.region_of(rank), region.local_rank_of(rank)
+            dst = region.rank_of(R, (l - d) % pl)
+            sends.append(Send(src=rank, dst=dst, blocks=tuple(bufs[rank][: cnt * r])))
+        _exchange(bufs, sends)
+        rounds.append(Round(sends=tuple(sends), phase=f"lane-local-step{step}"))
+        d *= 2
+        step += 1
+
+    bufs = [sorted(buf) for buf in bufs]
+    return Schedule(p=p, rounds=rounds, buffers=bufs, algorithm="multilane", region=region)
+
+
+# =============================================================================
+# Algorithm 2 — locality-aware Bruck allgather (the paper's contribution)
+# =============================================================================
+def _local_unit_bruck(bufs, region: RegionMap, units: dict[int, tuple[int, ...]],
+                      phase: str, rounds: list[Round], contributors: int) -> None:
+    """Local allgather of per-rank *units* within each region, in place.
+
+    Faithful to Alg. 2's local step: each contributing rank (local id < g)
+    contributes one unit — its newly received chunk (rank 0 re-contributes its
+    current group chunk, the paper's "contribute the original data for
+    simplicity"). A Bruck allgather runs among the g contributors on whole
+    units; a binomial broadcast then fills the idle ranks (the paper's
+    MPI_Allgatherv case for non-power region counts).
+    """
+    pl = region.p_local
+    g = contributors
+    # Bruck over units among contributors.
+    unit_bufs = {rank: [units[rank]] for rank in units}
+    d = 1
+    while d < g:
+        cnt = min(d, g - d)
+        sends = []
+        moved: list[tuple[int, list[tuple[int, ...]]]] = []
+        for rank in range(region.p):
+            R, l = region.region_of(rank), region.local_rank_of(rank)
+            if l >= g:
+                continue
+            dst = region.rank_of(R, (l - d) % g)
+            payload = unit_bufs[rank][:cnt]
+            sends.append(Send(src=rank, dst=dst,
+                              blocks=tuple(b for u in payload for b in u)))
+            moved.append((dst, payload))
+        for dst, payload in moved:
+            unit_bufs[dst].extend(payload)
+        _exchange(bufs, sends)
+        rounds.append(Round(sends=tuple(sends), phase=f"{phase}-bruck-d{d}"))
+        d *= 2
+    # Binomial broadcast of the gathered result to idle ranks (g < pl only).
+    have = g
+    while have < pl:
+        sends = []
+        for rank in range(region.p):
+            R, l = region.region_of(rank), region.local_rank_of(rank)
+            if l < have and l + have < pl:
+                blocks = tuple(b for u in unit_bufs[region.rank_of(R, l % g)] for b in u)
+                sends.append(Send(src=rank, dst=region.rank_of(R, l + have), blocks=blocks))
+        _exchange(bufs, sends)
+        rounds.append(Round(sends=tuple(sends), phase=f"{phase}-bcast-{have}"))
+        have *= 2
+
+
+def locality_bruck(p: int, p_local: int) -> Schedule:
+    """Paper Algorithm 2, generalized to any region count.
+
+    Round i (regions covered so far: ``group``): local rank ℓ exchanges its
+    entire buffer with the region ℓ·group away (global distance ℓ·group·p_ℓ,
+    matching Alg. 2's dist = id_ℓ · p_ℓ^{i+1} when r is a power of p_ℓ).
+    Local rank 0 is idle non-locally (paper §3). A local allgather then
+    redistributes the received group buffers inside each region.
+    """
+    region = RegionMap(p=p, p_local=p_local)
+    pl, r = p_local, region.n_regions
+    bufs = [[rank] for rank in range(p)]
+    rounds: list[Round] = []
+
+    # Step 0: local Bruck allgather of initial values (Alg. 2 line 1).
+    init_units = {rank: (rank,) for rank in range(p)}
+    _local_unit_bruck(bufs, region, init_units, "loc-init", rounds, contributors=pl)
+
+    group = 1           # regions whose data each rank currently holds
+    i = 0
+    while group < r:
+        n_groups = -(-r // group)                  # ceil: groups still distinct
+        active = min(pl, n_groups)                 # offsets 0..active-1 exist
+        # Non-local exchange: one message per rank with local id 1..active-1.
+        # Each sends its ENTIRE buffer (Alg. 2: size = n * p_ℓ^{i+1}).
+        sends = []
+        received: dict[int, tuple[int, ...]] = {}
+        for rank in range(p):
+            R, l = region.region_of(rank), region.local_rank_of(rank)
+            if l == 0 or l >= active:
+                continue  # idle (paper: first process per region idle)
+            dst = region.rank_of((R - l * group) % r, l)
+            sends.append(Send(src=rank, dst=dst, blocks=tuple(bufs[rank])))
+            received[dst] = tuple(bufs[rank])
+        _exchange(bufs, sends)
+        rounds.append(Round(sends=tuple(sends), phase=f"loc-nonlocal-step{i}"))
+        # Local redistribution: contributors' units are the chunks just
+        # received (local rank 0 re-contributes its own group chunk).
+        units = {}
+        for rank in range(p):
+            l = region.local_rank_of(rank)
+            if l == 0:
+                units[rank] = tuple(bufs[rank])
+            elif l < active:
+                units[rank] = received[rank]
+        _local_unit_bruck(bufs, region, units, f"loc-redist{i}", rounds,
+                          contributors=active)
+        group *= active
+        i += 1
+
+    bufs = [sorted(buf) for buf in bufs]
+    return Schedule(p=p, rounds=rounds, buffers=bufs, algorithm="locality_bruck",
+                    region=region)
+
+
+ALGORITHMS = {
+    "bruck": lambda p, pl=None: bruck(p, RegionMap(p, pl) if pl else None),
+    "ring": lambda p, pl=None: ring(p, RegionMap(p, pl) if pl else None),
+    "hierarchical": lambda p, pl: hierarchical(p, pl),
+    "multilane": lambda p, pl: multilane(p, pl),
+    "locality_bruck": lambda p, pl: locality_bruck(p, pl),
+}

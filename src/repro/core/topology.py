@@ -1,0 +1,91 @@
+"""Topology / region abstractions for locality-aware collectives.
+
+A *region* (paper §2.1) is a set of ranks within which communication is cheap
+(intra-node / intra-socket on MPI clusters; intra-pod ICI on multi-pod TPU).
+Ranks are numbered region-major: global rank = region * p_local + local_rank,
+matching row-major enumeration of a ("pod", ...) JAX mesh axis tuple.
+"""
+from __future__ import annotations
+
+import dataclasses
+import math
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class RegionMap:
+    """Maps flat ranks <-> (region, local_rank) for a two-level hierarchy."""
+
+    p: int          # total ranks
+    p_local: int    # ranks per region
+
+    def __post_init__(self):
+        if self.p % self.p_local != 0:
+            raise ValueError(f"p={self.p} not divisible by p_local={self.p_local}")
+
+    @property
+    def n_regions(self) -> int:
+        return self.p // self.p_local
+
+    def region_of(self, rank: int) -> int:
+        return rank // self.p_local
+
+    def local_rank_of(self, rank: int) -> int:
+        return rank % self.p_local
+
+    def rank_of(self, region: int, local_rank: int) -> int:
+        return (region % self.n_regions) * self.p_local + (local_rank % self.p_local)
+
+    def is_local(self, src: int, dst: int) -> bool:
+        return self.region_of(src) == self.region_of(dst)
+
+
+def ceil_log(base: int, x: int) -> int:
+    """ceil(log_base(x)) computed exactly with integers."""
+    if x <= 1:
+        return 0
+    steps, cover = 0, 1
+    while cover < x:
+        cover *= base
+        steps += 1
+    return steps
+
+
+def is_power_of(base: int, x: int) -> bool:
+    if x < 1:
+        return False
+    while x % base == 0:
+        x //= base
+    return x == 1
+
+
+def mesh_region_map(mesh, outer_axes: tuple[str, ...], local_axes: tuple[str, ...]) -> RegionMap:
+    """RegionMap for a shard_map over ``outer_axes + local_axes`` of ``mesh``.
+
+    jax enumerates a tuple of axis names row-major (first axis slowest), so the
+    flat rank over (outer, local) is outer_idx * local_size + local_idx —
+    exactly the region-major numbering RegionMap assumes.
+    """
+    sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    p_outer = math.prod(sizes[a] for a in outer_axes) if outer_axes else 1
+    p_local = math.prod(sizes[a] for a in local_axes)
+    return RegionMap(p=p_outer * p_local, p_local=p_local)
+
+
+def device_pod_map(mesh, pod_axes: tuple[str, ...]) -> dict[int, int]:
+    """device.id -> pod index, for classifying HLO collective-permute edges.
+
+    ``pod_axes`` are the mesh axes whose product enumerates pods (usually
+    ("pod",)). Devices within one pod share ICI; edges between pods are DCN.
+    """
+    axis_names = list(mesh.axis_names)
+    dev_array = np.asarray(mesh.devices)
+    pod_dims = [axis_names.index(a) for a in pod_axes]
+    out: dict[int, int] = {}
+    for idx in np.ndindex(*dev_array.shape):
+        pod = 0
+        for d in pod_dims:
+            pod = pod * dev_array.shape[d] + idx[d]
+        out[dev_array[idx].id] = pod
+    return out

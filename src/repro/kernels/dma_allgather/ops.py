@@ -1,0 +1,36 @@
+"""Public op: locality-aware DMA allgather over mesh axes.
+
+Usage (inside shard_map over ``outer + local`` axes)::
+
+    out = dma_locality_allgather(x, outer=("pod",), local=("data",), mesh=mesh)
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from .dma_ag import build_schedule, dma_allgather
+
+
+def _sizes(mesh, axes):
+    names = list(mesh.axis_names)
+    return tuple(mesh.devices.shape[names.index(a)] for a in axes)
+
+
+def dma_locality_allgather(x, outer, local, mesh, *, algorithm="locality_bruck",
+                           interpret=None):
+    outer = (outer,) if isinstance(outer, str) else tuple(outer)
+    local = (local,) if isinstance(local, str) else tuple(local)
+    axes = outer + local
+    axis_sizes = _sizes(mesh, axes)
+    p = math.prod(axis_sizes)
+    pl_ = math.prod(_sizes(mesh, local))
+    if algorithm in ("bruck", "ring"):
+        sched = build_schedule(algorithm, p, None)
+    else:
+        sched = build_schedule(algorithm, p, pl_)
+    perm = jnp.asarray(sched.perm)
+    return dma_allgather(x, axes, sched, perm, axis_sizes=axis_sizes,
+                         interpret=interpret)

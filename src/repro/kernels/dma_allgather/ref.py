@@ -1,0 +1,6 @@
+"""Oracle for the DMA allgather: lax.all_gather (canonical order)."""
+from jax import lax
+
+
+def allgather_ref(x, axes):
+    return lax.all_gather(x, axes)

@@ -1,0 +1,10 @@
+"""Public op: Pallas kernel on TPU, interpret mode elsewhere."""
+import jax
+
+from .flash import flash_attention
+from .ref import attention_ref
+
+
+def attention(q, k, v, **kw):
+    on_tpu = jax.default_backend() == "tpu"
+    return flash_attention(q, k, v, interpret=not on_tpu, **kw)

@@ -1,0 +1,10 @@
+"""Public op: Pallas on TPU, interpret-mode Pallas for CPU validation."""
+import jax
+
+from .ref import rmsnorm_ref
+from .rmsnorm import rmsnorm_pallas
+
+
+def rmsnorm(x, scale, *, eps: float = 1e-5):
+    on_tpu = jax.default_backend() == "tpu"
+    return rmsnorm_pallas(x, scale, eps=eps, interpret=not on_tpu)

@@ -1,0 +1,10 @@
+"""Pure-jnp oracle for the RMSNorm kernel."""
+import jax
+import jax.numpy as jnp
+
+
+def rmsnorm_ref(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5) -> jax.Array:
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + scale.astype(jnp.float32))).astype(x.dtype)

@@ -1,0 +1,48 @@
+"""Fused RMSNorm Pallas TPU kernel.
+
+Tiling: rows are processed in blocks of ``block_rows`` (grid dim 0); the full
+feature dim lives in VMEM per block (d ≤ 16k → ≤ 64 KB·block_rows at fp32,
+well inside the ~16 MB VMEM budget). The reduction + rsqrt + scale fuse into
+one VMEM pass instead of the 3 HBM round-trips of the unfused lowering.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _rmsnorm_kernel(x_ref, scale_ref, o_ref, *, eps: float):
+    x = x_ref[...].astype(jnp.float32)
+    var = jnp.mean(x * x, axis=-1, keepdims=True)
+    y = x * jax.lax.rsqrt(var + eps)
+    o_ref[...] = (y * (1.0 + scale_ref[...].astype(jnp.float32))
+                  ).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_rows", "eps", "interpret"))
+def rmsnorm_pallas(x: jax.Array, scale: jax.Array, *, eps: float = 1e-5,
+                   block_rows: int = 256, interpret: bool = False) -> jax.Array:
+    """x: (..., d); scale: (d,). Returns same shape/dtype as x."""
+    shape = x.shape
+    d = shape[-1]
+    rows = 1
+    for s in shape[:-1]:
+        rows *= s
+    x2 = x.reshape(rows, d)
+    br = min(block_rows, rows)
+    if rows % br:
+        br = rows                      # odd row counts: single block
+    grid = (rows // br,)
+    out = pl.pallas_call(
+        functools.partial(_rmsnorm_kernel, eps=eps),
+        grid=grid,
+        in_specs=[pl.BlockSpec((br, d), lambda i: (i, 0)),
+                  pl.BlockSpec((d,), lambda i: (0,))],
+        out_specs=pl.BlockSpec((br, d), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, d), x.dtype),
+        interpret=interpret,
+    )(x2, scale)
+    return out.reshape(shape)

@@ -1,0 +1,10 @@
+"""Public op: Pallas kernel on TPU, interpret mode elsewhere."""
+import jax
+
+from .ref import ssd_ref
+from .ssd import ssd_pallas
+
+
+def ssd(x, dt, A, B, C, *, Q: int = 256):
+    on_tpu = jax.default_backend() == "tpu"
+    return ssd_pallas(x, dt, A, B, C, Q=Q, interpret=not on_tpu)

@@ -1,0 +1,8 @@
+"""Oracle: the model's chunked SSD in full fp32 (matches the kernel's
+VMEM-resident fp32 math; the model's default jnp path uses the bf16 data
+path documented in models/ssm.py)."""
+from repro.models.ssm import ssd_chunked
+
+
+def ssd_ref(x, dt, A, B, C, *, Q: int = 256):
+    return ssd_chunked(x, dt, A, B, C, min(Q, x.shape[1]), precise=True)

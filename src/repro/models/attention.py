@@ -1,0 +1,216 @@
+"""Grouped-query attention with full / sliding-window / chunked-local variants.
+
+Design notes
+------------
+* Long sequences never materialize an S×S score tensor: the query axis is
+  processed in static chunks (python loop → static HLO slices), and each
+  query chunk attends only to the *statically known* valid KV range:
+    - causal full:   kv[0 : (i+1)·c]
+    - sliding window kv[(i+1)·c - c - w : (i+1)·c]
+    - chunked local  kv[floor(i·c / chunk)·chunk : (i+1)·c]
+  This keeps compiled FLOPs at the exact triangular count (no masked waste),
+  which matters because cost_analysis() of the dry-run is our roofline input.
+* Decode attends a single query against the KV cache with position masks.
+* GQA: query heads are grouped over KV heads; softmax in fp32.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import apply_rope, dense_init, rmsnorm, softcap
+
+NEG_INF = -2.0 ** 30  # large-negative for bf16-safe masking (cast later)
+
+
+# ---------------------------------------------------------------------------
+# params
+# ---------------------------------------------------------------------------
+
+def attn_init(rng, cfg) -> dict:
+    D = cfg.head_dim_
+    ks = jax.random.split(rng, 4)
+    p = {
+        "wq": dense_init(ks[0], cfg.d_model, cfg.n_heads * D, cfg.param_dtype),
+        "wk": dense_init(ks[1], cfg.d_model, cfg.n_kv_heads * D, cfg.param_dtype),
+        "wv": dense_init(ks[2], cfg.d_model, cfg.n_kv_heads * D, cfg.param_dtype),
+        "wo": dense_init(ks[3], cfg.n_heads * D, cfg.d_model, cfg.param_dtype),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = {"scale": jnp.zeros((D,), cfg.param_dtype)}
+        p["k_norm"] = {"scale": jnp.zeros((D,), cfg.param_dtype)}
+    return p
+
+
+def attn_param_count(cfg) -> int:
+    D = cfg.head_dim_
+    n = 2 * cfg.d_model * cfg.n_heads * D + 2 * cfg.d_model * cfg.n_kv_heads * D
+    if cfg.qk_norm:
+        n += 2 * D
+    return n
+
+
+# ---------------------------------------------------------------------------
+# core scores for one query chunk against a KV slice
+# ---------------------------------------------------------------------------
+
+def _chunk_attend(q, k, v, q_pos, k_pos, *, causal, window, chunk, cap):
+    """q: (B,Cq,H,D) k/v: (B,L,KV,D); positions are (Cq,)/(L,) int arrays.
+
+    Returns (B,Cq,H,D). Masks: causal (q>=k), window (q-k < w), chunked-local
+    (same chunk). fp32 softmax.
+    """
+    B, Cq, H, D = q.shape
+    KV = k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, Cq, KV, G, D)
+    s = jnp.einsum("bikgd,bjkd->bkgij", qg, k).astype(jnp.float32)
+    s = s * (D ** -0.5)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    mask = jnp.ones((Cq, k.shape[1]), bool)
+    dq = q_pos[:, None]
+    dk = k_pos[None, :]
+    if causal:
+        mask &= dq >= dk
+    if window:
+        mask &= (dq - dk) < window
+    if chunk:
+        mask &= (dq // chunk) == (dk // chunk)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgij,bjkd->bikgd", p.astype(v.dtype), v)
+    return o.reshape(B, Cq, H, D)
+
+
+def multihead_attention(q, k, v, *, causal=True, window=0, chunk=0, cap=0.0,
+                        q_chunk=512, q_offset=0):
+    """Full-sequence attention, q-chunked with static valid-KV slices.
+
+    q: (B,S,H,D), k/v: (B,T,KV,D). ``q_offset`` is the absolute position of
+    q[0] relative to k[0] (0 for self-attention over the same sequence).
+    """
+    B, S, H, D = q.shape
+    T = k.shape[1]
+    c = min(q_chunk, S)
+    if S % c != 0:
+        c = S  # fall back to a single chunk for odd lengths (smoke tests)
+    outs = []
+    for i in range(S // c):
+        q_i = q[:, i * c:(i + 1) * c]
+        q_pos = q_offset + i * c + jnp.arange(c)
+        hi = min(T, q_offset + (i + 1) * c) if causal else T
+        lo = 0
+        if window:
+            lo = max(0, q_offset + i * c - (window - 1))
+        elif chunk:
+            lo = ((q_offset + i * c) // chunk) * chunk
+        # align to nice boundaries for static-shape reuse
+        k_i = k[:, lo:hi]
+        v_i = v[:, lo:hi]
+        k_pos = lo + jnp.arange(hi - lo)
+        outs.append(_chunk_attend(q_i, k_i, v_i, q_pos, k_pos, causal=causal,
+                                  window=window, chunk=chunk, cap=cap))
+    return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
+
+
+def decode_attention(q, k_cache, v_cache, pos, *, window=0, chunk=0, cap=0.0,
+                     ring=False):
+    """One-token decode: q (B,1,H,D) vs cache (B,L,KV,D); ``pos`` = absolute
+    index of the query token (its own KV already written).
+
+    ring=True: the cache is a ring buffer of L slots (L = window or chunk
+    size), slot j holding token t_j = pos − ((pos − j) mod L). Windowed and
+    chunked-local layers never need more history than that — a long_500k
+    windowed cache shrinks from 524288 to 4096 slots (§Perf iteration 7).
+    """
+    B, _, H, D = q.shape
+    L = k_cache.shape[1]
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qg, k_cache).astype(jnp.float32)
+    s = s * (D ** -0.5)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    j = jnp.arange(L)
+    t_j = (pos - ((pos - j) % L)) if ring else j     # token held by slot j
+    mask = t_j >= 0 if ring else (j <= pos)
+    if window:
+        mask &= (pos - t_j) < window
+    if chunk:
+        mask &= (t_j // chunk) == (pos // chunk)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v_cache.dtype), v_cache)
+    return o.reshape(B, 1, H, D)
+
+
+# ---------------------------------------------------------------------------
+# public layer apply
+# ---------------------------------------------------------------------------
+
+def attention(params, x, cfg, spec, *, positions=None, cache=None,
+              cross_kv=None, causal=True, shard=None):
+    """Self- (or cross-) attention layer.
+
+    Modes:
+      cache None, cross_kv None : full-sequence self-attention; returns
+                                  (out, (k, v)) so prefill can build a cache.
+      cache (k,v,pos)           : single-token decode; returns (out, new_cache).
+      cross_kv (k,v)            : cross-attention (whisper decoder); no mask.
+    """
+    shard = shard or (lambda t, _k: t)
+    dt = cfg.dtype
+    B, S, _ = x.shape
+    D = cfg.head_dim_
+    H, KV = cfg.n_heads, cfg.n_kv_heads
+    window = cfg.window if spec.attn == "window" else 0
+    chunk = cfg.chunk if spec.attn == "chunked" else 0
+
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, H, D)
+    q = shard(q, "act_heads")
+    if cross_kv is None:
+        k = (x @ params["wk"].astype(dt)).reshape(B, S, KV, D)
+        v = (x @ params["wv"].astype(dt)).reshape(B, S, KV, D)
+    else:
+        k, v = cross_kv
+
+    if cfg.qk_norm:
+        q = rmsnorm(params["q_norm"], q, cfg.norm_eps)
+        if cross_kv is None:
+            k = rmsnorm(params["k_norm"], k, cfg.norm_eps)
+
+    if positions is None:
+        positions = jnp.arange(S)[None]
+    if spec.rope and cross_kv is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    if cache is not None:
+        # decode: write this token's KV (ring slot pos % L for ring caches)
+        # then attend to the cache.
+        k_cache, v_cache, pos = cache["k"], cache["v"], cache["pos"]
+        L_c = k_cache.shape[1]
+        ring = bool(cache.get("ring", False))
+        slot = pos % L_c if ring else pos
+        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
+                                               (0, slot, 0, 0))
+        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
+                                               (0, slot, 0, 0))
+        o = decode_attention(q, k_cache, v_cache, pos, window=window,
+                             chunk=chunk, cap=cfg.attn_softcap, ring=ring)
+        new_cache = {"k": k_cache, "v": v_cache, "pos": pos}
+        out = o.reshape(B, S, H * D) @ params["wo"].astype(dt)
+        return out, new_cache
+
+    if cross_kv is not None:
+        o = multihead_attention(q, k, v, causal=False, cap=cfg.attn_softcap)
+        out = o.reshape(B, S, H * D) @ params["wo"].astype(dt)
+        return out, None
+
+    o = multihead_attention(q, k, v, causal=causal, window=window, chunk=chunk,
+                            cap=cfg.attn_softcap)
+    o = shard(o, "act_heads")
+    out = o.reshape(B, S, H * D) @ params["wo"].astype(dt)
+    return out, (k, v)

@@ -1,0 +1,116 @@
+"""Shared layer primitives: norms, MLPs, embeddings, rotary embeddings.
+
+All layers are functional: ``*_init(rng, ...) -> params`` and a pure apply.
+Params are plain dicts; compute happens in ``cfg.dtype`` (bf16), params are
+stored in ``cfg.param_dtype`` (fp32) and cast at use.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+# ---------------------------------------------------------------------------
+# init helpers
+# ---------------------------------------------------------------------------
+
+def dense_init(rng, d_in: int, d_out: int, dtype=jnp.float32) -> jax.Array:
+    scale = 1.0 / jnp.sqrt(d_in)
+    return (jax.random.normal(rng, (d_in, d_out), jnp.float32) * scale).astype(dtype)
+
+
+def embed_init(rng, vocab: int, d: int, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(rng, (vocab, d), jnp.float32) * 0.02).astype(dtype)
+
+
+# ---------------------------------------------------------------------------
+# norms
+# ---------------------------------------------------------------------------
+
+def rmsnorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.zeros((d,), dtype)}          # (1 + scale) convention
+
+
+def rmsnorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + params["scale"].astype(jnp.float32))).astype(dt)
+
+
+def layernorm_init(d: int, dtype=jnp.float32) -> dict:
+    return {"scale": jnp.zeros((d,), dtype), "bias": jnp.zeros((d,), dtype)}
+
+
+def layernorm(params: dict, x: jax.Array, eps: float = 1e-5) -> jax.Array:
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    mu = jnp.mean(x32, axis=-1, keepdims=True)
+    var = jnp.var(x32, axis=-1, keepdims=True)
+    y = (x32 - mu) * jax.lax.rsqrt(var + eps)
+    y = y * (1.0 + params["scale"].astype(jnp.float32)) + params["bias"].astype(jnp.float32)
+    return y.astype(dt)
+
+
+def norm_init(cfg, d: int) -> dict:
+    return (layernorm_init(d, cfg.param_dtype) if cfg.norm_type == "ln"
+            else rmsnorm_init(d, cfg.param_dtype))
+
+
+def norm_apply(cfg, params: dict, x: jax.Array) -> jax.Array:
+    return (layernorm(params, x, cfg.norm_eps) if cfg.norm_type == "ln"
+            else rmsnorm(params, x, cfg.norm_eps))
+
+
+# ---------------------------------------------------------------------------
+# gated MLP (SwiGLU / GeGLU) and plain MLP (whisper)
+# ---------------------------------------------------------------------------
+
+def mlp_init(rng, d_model: int, d_ff: int, act: str, dtype=jnp.float32) -> dict:
+    ks = jax.random.split(rng, 3)
+    if act == "gelu_mlp":                              # plain 2-matrix MLP
+        return {"up": dense_init(ks[0], d_model, d_ff, dtype),
+                "down": dense_init(ks[1], d_ff, d_model, dtype)}
+    return {"gate": dense_init(ks[0], d_model, d_ff, dtype),
+            "up": dense_init(ks[1], d_model, d_ff, dtype),
+            "down": dense_init(ks[2], d_ff, d_model, dtype)}
+
+
+def mlp_apply(params: dict, x: jax.Array, act: str) -> jax.Array:
+    dt = x.dtype
+    if act == "gelu_mlp":
+        h = jax.nn.gelu(x @ params["up"].astype(dt))
+        return h @ params["down"].astype(dt)
+    g = x @ params["gate"].astype(dt)
+    u = x @ params["up"].astype(dt)
+    g = jax.nn.silu(g) if act == "silu" else jax.nn.gelu(g)
+    return (g * u) @ params["down"].astype(dt)
+
+
+def mlp_param_count(d_model: int, d_ff: int, act: str) -> int:
+    return 2 * d_model * d_ff if act == "gelu_mlp" else 3 * d_model * d_ff
+
+
+# ---------------------------------------------------------------------------
+# rotary position embeddings
+# ---------------------------------------------------------------------------
+
+def rope_freqs(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, D); positions: broadcastable to (..., S)."""
+    freqs = rope_freqs(x.shape[-1], theta)             # (D/2,)
+    ang = positions[..., None].astype(jnp.float32) * freqs   # (..., S, D/2)
+    cos = jnp.cos(ang)[..., None, :]                   # (..., S, 1, D/2)
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    if not cap:
+        return x
+    return (cap * jnp.tanh(x.astype(jnp.float32) / cap)).astype(x.dtype)

@@ -1,0 +1,133 @@
+"""Mixture-of-Experts MLP with capacity-bounded sort-based dispatch.
+
+Dispatch never materializes a (B,S,E,C) one-hot: per batch row, the S·K
+(token, expert) assignments are sorted by expert id, ranked within their
+expert, and converted into a static (E, C) gather/scatter index table.
+Dropped tokens (rank ≥ capacity) fall through via the residual connection.
+
+Sharding: expert-parallelism shards the leading E dim of expert weights and
+of the dispatched (B, E, C, d) activations over the ``model`` mesh axis (the
+``shard`` hooks 'experts' / 'moe_act'). Router compute is replicated.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+AUX_LOSS_W = 0.01
+
+
+def moe_init(rng, cfg) -> dict:
+    E = cfg.n_experts
+    dff = cfg.d_expert or cfg.d_ff
+    ks = jax.random.split(rng, 5)
+    vinit = jax.vmap(lambda k, di=cfg.d_model, do=dff: dense_init(k, di, do))
+    vinit_dn = jax.vmap(lambda k, di=dff, do=cfg.d_model: dense_init(k, di, do))
+    p = {
+        "router": dense_init(ks[0], cfg.d_model, E),
+        "gate": vinit(jax.random.split(ks[1], E)).astype(cfg.param_dtype),
+        "up": vinit(jax.random.split(ks[2], E)).astype(cfg.param_dtype),
+        "down": vinit_dn(jax.random.split(ks[3], E)).astype(cfg.param_dtype),
+    }
+    if cfg.n_shared_experts:
+        dsh = cfg.d_shared_expert or cfg.n_shared_experts * dff
+        kk = jax.random.split(ks[4], 3)
+        p["shared"] = {
+            "gate": dense_init(kk[0], cfg.d_model, dsh, cfg.param_dtype),
+            "up": dense_init(kk[1], cfg.d_model, dsh, cfg.param_dtype),
+            "down": dense_init(kk[2], dsh, cfg.d_model, cfg.param_dtype),
+        }
+    return p
+
+
+def moe_param_count(cfg, active_only: bool = False) -> int:
+    E = cfg.top_k if active_only else cfg.n_experts
+    dff = cfg.d_expert or cfg.d_ff
+    n = cfg.d_model * cfg.n_experts            # router (always full)
+    n += E * 3 * cfg.d_model * dff
+    if cfg.n_shared_experts:
+        dsh = cfg.d_shared_expert or cfg.n_shared_experts * dff
+        n += 3 * cfg.d_model * dsh
+    return n
+
+
+def capacity(cfg, S: int) -> int:
+    c = int(S * cfg.top_k / cfg.n_experts * cfg.capacity_factor)
+    return max(c, cfg.top_k)
+
+
+def _dispatch_tables(idx, gates, E: int, S: int, K: int, C: int):
+    """Build (E·C) gather/scatter tables for one batch row.
+
+    idx:   (S, K) expert id per assignment
+    gates: (S, K) combine weight per assignment
+    Returns tok_idx (E·C,) int32 in [0, S] (S = sentinel), weight (E·C,).
+    """
+    flat_e = idx.reshape(-1)                        # (S*K,)
+    flat_tok = jnp.repeat(jnp.arange(S, dtype=jnp.int32), K)
+    flat_w = gates.reshape(-1)
+    order = jnp.argsort(flat_e, stable=True)        # expert-major order
+    e_sorted = flat_e[order]
+    tok_sorted = flat_tok[order]
+    w_sorted = flat_w[order]
+    counts = jnp.bincount(flat_e, length=E)
+    starts = jnp.cumsum(counts) - counts            # exclusive prefix
+    rank = jnp.arange(S * K) - starts[e_sorted]     # position within expert
+    keep = rank < C
+    # dropped assignments scatter to an out-of-range slot (mode="drop")
+    slot = jnp.where(keep, e_sorted * C + jnp.clip(rank, 0, C - 1), E * C)
+    tok_idx = jnp.full((E * C,), S, jnp.int32).at[slot].set(
+        tok_sorted, mode="drop")
+    weight = jnp.zeros((E * C,), flat_w.dtype).at[slot].set(
+        w_sorted, mode="drop")
+    return tok_idx, weight
+
+
+def moe_apply(params: dict, x: jax.Array, cfg, *, shard=None):
+    """x: (B, S, d). Returns (out, aux_loss)."""
+    shard = shard or (lambda t, _k: t)
+    B, S, d = x.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = capacity(cfg, S)
+    dt = x.dtype
+
+    logits = (x @ params["router"].astype(dt)).astype(jnp.float32)  # (B,S,E)
+    if getattr(cfg, "router_act", "softmax") == "sigmoid":
+        probs = jax.nn.sigmoid(logits)
+    else:
+        probs = jax.nn.softmax(logits, axis=-1)
+    gates, idx = jax.lax.top_k(probs, K)                            # (B,S,K)
+    if cfg.router_norm_topk and K > 1:
+        gates = gates / jnp.sum(gates, -1, keepdims=True)
+
+    # auxiliary load-balance loss (Switch-style): E * <f_e> . <p_e>
+    me = jnp.mean(jax.nn.one_hot(idx[..., 0], E, dtype=jnp.float32), axis=(0, 1))
+    pe = jnp.mean(jax.nn.softmax(logits, -1), axis=(0, 1))
+    aux = AUX_LOSS_W * E * jnp.sum(me * pe)
+
+    tok_idx, weight = jax.vmap(
+        lambda i, g: _dispatch_tables(i, g, E, S, K, C))(idx, gates)  # (B,E*C)
+
+    x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), dt)], axis=1)   # sentinel
+    disp = jnp.take_along_axis(x_pad, tok_idx[..., None], axis=1)    # (B,E*C,d)
+    disp = disp.reshape(B, E, C, d)
+    disp = shard(disp, "moe_act")
+
+    g = jnp.einsum("becd,edf->becf", disp, params["gate"].astype(dt))
+    u = jnp.einsum("becd,edf->becf", disp, params["up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    y = jnp.einsum("becf,efd->becd", h, params["down"].astype(dt))
+    y = shard(y, "moe_act")
+    y = (y.reshape(B, E * C, d) * weight[..., None].astype(dt))
+
+    out = jnp.zeros((B, S + 1, d), dt).at[
+        jnp.arange(B)[:, None], tok_idx].add(y, mode="drop")[:, :S]
+    out = shard(out, "act")
+
+    if cfg.n_shared_experts:
+        sh = params["shared"]
+        gg = jax.nn.silu(x @ sh["gate"].astype(dt)) * (x @ sh["up"].astype(dt))
+        out = out + gg @ sh["down"].astype(dt)
+    return out, aux

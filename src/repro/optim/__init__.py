@@ -1,0 +1,2 @@
+from .adamw import AdamW, TrainState, global_norm
+from .schedules import constant, cosine_warmup

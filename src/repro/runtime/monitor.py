@@ -1,0 +1,65 @@
+"""Runtime health: straggler detection and fault injection.
+
+On a real fleet the heartbeat/restart daemon lives outside the process
+(borg/k8s/xmanager); in this repo the Trainer demonstrates the *in-process*
+half of the contract: detect stragglers from step-time statistics, survive
+injected chip failures by restoring the latest complete checkpoint, and
+(elastically) rebuild the step function for a smaller mesh. The CPU
+container simulates failures via ``FaultInjector``.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+class SimulatedFault(RuntimeError):
+    """Raised by FaultInjector to emulate a chip/host loss mid-run."""
+
+
+@dataclasses.dataclass
+class FaultInjector:
+    """Raises SimulatedFault at the given step numbers (once each)."""
+
+    fail_at_steps: tuple[int, ...] = ()
+
+    def __post_init__(self):
+        self._pending = set(self.fail_at_steps)
+
+    def check(self, step: int) -> None:
+        if step in self._pending:
+            self._pending.discard(step)
+            raise SimulatedFault(f"injected failure at step {step}")
+
+
+@dataclasses.dataclass
+class StepMonitor:
+    """EWMA step-time tracker; flags steps ``k×`` slower than the average.
+
+    At fleet scale the same statistic (exported per host) is what lets the
+    controller identify the slow host; here it feeds the Trainer's event log
+    and the straggler tests.
+    """
+
+    k: float = 3.0
+    alpha: float = 0.1
+    warmup: int = 3
+
+    _ewma: float = 0.0
+    _n: int = 0
+
+    def record(self, dt: float) -> list[str]:
+        events = []
+        self._n += 1
+        if self._n <= self.warmup:          # ignore compile-dominated steps
+            self._ewma = dt if self._ewma == 0 else (
+                self.alpha * dt + (1 - self.alpha) * self._ewma)
+            return events
+        if dt > self.k * self._ewma:
+            events.append(f"straggler: step took {dt:.3f}s "
+                          f"(ewma {self._ewma:.3f}s, k={self.k})")
+        self._ewma = self.alpha * dt + (1 - self.alpha) * self._ewma
+        return events
+
+    @property
+    def ewma(self) -> float:
+        return self._ewma

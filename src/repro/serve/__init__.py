@@ -1,0 +1,1 @@
+from .engine import Engine, cache_shardings, make_serve_fns

@@ -1,0 +1,3 @@
+from .sharding import make_shard_fn, param_specs, batch_spec
+from .step import make_train_step
+from .trainer import Trainer, TrainerConfig

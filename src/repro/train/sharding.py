@@ -1,0 +1,155 @@
+"""Sharding rules: parameter PartitionSpecs + activation constraint hooks.
+
+Parameters are sharded 2-D (Megatron-style TP over ``model`` + optional
+FSDP/ZeRO over ``data``); a dim is sharded only if divisible by the axis
+size (otherwise GSPMD padding would silently waste memory — we prefer
+explicit replication and record it). Activation hooks are the ``shard``
+callbacks threaded through the model zoo; in paper-mode (inside the
+``shard_map`` over DP axes) the DP axes are manual and must be dropped from
+every constraint — ``make_shard_fn(..., manual_dp=True)`` does exactly that.
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import PartitionSpec as P
+
+DP_AXES = ("pod", "data")       # batch axes (outer = pod boundary)
+MODEL_AXIS = "model"
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """The DP axes actually present on this mesh ('pod' only if multi-pod)."""
+    return tuple(a for a in DP_AXES if a in mesh.axis_names)
+
+
+def _axsize(mesh, name) -> int:
+    if name not in mesh.axis_names:
+        return 1
+    return mesh.devices.shape[list(mesh.axis_names).index(name)]
+
+
+def _div(dim: int, n: int) -> bool:
+    return n > 1 and dim % n == 0
+
+
+def _leaf_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh,
+               fsdp: bool) -> P:
+    """Heuristic spec from the leaf's key name; leading stacked dims are
+    handled by the caller."""
+    name = path[-1]
+    m = _axsize(mesh, MODEL_AXIS)
+    d = _axsize(mesh, "data")
+    fs = "data" if fsdp else None
+
+    def fdim(dim):      # shard over data iff FSDP on and divisible
+        return fs if (fs and _div(dim, d)) else None
+
+    def mdim(dim):
+        return MODEL_AXIS if _div(dim, m) else None
+
+    if len(shape) == 0:
+        return P()
+    if name in ("scale", "bias", "A_log", "D", "dt_bias", "conv_b"):
+        return P(*([None] * len(shape)))
+    if name == "router":                       # (d, E) small, replicated
+        return P(None, None)
+    if name in ("embed", "head"):
+        v_dim, d_dim = (0, 1) if name == "embed" else (1, 0)
+        spec = [None, None]
+        spec[v_dim] = mdim(shape[v_dim])
+        spec[d_dim] = fdim(shape[d_dim])
+        return P(*spec)
+    if name in ("wq", "wk", "wv", "in_proj"):  # col-parallel: (d, out)
+        return P(fdim(shape[0]), mdim(shape[1]))
+    if name in ("wo", "out_proj"):             # row-parallel: (in, d)
+        return P(mdim(shape[0]), fdim(shape[1]))
+    if name in ("gate", "up"):
+        if len(shape) == 3:                    # MoE experts (E, d, f): EP
+            return P(mdim(shape[0]), fdim(shape[1]), None)
+        return P(fdim(shape[0]), mdim(shape[1]))
+    if name == "down":
+        if len(shape) == 3:                    # (E, f, d)
+            return P(mdim(shape[0]), None, fdim(shape[2]))
+        return P(mdim(shape[0]), fdim(shape[1]))
+    if name == "conv_w":                       # (W, Ch) depthwise
+        return P(None, mdim(shape[1]))
+    # fallback: shard the largest divisible dim over model
+    best = max(range(len(shape)), key=lambda i: shape[i])
+    spec = [None] * len(shape)
+    if _div(shape[best], m):
+        spec[best] = MODEL_AXIS
+    return P(*spec)
+
+
+def param_specs(abstract_params, mesh, *, fsdp: bool = False):
+    """PartitionSpec pytree for a params tree (use jax.eval_shape output)."""
+
+    def visit(path, leaf):
+        keys = tuple(getattr(p, "key", getattr(p, "idx", None)) for p in path)
+        keys = tuple(str(k) for k in keys)
+        # stacked scan segments: ("blocks", "slotj", ...) carry a leading
+        # reps dim; encdec stacks under enc_layers/dec_layers.
+        stacked = any(k in ("blocks",) or k.endswith("_layers") for k in keys)
+        spec = _leaf_spec(keys, leaf.shape[1:] if stacked else leaf.shape,
+                          mesh, fsdp)
+        return P(None, *spec) if stacked else spec
+
+    return jax.tree_util.tree_map_with_path(visit, abstract_params)
+
+
+def batch_spec() -> dict:
+    return {"tokens": P(DP_AXES, None), "labels": P(DP_AXES, None)}
+
+
+# ---------------------------------------------------------------------------
+# activation constraint hooks
+# ---------------------------------------------------------------------------
+_ACT_RULES: dict[str, tuple] = {
+    # kind -> dims description; DP marks the batch dim, M the model-sharded dim
+    "act":        ("dp", None, None),            # (B, S, d)
+    "act_heads":  ("dp", None, "model", None),   # (B, S, H, D)
+    "act_ff":     ("dp", None, "model"),         # (B, S, F)
+    "moe_act":    ("dp", "model", None, None),   # (B, E, C, d)
+    "logits":     ("dp", None, "model"),         # (B, S, V)
+}
+
+
+def make_shard_fn(mesh=None, *, manual_dp: bool = False, seq_shard: bool = False,
+                  enable: bool = True):
+    """Returns shard(x, kind) applying with_sharding_constraint per rules.
+
+    manual_dp: inside a shard_map manual over DP — drop DP axes (only auto
+    'model' axis constraints are legal there).
+    seq_shard: sequence-parallel residuals — shard the seq dim of (B,S,d)
+    activations over 'model' between blocks (perf knob).
+    """
+    if not enable:
+        return lambda x, kind: x
+    dp = dp_axes(mesh) if mesh is not None else DP_AXES
+    m = _axsize(mesh, MODEL_AXIS) if mesh is not None else 1
+
+    def on_model(dim: int) -> bool:
+        return m > 1 and dim % m == 0
+
+    def shard(x, kind):
+        rule = _ACT_RULES.get(kind)
+        if rule is None or x.ndim != len(rule):
+            return x
+        spec = []
+        for i, r in enumerate(rule):
+            if r == "dp":
+                spec.append(None if manual_dp else (dp or None))
+            elif r == "model":
+                spec.append(MODEL_AXIS if on_model(x.shape[i]) else None)
+            else:
+                spec.append(None)
+        if seq_shard and kind == "act":
+            spec[1] = MODEL_AXIS if on_model(x.shape[1]) else None
+        if all(s is None for s in spec):
+            return x
+        return jax.lax.with_sharding_constraint(x, P(*spec))
+
+    return shard

@@ -1,0 +1,350 @@
+"""Train-step factory: loss, backward, gradient sync, optimizer — one jit.
+
+Two gradient-sync paths (selected by ``grad_sync``):
+
+* ``"xla"``      — pure GSPMD: batch sharded over DP axes, params replicated
+                   (or FSDP-sharded) — XLA inserts its own all-reduce /
+                   reduce-scatter. The stock baseline.
+* ``"locality"`` / ``"locality_rd"`` / ``"flat_psum"`` — paper mode: the
+  forward/backward runs inside a ``shard_map`` that is *manual* over the DP
+  axes (``pod`` crossing the expensive boundary, ``data`` local) and *auto*
+  over ``model`` (GSPMD still handles TP). Per-DP-shard gradients are then
+  synchronized with the locality-aware collectives of ``core/collectives.py``
+  — the paper's algorithm is the literal gradient-sync path, and its
+  schedule is visible in the compiled HLO as collective-permutes.
+
+Distributed-optimization extras: gradient bucketing (fuse small leaves into
+~bucket_mb collectives) and optional bf16 compression of the DP sync.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import os
+from typing import Any, Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.core import collectives as C
+from repro.models import encdec, transformer
+from repro.optim import AdamW, TrainState
+from .sharding import (DP_AXES, batch_spec, dp_axes, make_shard_fn,
+                       param_specs)
+
+
+# ---------------------------------------------------------------------------
+# loss
+# ---------------------------------------------------------------------------
+
+def xent_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
+    """Cross-entropy that stays sharded over the vocab dim.
+
+    take_along_axis on a 'model'-sharded vocab would make GSPMD replicate
+    the logits (an all-gather of the largest tensor in the step — measured
+    ~2.5 GiB/device on the 151k-vocab cells). A sharded iota==label mask
+    keeps every op elementwise over the sharded dim; only (B, S) partials
+    cross shards.
+    """
+    lg = logits.astype(jnp.float32)
+    lse = jax.nn.logsumexp(lg, axis=-1)
+    if os.environ.get("REPRO_XENT_GATHER"):      # §Perf A/B baseline path
+        ll = jnp.take_along_axis(lg, labels[..., None], axis=-1)[..., 0]
+    else:
+        vocab_pos = jax.lax.broadcasted_iota(jnp.int32, lg.shape, lg.ndim - 1)
+        mask = vocab_pos == labels[..., None]
+        ll = jnp.sum(jnp.where(mask, lg, 0.0), axis=-1)
+    return jnp.mean(lse - ll)
+
+
+def make_loss_fn(cfg, *, remat: bool = True):
+    model = encdec if cfg.family == "audio" else transformer
+
+    def loss_fn(params, batch, shard):
+        kw: dict[str, Any] = {}
+        if cfg.family == "audio":
+            kw["frames"] = batch["frames"]
+        if cfg.family == "vlm" and "img_embeds" in batch:
+            kw["img_embeds"] = batch["img_embeds"]
+        logits, aux, _ = model.forward(params, cfg, batch["tokens"],
+                                       mode="train", shard=shard, remat=remat,
+                                       **kw)
+        loss = xent_loss(logits, batch["labels"])
+        total = loss + aux["moe_aux"]
+        return total, {"loss": loss, "moe_aux": aux["moe_aux"]}
+
+    return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# gradient bucketing for the DP sync
+# ---------------------------------------------------------------------------
+
+def bucketed_sync(grads, sync_flat: Callable[[jax.Array], jax.Array],
+                  bucket_mb: float = 64.0, compress: bool = False):
+    """Flatten grads into ≤bucket_mb fp32 buckets, sync each, unflatten.
+
+    Fuses the many small-leaf collectives (norm scales, biases) into a few
+    large ones — the standard DDP bucketing trick, which also puts the
+    collectives squarely in the paper's bandwidth regime.
+    """
+    leaves, treedef = jax.tree.flatten(grads)
+    sizes = [int(np.prod(l.shape)) for l in leaves]
+    limit = int(bucket_mb * 1024 * 1024 / 4)
+    buckets: list[list[int]] = [[]]
+    acc = 0
+    for i, s in enumerate(sizes):
+        if acc + s > limit and buckets[-1]:
+            buckets.append([])
+            acc = 0
+        buckets[-1].append(i)
+        acc += s
+    out: list[jax.Array | None] = [None] * len(leaves)
+    for idxs in buckets:
+        flat = jnp.concatenate(
+            [leaves[i].astype(jnp.float32).reshape(-1) for i in idxs])
+        if compress:
+            flat = flat.astype(jnp.bfloat16)
+        flat = sync_flat(flat)
+        flat = flat.astype(jnp.float32)
+        off = 0
+        for i in idxs:
+            out[i] = flat[off:off + sizes[i]].reshape(leaves[i].shape)
+            off += sizes[i]
+    return jax.tree.unflatten(treedef, out)
+
+
+# ---------------------------------------------------------------------------
+# step factory
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass(frozen=True)
+class StepArtifacts:
+    step_fn: Callable                 # jitted (state, batch) -> (state, metrics)
+    state_shardings: Any
+    batch_shardings: Any
+    abstract_state: Any               # ShapeDtypeStruct pytree
+    pspecs: Any
+
+
+def abstract_batch(cfg, shape) -> dict:
+    """shape: a ShapeSpec/name (uses cfg.input_specs) or an explicit dict of
+    ShapeDtypeStructs (smoke tests / custom drivers)."""
+    if isinstance(shape, dict):
+        return dict(shape)
+    return dict(cfg.input_specs(shape))
+
+
+def custom_batch_specs(cfg, global_batch: int, seq_len: int) -> dict:
+    """Token/label specs for an arbitrary (B, S) — examples and tests."""
+    sd = jax.ShapeDtypeStruct
+    out = {"tokens": sd((global_batch, seq_len), jnp.int32),
+           "labels": sd((global_batch, seq_len), jnp.int32)}
+    if cfg.family == "audio":
+        out["frames"] = sd((global_batch, cfg.enc_seq, cfg.d_model), cfg.dtype)
+    if cfg.family == "vlm":
+        out["img_embeds"] = sd((global_batch, cfg.n_img_tokens, cfg.d_model),
+                               cfg.dtype)
+    return out
+
+
+def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
+                    grad_sync: str = "xla", fsdp: bool = False,
+                    seq_shard: bool = False, remat: bool = True,
+                    bucket_mb: float = 64.0, compress: bool = False,
+                    donate: bool = True, shape="train_4k",
+                    grad_accum: int = 1) -> StepArtifacts:
+    """grad_accum > 1 splits the per-device batch into microbatches inside a
+    lax.scan: activation residency drops ~grad_accum×, the DP sync still
+    happens once per step on the accumulated grads (the paper's collective
+    amortizes over the whole global batch).
+
+    grad_sync="auto" resolves the algorithm from the postal model
+    (core/autotune.py) using the model's gradient size and the mesh
+    topology — the paper's Eq. 2-4 promoted into a runtime policy."""
+    optimizer = optimizer or AdamW()
+    model = encdec if cfg.family == "audio" else transformer
+    loss_fn = make_loss_fn(cfg, remat=remat)
+
+    if grad_sync == "auto":
+        from repro.core.autotune import pick_allgather
+        import numpy as _np
+        a_p = jax.eval_shape(lambda k: model.init_params(k, cfg),
+                             jax.random.PRNGKey(0))
+        grad_bytes = sum(int(_np.prod(l.shape)) for l in jax.tree.leaves(a_p)) * 2
+        names = list(mesh.axis_names)
+        p_l = (mesh.devices.shape[names.index("data")]
+               if "data" in names else 1)
+        r = (mesh.devices.shape[names.index("pod")] if "pod" in names else 1)
+        algo = pick_allgather(r * p_l, p_l, grad_bytes / max(r * p_l, 1))
+        grad_sync = "locality" if algo in ("locality_bruck", "multilane",
+                                           "hierarchical") else "flat_psum"
+
+    # --- abstract state + shardings ------------------------------------------
+    a_params = jax.eval_shape(
+        lambda k: model.init_params(k, cfg), jax.random.PRNGKey(0))
+    pspecs = param_specs(a_params, mesh, fsdp=fsdp)
+    a_state = jax.eval_shape(TrainState.create, a_params)
+    state_specs = TrainState(params=pspecs, mu=pspecs, nu=pspecs, step=P())
+    state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
+
+    dp = dp_axes(mesh)
+    outer = ("pod",) if "pod" in mesh.axis_names else ()
+    local = tuple(a for a in dp if a != "pod")
+
+    b_abstract = abstract_batch(cfg, shape)
+    b_specs = {k: P(dp, *([None] * (len(v.shape) - 1)))
+               for k, v in b_abstract.items()}
+    batch_sh = {k: NamedSharding(mesh, s) for k, s in b_specs.items()}
+
+    dp_size = 1
+    for ax in dp:
+        dp_size *= mesh.devices.shape[list(mesh.axis_names).index(ax)]
+
+    # --- microbatch accumulation helper -------------------------------------
+    def _accumulated(one_fn, batch):
+        """Run one_fn over grad_accum microbatches via lax.scan, summing the
+        ((loss, metrics), grads) pytree; caller divides by grad_accum."""
+        if grad_accum <= 1:
+            return one_fn(batch)
+        mbs = jax.tree.map(
+            lambda t: t.reshape((grad_accum, t.shape[0] // grad_accum)
+                                + t.shape[1:]), batch)
+        first = jax.tree.map(lambda t: t[0], mbs)
+        out_sh = jax.eval_shape(one_fn, first)
+        init = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), out_sh)
+
+        def sbody(acc, mb):
+            return jax.tree.map(lambda a, b: a + b, acc, one_fn(mb)), None
+
+        acc, _ = jax.lax.scan(sbody, init, mbs)
+        return jax.tree.map(lambda t: t / grad_accum, acc)
+
+    # --- gradient computation ---------------------------------------------
+    if grad_sync == "xla":
+        def grads_of(params, batch):
+            shard = make_shard_fn(mesh, seq_shard=seq_shard)
+
+            def one(mb):
+                return jax.value_and_grad(loss_fn, has_aux=True)(
+                    params, mb, shard)
+
+            (_, metrics), grads = _accumulated(one, batch)
+            return grads, metrics
+    else:
+        alg = {"locality": ("locality", "rhd"),
+               "locality_rd": ("locality", "rd"),
+               "flat_psum": ("xla", "rhd")}[grad_sync]
+
+        # fsdp dim per leaf (-1 = replicated over 'data'). In paper mode the
+        # 'data' axis is *manual*: ZeRO-3-style shards enter the shard_map,
+        # are gathered with the (locality-aware) Bruck allgather before use,
+        # and autodiff transposes the gather into the matching
+        # reduce-scatter of the gradients — paper Algorithm 2 as the literal
+        # FSDP communication path. Only the per-shard all-reduce over 'pod'
+        # crosses the DCN boundary (1/16 of the bytes).
+        def _fsdp_dim(spec: P) -> int:
+            for i, s in enumerate(spec):
+                names = (s,) if isinstance(s, str) else tuple(s or ())
+                if "data" in names:
+                    return i
+            return -1
+
+        fsdp_dims = jax.tree.map(_fsdp_dim, pspecs,
+                                 is_leaf=lambda x: isinstance(x, P))
+        param_in_specs = jax.tree.map(
+            lambda sp, k: P(*[("data" if i == k else None)
+                              for i in range(len(sp))]),
+            pspecs, fsdp_dims, is_leaf=lambda x: isinstance(x, P))
+
+        def _gather(shard_leaf, k):
+            if k < 0:
+                return shard_leaf.astype(cfg.dtype) \
+                    if shard_leaf.dtype == jnp.float32 else shard_leaf
+            x = shard_leaf.astype(cfg.dtype)       # gather the bf16 copy
+            x = jnp.moveaxis(x, k, 0)
+            full = C.bruck_allgather(x, ("data",), tiled=True,
+                                     assume_varying=True)
+            return jnp.moveaxis(full, 0, k)
+
+        def body(params, batch):
+            shard = make_shard_fn(mesh, manual_dp=True, seq_shard=seq_shard)
+
+            def one(mb):
+                def sharded_loss(shards):
+                    full = jax.tree.map(_gather, shards, fsdp_dims)
+                    return loss_fn(full, mb, shard)
+                return jax.value_and_grad(sharded_loss, has_aux=True)(params)
+
+            # microbatches accumulate per-device; the (locality-aware) DP
+            # sync below runs ONCE on the accumulated grads.
+            (_, metrics), grads = _accumulated(one, batch)
+
+            # sync: fsdp leaves are already reduce-scattered over 'data' by
+            # the gather transpose; finish with the pod allreduce. Leaves
+            # replicated over 'data' need the full locality allreduce.
+            leaves, treedef = jax.tree.flatten(grads)
+            dims = jax.tree.leaves(fsdp_dims)
+            idx_rs = [i for i, k in enumerate(dims) if k >= 0]
+            idx_full = [i for i, k in enumerate(dims) if k < 0]
+
+            def sync_pod(t):
+                if not outer:
+                    return t / dp_size
+                return C.allreduce(t, (), outer, algorithm="locality",
+                                   outer_algorithm=alg[1]) / dp_size
+
+            def sync_full(t):
+                return C.allreduce(t, outer, local, algorithm=alg[0],
+                                   outer_algorithm=alg[1]) / dp_size
+
+            if idx_rs and fsdp:
+                sub = bucketed_sync([leaves[i] for i in idx_rs], sync_pod,
+                                    bucket_mb=bucket_mb, compress=compress)
+                for j, i in enumerate(idx_rs):
+                    leaves[i] = sub[j]
+            if idx_full:
+                sub = bucketed_sync([leaves[i] for i in idx_full], sync_full,
+                                    bucket_mb=bucket_mb, compress=compress)
+                for j, i in enumerate(idx_full):
+                    leaves[i] = sub[j]
+            grads = jax.tree.unflatten(treedef, leaves)
+            metrics = jax.tree.map(
+                lambda t: jax.lax.psum(t, dp) / dp_size, metrics)
+            return grads, metrics
+
+        in_specs = (param_in_specs if fsdp else P(),
+                    {k: b_specs[k] for k in b_abstract})
+        out_specs = ((param_in_specs if fsdp else P()), P())
+        grads_of = jax.shard_map(
+            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+            axis_names=set(dp), check_vma=False)
+
+    # --- the full step -------------------------------------------------------
+    def step(state: TrainState, batch):
+        grads, metrics = grads_of(state.params, batch)
+        grads = jax.tree.map(
+            lambda g, s: jax.lax.with_sharding_constraint(g, s),
+            grads, pspecs)
+        new_state, opt_metrics = optimizer.apply(state, grads)
+        return new_state, {**metrics, **opt_metrics}
+
+    jit_kw: dict[str, Any] = dict(
+        in_shardings=(state_sh, batch_sh),
+        out_shardings=(state_sh, None),
+    )
+    if donate:
+        jit_kw["donate_argnums"] = (0,)
+    step_fn = jax.jit(step, **jit_kw)
+    return StepArtifacts(step_fn=step_fn, state_shardings=state_sh,
+                         batch_shardings=batch_sh, abstract_state=a_state,
+                         pspecs=pspecs)
+
+
+def init_state(cfg, mesh, artifacts: StepArtifacts, seed: int = 0) -> TrainState:
+    model = encdec if cfg.family == "audio" else transformer
+    init = jax.jit(lambda k: TrainState.create(model.init_params(k, cfg)),
+                   out_shardings=artifacts.state_shardings)
+    return init(jax.random.PRNGKey(seed))

@@ -1,0 +1,149 @@
+"""Trainer: the fault-tolerant training loop.
+
+Wires together data pipeline, jitted train step, async checkpointing,
+straggler monitoring and (simulated) failure recovery:
+
+* every ``ckpt_every`` steps the full TrainState is checkpointed
+  asynchronously (atomic commit — see checkpoint/store.py);
+* a ``SimulatedFault`` (stand-in for a lost chip/host) triggers recovery:
+  restore the newest complete checkpoint and continue — optionally onto a
+  *different* mesh (elastic restart; the data pipeline is stateless so the
+  batch stream resumes exactly at the restored step);
+* step wall-times feed the StepMonitor; straggler events are recorded in
+  ``trainer.events`` (a real deployment would export them to the fleet
+  controller).
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+import jax
+import numpy as np
+
+from repro.checkpoint import CheckpointManager
+from repro.data import SyntheticLM
+from repro.optim import AdamW
+from repro.runtime import FaultInjector, SimulatedFault, StepMonitor
+from .step import StepArtifacts, custom_batch_specs, init_state, make_train_step
+
+
+@dataclasses.dataclass
+class TrainerConfig:
+    steps: int = 100
+    seq_len: int = 128
+    global_batch: int = 8
+    ckpt_dir: str = "/tmp/repro_ckpt"
+    ckpt_every: int = 25
+    keep_last: int = 3
+    log_every: int = 10
+    grad_sync: str = "locality"
+    fsdp: bool = False
+    seq_shard: bool = False
+    lr: float = 3e-4
+    seed: int = 0
+    straggler_k: float = 3.0
+
+
+class Trainer:
+    def __init__(self, model_cfg, mesh, tcfg: TrainerConfig,
+                 *, data: SyntheticLM | None = None,
+                 fault_injector: FaultInjector | None = None,
+                 log: Callable[[str], None] = print):
+        self.model_cfg = model_cfg
+        self.mesh = mesh
+        self.tcfg = tcfg
+        self.data = data or SyntheticLM(
+            vocab_size=model_cfg.vocab_size, seq_len=tcfg.seq_len,
+            global_batch=tcfg.global_batch, seed=tcfg.seed)
+        self.faults = fault_injector or FaultInjector()
+        self.monitor = StepMonitor(k=tcfg.straggler_k)
+        self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep_last=tcfg.keep_last)
+        self.events: list[str] = []
+        self.log = log
+        self.metrics_history: list[dict] = []
+        self._build(mesh)
+        self._init_or_restore()
+
+    # ------------------------------------------------------------------
+    def _build(self, mesh) -> None:
+        self.mesh = mesh
+        t = self.tcfg
+        self.artifacts = make_train_step(
+            self.model_cfg, mesh,
+            optimizer=AdamW(lr=t.lr),
+            grad_sync=t.grad_sync, fsdp=t.fsdp, seq_shard=t.seq_shard,
+            shape=custom_batch_specs(self.model_cfg, t.global_batch, t.seq_len))
+
+    def _init_or_restore(self) -> None:
+        restored = self.ckpt.restore(self.artifacts.abstract_state,
+                                     shardings=self.artifacts.state_shardings)
+        if restored is not None:
+            ckpt_step, self.state = restored
+            self.step = ckpt_step
+            self.events.append(f"restored checkpoint at step {ckpt_step}")
+            self.log(f"[trainer] restored step {ckpt_step}")
+        else:
+            self.state = init_state(self.model_cfg, self.mesh, self.artifacts,
+                                    seed=self.tcfg.seed)
+            self.step = 0
+
+    def _device_batch(self, batch: dict[str, np.ndarray]):
+        out = {}
+        for k, v in batch.items():
+            sh = self.artifacts.batch_shardings.get(k)
+            out[k] = jax.device_put(v, sh)
+        return out
+
+    def _augment(self, batch: dict[str, np.ndarray]) -> dict[str, np.ndarray]:
+        """Attach stub modality inputs (frames / patch embeddings)."""
+        cfg = self.model_cfg
+        B = self.tcfg.global_batch
+        rng = np.random.Generator(np.random.Philox(key=self.step))
+        if cfg.family == "audio":
+            batch["frames"] = rng.standard_normal(
+                (B, cfg.enc_seq, cfg.d_model), dtype=np.float32).astype("bfloat16")
+        if cfg.family == "vlm":
+            batch["img_embeds"] = rng.standard_normal(
+                (B, cfg.n_img_tokens, cfg.d_model), dtype=np.float32
+            ).astype("bfloat16")
+        return batch
+
+    # ------------------------------------------------------------------
+    def recover(self, mesh=None) -> None:
+        """Failure path: rebuild (possibly on a smaller mesh) and restore."""
+        self.ckpt.wait()
+        self._build(mesh or self.mesh)
+        self._init_or_restore()
+
+    def run(self) -> dict[str, Any]:
+        t = self.tcfg
+        while self.step < t.steps:
+            try:
+                batch = self._augment(self.data.batch(self.step))
+                t0 = time.perf_counter()
+                self.state, metrics = self.artifacts.step_fn(
+                    self.state, self._device_batch(batch))
+                jax.block_until_ready(metrics["loss"])
+                dt = time.perf_counter() - t0
+                self.faults.check(self.step)
+            except SimulatedFault as e:
+                self.events.append(str(e))
+                self.log(f"[trainer] {e} -> recovering")
+                self.recover()
+                continue
+            self.events.extend(self.monitor.record(dt))
+            self.step += 1
+            m = {k: float(v) for k, v in metrics.items()}
+            m["step"], m["dt"] = self.step, dt
+            self.metrics_history.append(m)
+            if self.step % t.log_every == 0 or self.step == t.steps:
+                self.log(f"[trainer] step {self.step:5d} "
+                         f"loss {m['loss']:.4f} gnorm {m['grad_norm']:.3f} "
+                         f"({dt*1e3:.0f} ms)")
+            if self.step % t.ckpt_every == 0 or self.step == t.steps:
+                self.ckpt.save(self.step, self.state)
+        self.ckpt.wait()
+        return {"final_loss": self.metrics_history[-1]["loss"],
+                "steps": self.step, "events": list(self.events)}

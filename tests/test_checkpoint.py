@@ -1,0 +1,65 @@
+"""Checkpoint store: atomic commit, GC, async manager, mismatch detection."""
+import os
+import shutil
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import (CheckpointManager, latest_step,
+                              restore_checkpoint, save_checkpoint)
+
+TREE = {"a": jnp.arange(12.0).reshape(3, 4), "b": [jnp.ones(5), jnp.zeros(2)],
+        "c": {"d": jnp.asarray(3)}}
+
+
+@pytest.fixture()
+def ckdir(tmp_path):
+    return str(tmp_path / "ck")
+
+
+def test_save_restore_roundtrip(ckdir):
+    save_checkpoint(ckdir, 7, TREE)
+    assert latest_step(ckdir) == 7
+    step, tree = restore_checkpoint(ckdir, TREE)
+    assert step == 7
+    for a, b in zip(jax.tree.leaves(TREE), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_gc_keeps_last_k(ckdir):
+    for s in (1, 2, 3, 4, 5):
+        save_checkpoint(ckdir, s, TREE, keep_last=2)
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckdir)
+                   if d.startswith("step_"))
+    assert steps == [4, 5]
+
+
+def test_incomplete_checkpoint_ignored(ckdir):
+    save_checkpoint(ckdir, 1, TREE)
+    # simulate a crash mid-write: directory without manifest
+    os.makedirs(os.path.join(ckdir, "step_00000002"))
+    assert latest_step(ckdir) == 1
+    step, _ = restore_checkpoint(ckdir, TREE)
+    assert step == 1
+
+
+def test_leaf_count_mismatch_raises(ckdir):
+    save_checkpoint(ckdir, 1, TREE)
+    with pytest.raises(AssertionError, match="architecture mismatch"):
+        restore_checkpoint(ckdir, {"only": jnp.ones(3)})
+
+
+def test_async_manager(ckdir):
+    mgr = CheckpointManager(ckdir, keep_last=3)
+    for s in (10, 20):
+        mgr.save(s, TREE)
+    mgr.wait()
+    assert latest_step(ckdir) == 20
+    res = mgr.restore(TREE)
+    assert res is not None and res[0] == 20
+
+
+def test_restore_none_when_empty(ckdir):
+    assert restore_checkpoint(ckdir, TREE) is None

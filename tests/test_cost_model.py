@@ -1,0 +1,50 @@
+"""Postal-model tests: paper Eqs. 1-4 and the Figs. 7-8 qualitative claims."""
+import pytest
+
+from repro.core import cost_model as CM
+from repro.core import schedules as S
+from repro.core.topology import RegionMap
+
+
+def test_locality_wins_small_messages_lassen():
+    """Paper Fig. 7: locality-aware beats standard Bruck for small data,
+    improvement grows with processes per region."""
+    b = 4.0   # one 4-byte int per rank
+    gains = []
+    for pl in (4, 8, 16):
+        p = pl * pl * pl
+        std = CM.bruck_model(p, b, CM.LASSEN)
+        loc = CM.locality_bruck_model(p, pl, b, CM.LASSEN)
+        assert loc < std, f"locality should win at pl={pl}"
+        gains.append(std / loc)
+    assert gains[-1] > gains[0], "improvement should grow with ppn"
+
+
+def test_datasize_insensitivity():
+    """Paper Fig. 8: the relative improvement barely moves with data size."""
+    p, pl = 1024 * 16, 16
+    ratios = [CM.bruck_model(p, b, CM.LASSEN) /
+              CM.locality_bruck_model(p, pl, b, CM.LASSEN)
+              for b in (4, 16, 64, 256)]
+    assert max(ratios) / min(ratios) < 3.0
+
+
+def test_schedule_cost_matches_closed_form_order():
+    """Round-mode evaluation of generated schedules preserves the ordering
+    predicted by the closed forms."""
+    p, pl = 64, 8
+    region = RegionMap(p, pl)
+    costs = {}
+    for alg in ("bruck", "locality_bruck", "hierarchical", "multilane"):
+        sched = S.ALGORITHMS[alg](p, pl)
+        costs[alg] = CM.schedule_cost(sched, CM.LASSEN, 4.0, region)
+    assert costs["locality_bruck"] < costs["bruck"]
+
+
+def test_eager_rendezvous_split():
+    pp = CM.LASSEN.nonlocal_
+    small, big = pp.msg_cost(1000), pp.msg_cost(10000)
+    assert big > small
+    # crossing the 8192-byte boundary switches parameter sets
+    assert pp.msg_cost(8191) != pytest.approx(
+        pp.msg_cost(8192) * 8191 / 8192, rel=0.01)

@@ -1,0 +1,63 @@
+"""HLO collective-scan unit tests on synthetic HLO text."""
+from repro.core.hlo_analysis import (Roofline, collective_stats, _shape_bytes)
+
+HLO = """
+HloModule test
+  %x = bf16[256,4096]{1,0} parameter(0)
+  %ag = bf16[256,65536]{1,0} all-gather(bf16[256,4096]{1,0} %x), dimensions={1}
+  %ar = f32[1024]{0} all-reduce(f32[1024]{0} %y), to_apply=%add
+  %cp = f32[64,64]{1,0} collective-permute(f32[64,64]{1,0} %z), source_target_pairs={{0,1},{1,0},{2,3},{3,2}}
+  %cps = (f32[8]{0}, f32[8]{0}) collective-permute-start(f32[8]{0} %w), source_target_pairs={{0,2},{2,0}}
+  %cpd = f32[8]{0} collective-permute-done((f32[8]{0}, f32[8]{0}) %cps)
+  %rs = bf16[16]{0} reduce-scatter(bf16[256]{0} %q), dimensions={0}
+"""
+
+
+def test_shape_bytes():
+    assert _shape_bytes("bf16[256,4096]") == 256 * 4096 * 2
+    assert _shape_bytes("f32[1024]") == 4096
+    assert _shape_bytes("(f32[8], f32[8])") == 64
+
+
+def test_collective_scan_counts_and_bytes():
+    st = collective_stats(HLO)
+    assert st.counts["all-gather"] == 1
+    assert st.counts["all-reduce"] == 1
+    assert st.counts["collective-permute"] == 2    # plain + start (done skipped)
+    assert st.counts["reduce-scatter"] == 1
+    assert st.bytes_["all-gather"] == 256 * 65536 * 2
+    assert st.bytes_["reduce-scatter"] == 32
+
+
+def test_permute_locality_classification():
+    pod = {0: 0, 1: 0, 2: 1, 3: 1}
+    st = collective_stats(HLO, pod)
+    # {0,1},{1,0} local; {2,3},{3,2} local; {0,2},{2,0} non-local
+    assert st.permute_edges_local == 4
+    assert st.permute_edges_nonlocal == 2
+
+
+def test_roofline_terms():
+    # all inputs PER-DEVICE except model_flops (global)
+    r = Roofline(flops=197e12, hbm_bytes=819e9, collective_bytes=50e9,
+                 n_chips=256, model_flops=197e12 * 128)
+    assert abs(r.compute_s - 1.0) < 1e-9        # hlo == model/chip/2 < hlo
+    assert abs(r.memory_s - 1.0) < 1e-9
+    assert abs(r.collective_s - 1.0) < 1e-9
+    assert abs(r.useful_fraction - 0.5) < 1e-9
+    assert abs(r.roofline_fraction - 0.5) < 1e-9
+    # compute floor kicks in when the scan-undercounted HLO flops are low
+    r2 = Roofline(flops=1e9, hbm_bytes=819e9, collective_bytes=0,
+                  n_chips=256, model_flops=197e12 * 256)
+    assert abs(r2.compute_s - 1.0) < 1e-9
+    assert r2.dominant in ("compute", "memory")
+    assert abs(r2.useful_fraction - 1.0) < 1e-9
+
+
+def test_autotune_prefers_locality_for_small_messages():
+    from repro.core.autotune import model_costs, pick_allgather
+    pick = pick_allgather(p=4096, p_local=16, nbytes_per_rank=8,
+                          machine="lassen")
+    costs = model_costs(4096, 16, 8, "lassen")
+    assert costs["locality_bruck"] < costs["bruck"]
+    assert pick in ("locality_bruck", "multilane")

@@ -1,0 +1,123 @@
+"""Per-kernel validation: shape/dtype sweeps, interpret-mode Pallas vs the
+pure-jnp oracle (assignment deliverable c)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.flash import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.rmsnorm.rmsnorm import rmsnorm_pallas
+from repro.kernels.ssd.ref import ssd_ref
+from repro.kernels.ssd.ssd import ssd_pallas
+
+TOL = {jnp.float32: 2e-5, jnp.bfloat16: 2e-2}
+
+
+# ---------------------------------------------------------------------------
+# RMSNorm
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("shape", [(8, 128), (3, 7, 256), (2, 64, 512)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm(shape, dtype):
+    k = jax.random.PRNGKey(0)
+    x = jax.random.normal(k, shape, dtype)
+    sc = (jax.random.normal(jax.random.PRNGKey(1), (shape[-1],)) * 0.2)
+    out = rmsnorm_pallas(x, sc, interpret=True)
+    ref = rmsnorm_ref(x, sc)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=TOL[dtype], rtol=TOL[dtype])
+
+
+# ---------------------------------------------------------------------------
+# Flash attention
+# ---------------------------------------------------------------------------
+CASES = [
+    dict(causal=True),
+    dict(causal=False),
+    dict(causal=True, window=32),
+    dict(causal=True, chunk=32),
+    dict(causal=True, cap=30.0),
+    dict(causal=True, window=16, cap=50.0),
+]
+
+
+@pytest.mark.parametrize("case", CASES)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_variants(case, dtype):
+    B, S, H, KV, D = 2, 128, 4, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D), dtype)
+    k = jax.random.normal(ks[1], (B, S, KV, D), dtype)
+    v = jax.random.normal(ks[2], (B, S, KV, D), dtype)
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True,
+                          **case)
+    ref = attention_ref(q, k, v, **case)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=5 * TOL[dtype], rtol=5 * TOL[dtype])
+
+
+@pytest.mark.parametrize("shape", [(1, 64, 2, 1, 32), (2, 256, 8, 8, 16),
+                                   (1, 96, 6, 3, 64)])
+def test_flash_shapes(shape):
+    B, S, H, KV, D = shape
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    ref = attention_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5,
+                               rtol=2e-5)
+
+
+def test_flash_uneven_lengths_fall_back_single_block():
+    B, S, H, KV, D = 1, 48, 2, 2, 32      # S not divisible by 32
+    ks = jax.random.split(jax.random.PRNGKey(2), 3)
+    q = jax.random.normal(ks[0], (B, S, H, D))
+    k = jax.random.normal(ks[1], (B, S, KV, D))
+    v = jax.random.normal(ks[2], (B, S, KV, D))
+    out = flash_attention(q, k, v, block_q=32, block_k=32, interpret=True)
+    np.testing.assert_allclose(np.asarray(out),
+                               np.asarray(attention_ref(q, k, v)),
+                               atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------------------
+# SSD (Mamba2)
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("dims", [(2, 128, 4, 16, 1, 32), (1, 64, 2, 8, 2, 16),
+                                  (2, 96, 6, 32, 3, 8)])
+def test_ssd_kernel(dims):
+    Bt, S, H, P, G, N = dims
+    ks = jax.random.split(jax.random.PRNGKey(0), 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (Bt, S, G, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bt, S, G, N)) * 0.5
+    Q = 32
+    y1, h1 = ssd_pallas(x, dt, A, B, C, Q=Q, interpret=True)
+    y2, h2 = ssd_ref(x, dt, A, B, C, Q=Q)
+    scale = float(jnp.max(jnp.abs(y2))) + 1e-6
+    assert float(jnp.max(jnp.abs(y1 - y2))) / scale < 1e-5
+    assert float(jnp.max(jnp.abs(h1 - h2))) < 1e-4
+
+
+def test_ssd_chunk_invariance():
+    """Same result whatever the chunk size (the state carry is exact)."""
+    Bt, S, H, P, G, N = 1, 128, 2, 8, 1, 16
+    ks = jax.random.split(jax.random.PRNGKey(7), 5)
+    x = jax.random.normal(ks[0], (Bt, S, H, P))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bt, S, H)))
+    A = -jnp.exp(jax.random.uniform(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (Bt, S, G, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bt, S, G, N)) * 0.5
+    outs = [ssd_pallas(x, dt, A, B, C, Q=q, interpret=True)[0]
+            for q in (16, 32, 128)]
+    for o in outs[1:]:
+        np.testing.assert_allclose(np.asarray(outs[0]), np.asarray(o),
+                                   atol=1e-4, rtol=1e-4)

@@ -1,0 +1,57 @@
+"""Ring-buffer KV caches for windowed/chunked attention (§Perf iteration 7):
+prefill+decode with a W-slot ring must match the full teacher-forced
+forward even after the ring wraps (S > W)."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro import configs
+from repro.models import transformer
+from repro.models.transformer import cache_specs, ring_cache_len
+
+B = 2
+
+
+@pytest.mark.parametrize("arch,S", [("h2o-danube-3-4b", 96),
+                                    ("gemma2-9b", 96),
+                                    ("llama4-scout-17b-a16e", 80)])
+def test_ring_wraps_match_full_forward(arch, S):
+    cfg = configs.get_smoke(arch)         # reduced window/chunk = 64 < S
+    if cfg.n_experts:
+        cfg = dataclasses.replace(cfg, capacity_factor=64.0)
+    cfg = dataclasses.replace(cfg, n_layers=4)
+    rng = jax.random.PRNGKey(0)
+    params = transformer.init_params(rng, cfg)
+    tokens = jax.random.randint(rng, (B, S + 3), 0, cfg.vocab_size)
+    full, _, _ = transformer.forward(params, cfg, tokens, mode="train")
+    lg, _, cache = transformer.forward(params, cfg, tokens[:, :S],
+                                       mode="prefill", cache_len=S + 3)
+    f32 = lambda t: t.astype(jnp.float32)
+    assert float(jnp.max(jnp.abs(f32(full[:, S - 1:S]) - f32(lg)))) < 0.05
+    for t in range(3):
+        lg, _, cache = transformer.forward(params, cfg,
+                                           tokens[:, S + t:S + t + 1],
+                                           cache=cache)
+        err = float(jnp.max(jnp.abs(f32(full[:, S + t:S + t + 1]) - f32(lg))))
+        assert err < 0.05, f"decode step {t}: {err}"
+
+
+def test_ring_cache_sizes():
+    cfg = configs.get("h2o-danube-3-4b")
+    specs = cache_specs(cfg, batch=1, cache_len=524_288)
+    ls = {l.shape[-3] for l in jax.tree.leaves(specs)
+          if hasattr(l, "shape") and len(l.shape) >= 4}
+    assert ls == {cfg.window}, ls          # every layer windowed -> W slots
+
+    g = configs.get("gemma2-9b")
+    specs = cache_specs(g, batch=1, cache_len=32_768)
+    ls = sorted({l.shape[-3] for l in jax.tree.leaves(specs)
+                 if hasattr(l, "shape") and len(l.shape) >= 4})
+    assert ls == [g.window, 32_768]        # alternating ring/full
+
+    plan = configs.get("llama4-scout-17b-a16e").layer_plan()
+    l4 = configs.get("llama4-scout-17b-a16e")
+    assert ring_cache_len(l4, plan[0]) == l4.chunk
+    assert ring_cache_len(l4, plan[3]) is None      # global-NoPE layer

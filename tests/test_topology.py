@@ -1,0 +1,30 @@
+import pytest
+from hypothesis import given, strategies as st
+
+from repro.core.topology import RegionMap, ceil_log, is_power_of
+
+
+@given(st.integers(1, 64), st.integers(1, 8))
+def test_region_roundtrip(n_regions, p_local):
+    rm = RegionMap(p=n_regions * p_local, p_local=p_local)
+    for rank in range(rm.p):
+        r, l = rm.region_of(rank), rm.local_rank_of(rank)
+        assert rm.rank_of(r, l) == rank
+        assert 0 <= r < rm.n_regions and 0 <= l < p_local
+
+
+@given(st.integers(2, 10), st.integers(1, 10 ** 6))
+def test_ceil_log(base, x):
+    k = ceil_log(base, x)
+    assert base ** k >= x
+    assert k == 0 or base ** (k - 1) < x
+
+
+def test_is_power_of():
+    assert is_power_of(2, 8) and is_power_of(4, 16) and not is_power_of(4, 8)
+    assert is_power_of(3, 27) and not is_power_of(3, 28)
+
+
+def test_indivisible_raises():
+    with pytest.raises(ValueError):
+        RegionMap(p=10, p_local=4)
