@@ -1,14 +1,28 @@
 """Benchmark harness entry: one module per paper table/figure.
 
-``PYTHONPATH=src python -m benchmarks.run [--only fig7,...]``
+``PYTHONPATH=src python -m benchmarks.run [bench] [--only fig7,...]``
+    Prints ``name,us_per_call,derived`` CSV rows per benchmark.
 
-Prints ``name,us_per_call,derived`` CSV rows per benchmark.
+``python benchmarks/run.py tune [--p 16 --p-local 4 ...]``
+    Runs the repro.tuning sweep: measures (or, on CPU containers,
+    deterministically simulates) every collective algorithm across message
+    sizes, persists ``results/tuning_table.json`` — which
+    ``allgather(..., algorithm="auto")`` and ``grad_sync="auto"`` then
+    resolve through — and writes the Fig. 9-style measured-vs-modeled
+    report to ``BENCH_tuning.json``.
 """
 from __future__ import annotations
 
 import argparse
+import os
 import sys
 import traceback
+
+if __package__ in (None, ""):                     # `python benchmarks/run.py`
+    _REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    sys.path.insert(0, _REPO)
+    sys.path.insert(1, os.path.join(_REPO, "src"))
+    __package__ = "benchmarks"
 
 from . import (collective_hlo_audit, fig3_pingpong, fig7_model_scaling,
                fig8_model_datasize, fig9_measured, roofline)
@@ -23,12 +37,8 @@ BENCHES = {
 }
 
 
-def main() -> None:
-    ap = argparse.ArgumentParser()
-    ap.add_argument("--only", default=None,
-                    help="comma-separated subset of " + ",".join(BENCHES))
-    args = ap.parse_args()
-    names = args.only.split(",") if args.only else list(BENCHES)
+def run_benches(only: str | None) -> None:
+    names = only.split(",") if only else list(BENCHES)
     print("name,us_per_call,derived")
     failed = []
     for name in names:
@@ -40,6 +50,26 @@ def main() -> None:
     if failed:
         print(f"FAILED benchmarks: {failed}", file=sys.stderr)
         sys.exit(1)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    sub = ap.add_subparsers(dest="cmd")
+    bench = sub.add_parser("bench", help="run the figure benchmarks (default)")
+    bench.add_argument("--only", default=None,
+                       help="comma-separated subset of " + ",".join(BENCHES))
+    sub.add_parser("tune", help="run the collective tuning sweep",
+                   add_help=False)
+    # default to `bench` for backward compatibility: `run.py --only fig7`
+    argv = sys.argv[1:]
+    if argv[:1] == ["tune"]:
+        from repro.tuning import sweep
+        sweep.main(argv[1:])
+        return
+    if argv[:1] != ["bench"] and any(a.startswith("--only") for a in argv):
+        argv = ["bench"] + argv
+    args = ap.parse_args(argv or ["bench"])
+    run_benches(getattr(args, "only", None))
 
 
 if __name__ == "__main__":

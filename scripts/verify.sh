@@ -1,0 +1,17 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md).
+#
+# Single-process smoke tests deliberately run on the one real CPU device
+# (tests/conftest.py); multi-device tests and the benchmarks spawn
+# subprocesses that force their own host device count via
+# --xla_force_host_platform_device_count, overriding whatever XLA_FLAGS we
+# export here. We therefore only propagate the caller's XLA_FLAGS and keep
+# the flag available for ad-hoc runs:
+#
+#   XLA_FLAGS=--xla_force_host_platform_device_count=8 scripts/verify.sh
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+python -m pytest -x -q "$@"

@@ -1,0 +1,152 @@
+"""Backfill newer public JAX APIs onto older installs.
+
+The codebase is written against the current JAX API surface
+(``jax.shard_map``, ``jax.set_mesh``, ``jax.typeof`` + varying-manual-axes
+tracking, ``lax.pcast``, ``lax.axis_size``). Some deployment containers pin an
+older jax (0.4.x) where these live elsewhere or do not exist; this module
+installs semantically equivalent fallbacks at ``import repro`` time so the
+same source runs on both. Every patch is guarded by ``hasattr`` — on a
+current JAX this module is a no-op.
+
+Fallback semantics on old JAX:
+
+* ``jax.shard_map(f, mesh=..., in_specs=..., out_specs=..., axis_names=S,
+  check_vma=...)`` maps onto ``jax.experimental.shard_map.shard_map`` with
+  ``auto = mesh.axis_names - S`` and ``check_rep=False`` (0.4.x replication
+  checking predates vma tracking and rejects some valid ppermute patterns).
+* ``jax.set_mesh(mesh)`` enters the mesh's context manager and keeps it
+  active for the life of the process (old JAX has no global mesh setter,
+  only the ``with mesh:`` ambient context).
+* ``jax.typeof(x).vma`` returns a universal axis set, so callers that
+  normalize varying-ness (``a not in jax.typeof(x).vma``) see every axis as
+  already varying and skip the ``lax.pcast`` — correct because old
+  shard_map with ``check_rep=False`` performs no replication tracking.
+* ``lax.axis_size(name)`` falls back to the ``lax.psum(1, name)`` idiom,
+  which constant-folds to a Python int at trace time.
+"""
+from __future__ import annotations
+
+import types
+
+
+class _UniversalAxisSet(frozenset):
+    """A frozenset that claims to contain every element (vma stand-in)."""
+
+    def __contains__(self, item) -> bool:  # noqa: D105
+        return True
+
+
+_ACTIVE_MESH_CTX: list = []
+
+# True when this install predates native jax.shard_map (and with it the vma
+# tracking that makes partial-auto + in-body sharding constraints work). On
+# these versions XLA's SPMD partitioner RET_CHECKs on any sharding
+# annotation inside a partially-manual computation (spmd_partitioner.cc
+# "Incompatible manual sharding"), so activation-constraint hooks must be
+# disabled inside manual-DP shard_map bodies (see train/sharding.py).
+LEGACY_PARTIAL_AUTO = False
+
+
+def scan_compat(f, init, xs, length=None):
+    """``lax.scan`` that degrades to a Python unroll on legacy JAX.
+
+    Old XLA crashes (``Check failed: sharding.IsManualSubgroup()``) when a
+    while-loop variable carries an auto-axis sharding inside a partially
+    manual shard_map body — which is exactly what a scan over
+    model-sharded stacked layer params is. The unroll trades compile time
+    for correctness; on current JAX this is ``lax.scan`` verbatim.
+    """
+    import jax
+    import jax.numpy as jnp
+
+    if not LEGACY_PARTIAL_AUTO:
+        return jax.lax.scan(f, init, xs, length=length)
+    if length is None:
+        length = jax.tree_util.tree_leaves(xs)[0].shape[0]
+    carry, ys = init, []
+    for i in range(length):
+        xi = jax.tree_util.tree_map(lambda t: t[i], xs)
+        carry, y = f(carry, xi)
+        ys.append(y)
+    stacked = jax.tree_util.tree_map(lambda *e: jnp.stack(e), *ys)
+    return carry, stacked
+
+
+def install() -> None:
+    global LEGACY_PARTIAL_AUTO
+    import jax
+    from jax import lax
+
+    if not hasattr(jax, "shard_map"):
+        LEGACY_PARTIAL_AUTO = True
+        # Newer JAX defaults to the partitionable threefry, making random
+        # values independent of the output sharding. Old JAX defaults to
+        # False, where the same PRNGKey yields DIFFERENT params under
+        # different out_shardings (e.g. FSDP vs replicated init) — align
+        # with the new default.
+        try:
+            jax.config.update("jax_threefry_partitionable", True)
+        except AttributeError:
+            pass
+        from jax.experimental.shard_map import shard_map as _shard_map
+
+        def shard_map(f, *, mesh, in_specs, out_specs, axis_names=None,
+                      check_vma=True, **_kw):
+            auto = frozenset()
+            if axis_names is not None:
+                auto = frozenset(mesh.axis_names) - frozenset(axis_names)
+            return _shard_map(f, mesh, in_specs, out_specs,
+                              check_rep=False, auto=auto)
+
+        jax.shard_map = shard_map
+
+    if not hasattr(jax, "set_mesh"):
+        def set_mesh(mesh):
+            while _ACTIVE_MESH_CTX:
+                _ACTIVE_MESH_CTX.pop().__exit__(None, None, None)
+            if mesh is not None:
+                mesh.__enter__()
+                _ACTIVE_MESH_CTX.append(mesh)
+            return mesh
+
+        jax.set_mesh = set_mesh
+
+    if not hasattr(jax, "typeof"):
+        _all_axes = _UniversalAxisSet()
+
+        def typeof(x):
+            shape = getattr(x, "shape", ())
+            dtype = getattr(x, "dtype", None)
+            return types.SimpleNamespace(shape=shape, dtype=dtype,
+                                         vma=_all_axes)
+
+        jax.typeof = typeof
+
+    if not hasattr(lax, "axis_size"):
+        def axis_size(name):
+            return lax.psum(1, name)
+
+        lax.axis_size = axis_size
+
+    try:
+        jax.ShapeDtypeStruct((1,), "float32", vma=frozenset())
+    except TypeError:
+        _SDS = jax.ShapeDtypeStruct
+
+        class ShapeDtypeStruct(_SDS):
+            """Accepts (and drops) the newer ``vma`` kwarg on old JAX."""
+
+            def __init__(self, shape, dtype, *args, vma=None, **kwargs):
+                super().__init__(shape, dtype, *args, **kwargs)
+
+        ShapeDtypeStruct.__name__ = "ShapeDtypeStruct"
+        jax.ShapeDtypeStruct = ShapeDtypeStruct
+
+    if not hasattr(lax, "pcast"):
+        # vma tracking does not exist on old JAX: casting to "varying" is an
+        # identity (nothing tracks the annotation), which matches the
+        # check_rep=False shard_map fallback above.
+        def pcast(x, axes, to=None):
+            return x
+
+        lax.pcast = pcast

@@ -5,6 +5,15 @@ every allgather algorithm and return the cheapest. The train step's
 ``grad_sync="auto"`` resolves through this with the TPU parameter set; the
 benchmarks sweep it across the paper's (Lassen/Quartz) parameter sets to
 reproduce Figs. 7–8.
+
+When a persisted tuning table exists (``repro.tuning``), the measured
+crossover tables take precedence over the closed forms — the paper's own
+Fig. 9 shows the model mispredicts crossovers on real networks, so
+measurements win whenever we have them. The table is consulted only for
+the *deployment* selection (``machine`` left unset): passing an explicit
+machine parameter set asks for that machine's closed forms (the figure
+benchmarks do), which a table measured elsewhere must not override.
+``use_table=False`` additionally forces pure-model behaviour.
 """
 from __future__ import annotations
 
@@ -12,7 +21,16 @@ from .cost_model import MACHINES, MODELS, MachineParams
 
 
 def pick_allgather(p: int, p_local: int, nbytes_per_rank: float,
-                   machine: MachineParams | str = "tpu_v5e") -> str:
+                   machine: MachineParams | str | None = None, *,
+                   dtype: str = "float32", use_table: bool = True) -> str:
+    if machine is None:
+        machine = "tpu_v5e"
+        if use_table:
+            from repro.tuning.policy import default_policy
+            sel = default_policy().select("allgather", p, p_local,
+                                          nbytes_per_rank, dtype)
+            if sel.source == "table":
+                return sel.algorithm
     if isinstance(machine, str):
         machine = MACHINES[machine]
     if p_local <= 1 or p <= p_local:

@@ -284,9 +284,30 @@ ALLGATHERS = {
 }
 
 
+def _resolve_auto(collective: str, x: jax.Array, outer: tuple[str, ...],
+                  local: tuple[str, ...]) -> str:
+    """Trace-time resolution of ``algorithm="auto"`` through repro.tuning.
+
+    Axis sizes and the shard's byte count are Python ints during tracing, so
+    the choice is static: the jitted program contains exactly the selected
+    schedule (resolve again to re-tune, e.g. after a sweep).
+    """
+    from repro.tuning.policy import resolve
+    p_local = _size(local) if local else 1
+    p = _size(outer + local)
+    nbytes = x.size * x.dtype.itemsize
+    return resolve(collective, p, p_local, nbytes, str(x.dtype))
+
+
 def allgather(x: jax.Array, outer: Axes, local: Axes = (), *,
               algorithm: str = "locality_bruck", tiled: bool = False) -> jax.Array:
-    """Gather ``x`` shards over ``outer + local`` mesh axes (region-major)."""
+    """Gather ``x`` shards over ``outer + local`` mesh axes (region-major).
+
+    ``algorithm="auto"`` selects via the tuning policy: the persisted
+    measured crossover table when one exists, the postal model otherwise.
+    """
+    if algorithm == "auto":
+        algorithm = _resolve_auto("allgather", x, _tup(outer), _tup(local))
     if not _tup(local):
         algorithm = "bruck" if algorithm in ("locality_bruck", "hierarchical",
                                              "multilane") else algorithm
@@ -416,8 +437,11 @@ def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
 
 def allreduce(x: jax.Array, outer: Axes, local: Axes = (), *,
               algorithm: str = "locality", outer_algorithm: str = "rhd") -> jax.Array:
-    """Allreduce dispatcher: 'locality' (paper-structured) or 'xla' (lax.psum)."""
+    """Allreduce dispatcher: 'locality' (paper-structured), 'xla' (lax.psum),
+    or 'auto' (tuning policy picks between the two)."""
     outer, local = _tup(outer), _tup(local)
+    if algorithm == "auto":
+        algorithm = _resolve_auto("allreduce", x, outer, local)
     if algorithm == "xla" or (not local) or _size(local) == 1:
         return lax.psum(x, outer + local)
     if algorithm == "locality":

@@ -1,0 +1,26 @@
+"""Pallas-TPU API compatibility across JAX versions.
+
+``pltpu.TPUCompilerParams`` was renamed to ``pltpu.CompilerParams`` (and
+``TPUInterpretParams`` to ``InterpretParams``) in newer JAX releases. The
+kernels target the new names; this shim resolves whichever the installed
+JAX provides so the same kernel source compiles on both.
+"""
+from __future__ import annotations
+
+from jax.experimental.pallas import tpu as pltpu
+
+CompilerParams = getattr(pltpu, "CompilerParams", None) \
+    or getattr(pltpu, "TPUCompilerParams")
+
+_InterpretParams = getattr(pltpu, "InterpretParams", None) \
+    or getattr(pltpu, "TPUInterpretParams", None)
+
+
+def interpret_params():
+    """Value for ``pallas_call(interpret=...)`` requesting TPU-interpret mode.
+
+    Newer JAX takes an ``InterpretParams`` instance (enables the
+    cross-device DMA interpreter); older JAX only supports the boolean
+    single-device interpreter.
+    """
+    return _InterpretParams() if _InterpretParams is not None else True

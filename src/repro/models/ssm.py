@@ -130,7 +130,8 @@ def ssd_chunked(x, dt, A, B, C, Q: int, h0=None, *, precise: bool = False):
         h = jnp.exp(dec)[..., None, None] * h + s.astype(f32)
         return h, h_out
 
-    h_fin, h_prev = jax.lax.scan(
+    from repro._jax_compat import scan_compat
+    h_fin, h_prev = scan_compat(
         step, h0, (seg_end.transpose(1, 0, 2), S_c.transpose(1, 0, 2, 3, 4)))
     h_prev = h_prev.transpose(1, 0, 2, 3, 4)          # (Bt,nc,H,N,P)
 

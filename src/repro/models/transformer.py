@@ -233,7 +233,8 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
 
     body_fn = jax.checkpoint(body) if (remat and mode == "train") else body
     scan_cache = cache["blocks"] if decode else None
-    x, (aux_s, scan_ncs) = jax.lax.scan(
+    from repro._jax_compat import scan_compat
+    x, (aux_s, scan_ncs) = scan_compat(
         body_fn, x, (params["blocks"], scan_cache), length=reps)
     aux_total += jnp.sum(aux_s)
 

@@ -46,9 +46,18 @@ class StepMonitor:
 
     _ewma: float = 0.0
     _n: int = 0
+    _last_algorithm: str | None = None
 
-    def record(self, dt: float) -> list[str]:
+    def record(self, dt: float, algorithm: str | None = None) -> list[str]:
+        """Record one step time; ``algorithm`` is the collective algorithm
+        the step ran with (from the tuning policy / grad_sync resolution).
+        An event is emitted on the first step and whenever it changes —
+        e.g. after an elastic restart onto a different topology re-resolves
+        ``grad_sync="auto"`` to a different schedule."""
         events = []
+        if algorithm is not None and algorithm != self._last_algorithm:
+            events.append(f"collective: {algorithm}")
+            self._last_algorithm = algorithm
         self._n += 1
         if self._n <= self.warmup:          # ignore compile-dominated steps
             self._ewma = dt if self._ewma == 0 else (

@@ -35,17 +35,26 @@ def cache_specs(cfg, batch: int, cache_len: int):
     return mod.cache_specs(cfg, batch, cache_len)
 
 
+def _cache_layout(mesh, batch: int) -> tuple[bool, str | None]:
+    """(batch_sharded, seq_axis): the one placement decision both the cache
+    shardings and the combine resolution key off — kept in one place so
+    they cannot drift."""
+    dp = dp_axes(mesh)
+    dp_size = max(1, int(np.prod([_axsize(mesh, a) for a in dp])))
+    batch_sharded = bool(dp) and batch % dp_size == 0 and batch >= dp_size
+    seq_ax = "data" if "data" in mesh.axis_names else None
+    return batch_sharded, seq_ax
+
+
 def cache_shardings(cfg, mesh, batch: int, cache_len: int):
     """PartitionSpec pytree matching cache_specs."""
     dp = dp_axes(mesh)
-    dp_size = max(1, int(np.prod([_axsize(mesh, a) for a in dp])))
     m = _axsize(mesh, "model")
 
     def on_model(dim: int) -> bool:    # shardable over a real 'model' axis?
         return m > 1 and dim % m == 0
 
-    seq_ax = "data" if "data" in mesh.axis_names else None
-    batch_sharded = dp and batch % dp_size == 0 and batch >= dp_size
+    batch_sharded, seq_ax = _cache_layout(mesh, batch)
 
     def visit(path, leaf):
         keys = tuple(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
@@ -106,6 +115,45 @@ class ServeArtifacts:
     param_shardings: Any
     cache_shardings_: Any
     abstract_params: Any
+    combine: Any = None       # CombineChoice for the decode cache-combine
+
+
+@dataclasses.dataclass(frozen=True)
+class CombineChoice:
+    """Resolved collective for the sequence-parallel decode combine.
+
+    When the KV cache is sequence-sharded over 'data' (B=1 long-context),
+    every decode step reduces per-shard partial attention stats — o (B,1,H,D)
+    plus the logsumexp accumulator (B,1,H) in fp32 — across the sequence
+    shards. ``algorithm`` is what the tuning policy picks for an allreduce
+    of that payload on this topology; "xla" keeps GSPMD's own combine,
+    "locality" routes it through the paper-structured allreduce.
+    """
+
+    algorithm: str            # "xla" | "locality" | "none" (no seq sharding)
+    source: str               # "table" | "model" | "n/a"
+    nbytes: int               # per-step combine payload in bytes
+    p: int                    # ranks participating in the combine
+    p_local: int
+
+
+def resolve_cache_combine(cfg, mesh, batch: int, cache_len: int) -> CombineChoice:
+    """Resolve the decode cache-combine collective through repro.tuning."""
+    batch_sharded, seq_ax = _cache_layout(mesh, batch)
+    seq_sharded = (not batch_sharded and seq_ax is not None
+                   and _axsize(mesh, seq_ax) > 1
+                   and cache_len % _axsize(mesh, seq_ax) == 0)
+    if not seq_sharded:
+        return CombineChoice("none", "n/a", 0, 1, 1)
+    H = getattr(cfg, "n_heads", 1)
+    D = getattr(cfg, "head_dim_", getattr(cfg, "d_model", 0) // max(H, 1))
+    nbytes = batch * H * (D + 1) * 4          # fp32 o + logsumexp per step
+    # the cache L dim is sharded over 'data' ONLY (pods hold replicas), so
+    # the combine spans exactly the 'data' ranks — one region, all ICI
+    p = p_local = _axsize(mesh, seq_ax)
+    from repro.tuning.policy import default_policy
+    sel = default_policy().select("allreduce", p, p_local, nbytes)
+    return CombineChoice(sel.algorithm, sel.source, nbytes, p, p_local)
 
 
 def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
@@ -162,13 +210,16 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
                         donate_argnums=(1,), out_shardings=(None, c_sh))
     return ServeArtifacts(prefill_fn=prefill_fn, decode_fn=decode_fn,
                           param_shardings=p_sh, cache_shardings_=c_sh,
-                          abstract_params=a_params)
+                          abstract_params=a_params,
+                          combine=resolve_cache_combine(cfg, mesh, batch,
+                                                        cache_len))
 
 
 class Engine:
     """Minimal batched greedy-decoding engine over the jitted steps."""
 
-    def __init__(self, cfg, mesh, params, *, batch: int, cache_len: int):
+    def __init__(self, cfg, mesh, params, *, batch: int, cache_len: int,
+                 log: Callable[[str], None] | None = None):
         self.cfg = cfg
         self.art = make_serve_fns(cfg, mesh, batch=batch, cache_len=cache_len)
         params = jax.tree.map(
@@ -176,6 +227,11 @@ class Engine:
             params)
         self.params = jax.device_put(params, self.art.param_shardings)
         self.cache_len = cache_len
+        self.combine = self.art.combine
+        if log and self.combine.algorithm != "none":
+            log(f"[engine] cache-combine: {self.combine.algorithm} "
+                f"({self.combine.source}, {self.combine.nbytes} B/step, "
+                f"p={self.combine.p} p_local={self.combine.p_local})")
 
     def generate(self, prompts: np.ndarray, max_new: int,
                  extra: dict | None = None) -> np.ndarray:

@@ -127,6 +127,9 @@ class StepArtifacts:
     batch_shardings: Any
     abstract_state: Any               # ShapeDtypeStruct pytree
     pspecs: Any
+    grad_sync: str = ""               # resolved mode (never "auto")
+    grad_algorithm: str = ""          # collective algorithm behind it
+    grad_sync_source: str = ""        # "table" | "model" | "explicit"
 
 
 def abstract_batch(cfg, shape) -> dict:
@@ -168,8 +171,13 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
     model = encdec if cfg.family == "audio" else transformer
     loss_fn = make_loss_fn(cfg, remat=remat)
 
+    grad_algorithm = grad_sync
+    grad_sync_source = "explicit"
     if grad_sync == "auto":
-        from repro.core.autotune import pick_allgather
+        # resolve through the tuning policy with the model's gradient size
+        # and the mesh topology: measured crossover table when persisted,
+        # postal-model prior otherwise (paper Eqs. 2-4 as a runtime policy).
+        from repro.tuning.policy import default_policy
         import numpy as _np
         a_p = jax.eval_shape(lambda k: model.init_params(k, cfg),
                              jax.random.PRNGKey(0))
@@ -178,9 +186,11 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
         p_l = (mesh.devices.shape[names.index("data")]
                if "data" in names else 1)
         r = (mesh.devices.shape[names.index("pod")] if "pod" in names else 1)
-        algo = pick_allgather(r * p_l, p_l, grad_bytes / max(r * p_l, 1))
-        grad_sync = "locality" if algo in ("locality_bruck", "multilane",
-                                           "hierarchical") else "flat_psum"
+        # allreduce convention: nbytes is the FULL reduced vector (the
+        # executors send nbytes/p per message themselves)
+        sel = default_policy().select("allreduce", r * p_l, p_l, grad_bytes)
+        grad_algorithm, grad_sync_source = sel.algorithm, sel.source
+        grad_sync = "locality" if sel.algorithm == "locality" else "flat_psum"
 
     # --- abstract state + shardings ------------------------------------------
     a_params = jax.eval_shape(
@@ -219,7 +229,8 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
         def sbody(acc, mb):
             return jax.tree.map(lambda a, b: a + b, acc, one_fn(mb)), None
 
-        acc, _ = jax.lax.scan(sbody, init, mbs)
+        from repro._jax_compat import scan_compat
+        acc, _ = scan_compat(sbody, init, mbs)
         return jax.tree.map(lambda t: t / grad_accum, acc)
 
     # --- gradient computation ---------------------------------------------
@@ -269,6 +280,16 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                                      assume_varying=True)
             return jnp.moveaxis(full, 0, k)
 
+        def sync_pod(t):
+            if not outer:
+                return t / dp_size
+            return C.allreduce(t, (), outer, algorithm="locality",
+                               outer_algorithm=alg[1]) / dp_size
+
+        def sync_full(t):
+            return C.allreduce(t, outer, local, algorithm=alg[0],
+                               outer_algorithm=alg[1]) / dp_size
+
         def body(params, batch):
             shard = make_shard_fn(mesh, manual_dp=True, seq_shard=seq_shard)
 
@@ -290,16 +311,6 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
             idx_rs = [i for i, k in enumerate(dims) if k >= 0]
             idx_full = [i for i, k in enumerate(dims) if k < 0]
 
-            def sync_pod(t):
-                if not outer:
-                    return t / dp_size
-                return C.allreduce(t, (), outer, algorithm="locality",
-                                   outer_algorithm=alg[1]) / dp_size
-
-            def sync_full(t):
-                return C.allreduce(t, outer, local, algorithm=alg[0],
-                                   outer_algorithm=alg[1]) / dp_size
-
             if idx_rs and fsdp:
                 sub = bucketed_sync([leaves[i] for i in idx_rs], sync_pod,
                                     bucket_mb=bucket_mb, compress=compress)
@@ -315,12 +326,79 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                 lambda t: jax.lax.psum(t, dp) / dp_size, metrics)
             return grads, metrics
 
-        in_specs = (param_in_specs if fsdp else P(),
-                    {k: b_specs[k] for k in b_abstract})
-        out_specs = ((param_in_specs if fsdp else P()), P())
-        grads_of = jax.shard_map(
-            body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-            axis_names=set(dp), check_vma=False)
+        from repro import _jax_compat
+        non_dp = set(mesh.axis_names) - set(dp)
+        if _jax_compat.LEGACY_PARTIAL_AUTO and non_dp:
+            # Legacy XLA cannot partition manual-axis collectives
+            # (ppermute/axis_index/psum) inside a *partially* manual
+            # computation — it RET_CHECKs on the manual-subgroup shardings.
+            # Split paper mode into two regions: fwd/bwd in the partial-auto
+            # shard_map (no collectives; per-shard grads leave stacked on a
+            # fresh leading dp axis), then the locality-aware sync in a
+            # FULLY manual shard_map over every mesh axis, where the
+            # ppermute schedules partition fine. One extra device-local
+            # reshape per leaf; identical numerics and collective schedule.
+            # FSDP degrades to ZeRO-1 semantics here: the in-body Bruck
+            # param gather is also a manual-axis collective, so GSPMD
+            # gathers at the jit boundary instead (in_specs P() below) and
+            # the step's final with_sharding_constraint re-scatters.
+            nogather_dims = jax.tree.map(lambda _: -1, fsdp_dims)
+
+            def _strip_data(sp: P) -> P:
+                ent = []
+                for s in sp:
+                    names = (s,) if isinstance(s, str) else tuple(s or ())
+                    names = tuple(n for n in names if n != "data")
+                    ent.append(names[0] if len(names) == 1
+                               else (names or None))
+                return P(*ent)
+
+            sync_pspecs = jax.tree.map(_strip_data, pspecs,
+                                       is_leaf=lambda x: isinstance(x, P))
+
+            def compute_body(params, batch):
+                shard = make_shard_fn(mesh, manual_dp=True, seq_shard=seq_shard)
+
+                def one(mb):
+                    def sharded_loss(shards):
+                        full = jax.tree.map(_gather, shards, nogather_dims)
+                        return loss_fn(full, mb, shard)
+                    return jax.value_and_grad(sharded_loss, has_aux=True)(params)
+
+                (_, metrics), grads = _accumulated(one, batch)
+                stack = lambda t: t[None]
+                return jax.tree.map(stack, grads), jax.tree.map(stack, metrics)
+
+            def sync_body(grads, metrics):
+                grads = jax.tree.map(lambda t: t[0], grads)
+                leaves, treedef = jax.tree.flatten(grads)
+                leaves = bucketed_sync(leaves, sync_full,
+                                       bucket_mb=bucket_mb, compress=compress)
+                grads = jax.tree.unflatten(treedef, leaves)
+                metrics = jax.tree.map(
+                    lambda t: jax.lax.psum(t[0], dp) / dp_size, metrics)
+                return grads, metrics
+
+            compute = jax.shard_map(
+                compute_body, mesh=mesh,
+                in_specs=(P(), {k: b_specs[k] for k in b_abstract}),
+                out_specs=(P(dp), P(dp)),
+                axis_names=set(dp), check_vma=False)
+            sync_in = jax.tree.map(lambda sp: P(dp, *tuple(sp)), sync_pspecs,
+                                   is_leaf=lambda x: isinstance(x, P))
+            sync = jax.shard_map(
+                sync_body, mesh=mesh, in_specs=(sync_in, P(dp)),
+                out_specs=(sync_pspecs, P()), check_vma=False)
+
+            def grads_of(params, batch):
+                return sync(*compute(params, batch))
+        else:
+            in_specs = (param_in_specs if fsdp else P(),
+                        {k: b_specs[k] for k in b_abstract})
+            out_specs = ((param_in_specs if fsdp else P()), P())
+            grads_of = jax.shard_map(
+                body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                axis_names=set(dp), check_vma=False)
 
     # --- the full step -------------------------------------------------------
     def step(state: TrainState, batch):
@@ -340,7 +418,9 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
     step_fn = jax.jit(step, **jit_kw)
     return StepArtifacts(step_fn=step_fn, state_shardings=state_sh,
                          batch_shardings=batch_sh, abstract_state=a_state,
-                         pspecs=pspecs)
+                         pspecs=pspecs, grad_sync=grad_sync,
+                         grad_algorithm=grad_algorithm,
+                         grad_sync_source=grad_sync_source)
 
 
 def init_state(cfg, mesh, artifacts: StepArtifacts, seed: int = 0) -> TrainState:

@@ -75,6 +75,11 @@ class Trainer:
             optimizer=AdamW(lr=t.lr),
             grad_sync=t.grad_sync, fsdp=t.fsdp, seq_shard=t.seq_shard,
             shape=custom_batch_specs(self.model_cfg, t.global_batch, t.seq_len))
+        if t.grad_sync == "auto":
+            self.log(f"[trainer] grad_sync=auto -> "
+                     f"{self.artifacts.grad_sync} "
+                     f"({self.artifacts.grad_algorithm}, "
+                     f"{self.artifacts.grad_sync_source})")
 
     def _init_or_restore(self) -> None:
         restored = self.ckpt.restore(self.artifacts.abstract_state,
@@ -133,10 +138,12 @@ class Trainer:
                 self.log(f"[trainer] {e} -> recovering")
                 self.recover()
                 continue
-            self.events.extend(self.monitor.record(dt))
+            self.events.extend(self.monitor.record(
+                dt, algorithm=self.artifacts.grad_algorithm))
             self.step += 1
             m = {k: float(v) for k, v in metrics.items()}
             m["step"], m["dt"] = self.step, dt
+            m["grad_algorithm"] = self.artifacts.grad_algorithm
             self.metrics_history.append(m)
             if self.step % t.log_every == 0 or self.step == t.steps:
                 self.log(f"[trainer] step {self.step:5d} "

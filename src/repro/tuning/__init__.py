@@ -1,0 +1,29 @@
+"""Empirical collective autotuning (the measurement half of §4).
+
+The paper selects among allgather algorithms purely from the postal model
+(Eqs. 2-4), but its own measurements (Fig. 9) show the model mispredicts
+crossover points on real networks. This package adds the measurement half:
+
+  measure.py  micro-benchmark harness (wall-clock on a live mesh, or a
+              deterministic schedule-simulated executor on CPU containers)
+  cache.py    versioned, atomically-written JSON tuning table keyed by
+              machine fingerprint x topology x collective x dtype x bytes
+  policy.py   selection = measured crossover tables (with hysteresis)
+              backed by the cost-model prior when no table exists
+  sweep.py    offline sweep driver: builds the table + a Fig. 9-style
+              measured-vs-modeled report
+
+``core/autotune.pick_allgather`` and ``core/collectives.allgather(...,
+algorithm="auto")`` resolve through :mod:`repro.tuning.policy`.
+"""
+from . import cache, measure, policy, sweep  # noqa: F401 (submodule access)
+from .cache import SCHEMA_VERSION, SchemaVersionError, TuningCache, make_key
+from .measure import Fingerprint
+from .policy import Policy, Selection, default_policy, resolve, set_default_policy
+
+__all__ = [
+    "cache", "measure", "policy", "sweep",
+    "SCHEMA_VERSION", "SchemaVersionError", "TuningCache", "make_key",
+    "Fingerprint",
+    "Policy", "Selection", "default_policy", "resolve", "set_default_policy",
+]

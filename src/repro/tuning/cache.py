@@ -1,0 +1,159 @@
+"""Persistent tuning table: versioned JSON, atomic writes, schema migration.
+
+One file holds every measured entry for one machine (or several — entries
+are namespaced by fingerprint). Keys are flat strings so the table stays
+human-diffable and mergeable::
+
+    <fingerprint>|p<P>xl<PL>|<collective>|<dtype>|b<bucket_bytes>
+
+``p<P>xl<PL>`` is the region-major topology of the measured shard_map —
+``P`` total ranks split as ``P/PL`` outer (region) ranks x ``PL`` local
+ranks — i.e. the mesh shape with the outer/local axis split applied.
+Message sizes are bucketed to powers of two (one entry per octave): the
+postal model is piecewise log-linear in bytes, so octave resolution locates
+crossovers to within the model's own noise.
+
+Writes go through a tempfile + ``os.replace`` so a crashed sweep can never
+leave a torn table, and every file carries ``schema_version``: older known
+versions are migrated forward at load, newer (or unknown) versions raise
+``SchemaVersionError`` rather than being silently misread.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import tempfile
+from typing import Any, Callable, Iterator
+
+SCHEMA_VERSION = 2
+
+
+class SchemaVersionError(RuntimeError):
+    """Tuning table file has an unknown or future schema version."""
+
+
+def bucket_bytes(nbytes: float) -> int:
+    """Power-of-two byte bucket (>= 1) containing ``nbytes``."""
+    b = 1
+    while b < nbytes:
+        b <<= 1
+    return b
+
+
+def make_key(fingerprint: str, p: int, p_local: int, collective: str,
+             dtype: str, bucket: int) -> str:
+    return f"{fingerprint}|p{p}xl{p_local}|{collective}|{dtype}|b{bucket}"
+
+
+@dataclasses.dataclass
+class Entry:
+    """One measured byte-bucket: per-algorithm cost + the winner."""
+
+    collective: str
+    p: int
+    p_local: int
+    dtype: str
+    bucket: int                    # bytes-per-rank bucket (power of two)
+    costs: dict[str, float]        # algorithm -> seconds (median)
+    source: str                    # "measured" | "simulated"
+
+    @property
+    def best(self) -> str:
+        return min(self.costs, key=self.costs.get)
+
+    def to_json(self) -> dict[str, Any]:
+        return dataclasses.asdict(self)
+
+    @classmethod
+    def from_json(cls, d: dict[str, Any]) -> "Entry":
+        return cls(**d)
+
+
+# ---------------------------------------------------------------------------
+# schema migrations: version -> fn(raw_dict) -> raw_dict at version+1
+# ---------------------------------------------------------------------------
+def _migrate_v1(raw: dict[str, Any]) -> dict[str, Any]:
+    """v1 lacked per-entry ``source`` (everything was wall-clock measured)."""
+    for e in raw.get("entries", {}).values():
+        e.setdefault("source", "measured")
+    raw["schema_version"] = 2
+    return raw
+
+
+_MIGRATIONS: dict[int, Callable[[dict[str, Any]], dict[str, Any]]] = {
+    1: _migrate_v1,
+}
+
+
+class TuningCache:
+    """In-memory view of one tuning table file."""
+
+    def __init__(self, entries: dict[str, Entry] | None = None):
+        self.entries: dict[str, Entry] = dict(entries or {})
+
+    # ---- access ----------------------------------------------------------
+    def put(self, fingerprint: str, entry: Entry) -> None:
+        key = make_key(fingerprint, entry.p, entry.p_local, entry.collective,
+                       entry.dtype, entry.bucket)
+        self.entries[key] = entry
+
+    def get(self, fingerprint: str, p: int, p_local: int, collective: str,
+            dtype: str, bucket: int) -> Entry | None:
+        return self.entries.get(
+            make_key(fingerprint, p, p_local, collective, dtype, bucket))
+
+    def group(self, fingerprint: str, p: int, p_local: int, collective: str,
+              dtype: str) -> list[Entry]:
+        """All buckets for one (topology, collective, dtype), ascending."""
+        prefix = make_key(fingerprint, p, p_local, collective, dtype, 0)
+        prefix = prefix.rsplit("|", 1)[0] + "|b"
+        found = [e for k, e in self.entries.items() if k.startswith(prefix)]
+        return sorted(found, key=lambda e: e.bucket)
+
+    def __len__(self) -> int:
+        return len(self.entries)
+
+    def __iter__(self) -> Iterator[Entry]:
+        return iter(self.entries.values())
+
+    # ---- persistence -----------------------------------------------------
+    def save(self, path: str) -> None:
+        """Atomic write (tempfile in the target dir + os.replace)."""
+        payload = {
+            "schema_version": SCHEMA_VERSION,
+            "entries": {k: e.to_json() for k, e in sorted(self.entries.items())},
+        }
+        d = os.path.dirname(os.path.abspath(path))
+        os.makedirs(d, exist_ok=True)
+        fd, tmp = tempfile.mkstemp(dir=d, prefix=".tuning_", suffix=".json")
+        try:
+            with os.fdopen(fd, "w") as f:
+                json.dump(payload, f, indent=1, sort_keys=True)
+            os.replace(tmp, path)
+        except BaseException:
+            if os.path.exists(tmp):
+                os.unlink(tmp)
+            raise
+
+    @classmethod
+    def load(cls, path: str) -> "TuningCache":
+        with open(path) as f:
+            raw = json.load(f)
+        version = raw.get("schema_version")
+        if not isinstance(version, int) or version < 1:
+            raise SchemaVersionError(
+                f"{path}: missing/invalid schema_version {version!r}")
+        while version < SCHEMA_VERSION:
+            migrate = _MIGRATIONS.get(version)
+            if migrate is None:
+                raise SchemaVersionError(
+                    f"{path}: no migration from schema v{version}")
+            raw = migrate(raw)
+            version = raw["schema_version"]
+        if version != SCHEMA_VERSION:
+            raise SchemaVersionError(
+                f"{path}: schema v{version} is newer than supported "
+                f"v{SCHEMA_VERSION} — refusing to guess")
+        entries = {k: Entry.from_json(d) for k, d in raw["entries"].items()}
+        return cls(entries)

@@ -1,0 +1,193 @@
+"""Micro-benchmark harness for collective algorithms.
+
+Two executors behind one ``measure()`` entry point:
+
+* **real** — wall-clock timing of the actual shard_map/ppermute collective
+  on the live mesh: jit, warmup, ``block_until_ready``, median of k. This is
+  the number that matters on TPU/GPU fleets.
+* **simulated** — deterministic stand-in for containers with one CPU device
+  (CI, laptops): the *schedule generators* of ``core/schedules.py`` execute
+  the algorithm over an abstract network and each synchronous round is
+  priced with ``core/cost_model.schedule_cost(mode="round")`` under a named
+  machine parameter set. "Measured" is therefore the per-round simulation on
+  real schedules while "modeled" stays the paper's closed forms (Eqs. 3-4)
+  — the two disagree exactly where Fig. 9 shows the closed forms mispredict
+  (final-round over-count, non-power region counts), so the policy layer has
+  a genuine crossover signal to learn even on CPU.
+
+The machine fingerprint keys cache entries so a table measured on one
+platform is never consulted on another.
+"""
+from __future__ import annotations
+
+import dataclasses
+import statistics
+import time
+
+from repro.core import cost_model, schedules
+from repro.core.topology import RegionMap, ceil_log
+
+ALLGATHER_ALGORITHMS = tuple(schedules.ALGORITHMS)   # the five paper algs
+ALLREDUCE_ALGORITHMS = ("locality", "xla")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fingerprint:
+    """Identity of the machine a measurement is valid for."""
+
+    platform: str          # jax backend: cpu / tpu / gpu
+    device_kind: str
+    n_devices: int
+    simulated_machine: str = ""   # set when the simulated executor was used
+
+    def key(self) -> str:
+        kind = self.device_kind.replace(" ", "_").replace("|", "_")
+        base = f"{self.platform}:{kind}:{self.n_devices}"
+        return f"sim:{self.simulated_machine}" if self.simulated_machine else base
+
+    @classmethod
+    def detect(cls, simulated_machine: str = "") -> "Fingerprint":
+        import jax
+        devs = jax.devices()
+        return cls(platform=jax.default_backend(),
+                   device_kind=devs[0].device_kind,
+                   n_devices=len(devs),
+                   simulated_machine=simulated_machine)
+
+
+# ---------------------------------------------------------------------------
+# simulated executor
+# ---------------------------------------------------------------------------
+def simulate_allgather(algorithm: str, p: int, p_local: int,
+                       nbytes_per_rank: float,
+                       machine: cost_model.MachineParams | str) -> float:
+    """Round-synchronous schedule simulation (seconds, deterministic)."""
+    if isinstance(machine, str):
+        machine = cost_model.MACHINES[machine]
+    if p <= 1:
+        return 0.0
+    sched = schedules.ALGORITHMS[algorithm](p, p_local)
+    region = RegionMap(p=p, p_local=p_local)
+    return cost_model.schedule_cost(sched, machine, nbytes_per_rank,
+                                    region=region, mode="round")
+
+
+def simulate_allreduce(algorithm: str, p: int, p_local: int,
+                       nbytes: float,
+                       machine: cost_model.MachineParams | str) -> float:
+    """Deterministic model of the two allreduce structures we can emit.
+
+    "xla": flat ring reduce-scatter + ring allgather — 2(p-1) neighbor
+    messages of nbytes/p, of which 2·r cross a region boundary.
+    "locality": core/collectives.locality_allreduce — local ring RS,
+    recursive-halving allreduce across regions per lane, local Bruck AG.
+    """
+    if isinstance(machine, str):
+        machine = cost_model.MACHINES[machine]
+    if p <= 1:
+        return 0.0
+    region = RegionMap(p=p, p_local=p_local)
+    r, pl = region.n_regions, p_local
+    if algorithm == "xla":
+        n = 2 * (p - 1)
+        per = nbytes / p
+        n_nl = 2 * r if r > 1 else 0
+        n_l = n - n_nl
+        return machine.cost(n_local=n_l, s_local=per * n_l,
+                            n_nonlocal=n_nl, s_nonlocal=per * n_nl)
+    if algorithm == "locality":
+        t = 0.0
+        if pl > 1:   # local ring reduce-scatter
+            t += machine.cost(n_local=pl - 1,
+                              s_local=nbytes * (pl - 1) / pl,
+                              n_nonlocal=0, s_nonlocal=0.0)
+        shard = nbytes / pl
+        if r > 1:    # recursive-halving RS + Bruck AG over regions, per lane
+            lg = ceil_log(2, r)
+            t += machine.cost(n_local=0, s_local=0.0, n_nonlocal=2 * lg,
+                              s_nonlocal=2.0 * shard * (r - 1) / r)
+        if pl > 1:   # local Bruck allgather of the reduced shards
+            t += machine.cost(n_local=ceil_log(2, pl),
+                              s_local=nbytes * (pl - 1) / pl,
+                              n_nonlocal=0, s_nonlocal=0.0)
+        return t
+    raise ValueError(f"unknown allreduce algorithm {algorithm!r}")
+
+
+def simulate(collective: str, algorithm: str, p: int, p_local: int,
+             nbytes: float, machine: cost_model.MachineParams | str) -> float:
+    if collective == "allgather":
+        return simulate_allgather(algorithm, p, p_local, nbytes, machine)
+    if collective == "allreduce":
+        return simulate_allreduce(algorithm, p, p_local, nbytes, machine)
+    raise ValueError(f"unknown collective {collective!r}")
+
+
+# ---------------------------------------------------------------------------
+# real executor
+# ---------------------------------------------------------------------------
+def _measure_real(collective: str, algorithm: str, p: int, p_local: int,
+                  nbytes: float, dtype: str, *, iters: int, warmup: int) -> float:
+    import jax
+    import jax.numpy as jnp
+    import numpy as np
+    from jax.sharding import PartitionSpec as P
+
+    from repro.core import collectives as C
+
+    devs = jax.devices()
+    if len(devs) < p:
+        raise RuntimeError(f"need {p} devices, have {len(devs)}")
+    r = p // p_local
+    mesh_devs = np.asarray(devs[:p]).reshape(r, p_local)
+    mesh = jax.sharding.Mesh(mesh_devs, ("outer", "local"))
+    itemsize = jnp.dtype(dtype).itemsize
+    n_elems = max(1, int(nbytes) // itemsize)
+    x = jnp.zeros((p * n_elems,), dtype=dtype)
+
+    if collective == "allgather":
+        def body(s):
+            return C.allgather(s, "outer", "local", algorithm=algorithm,
+                               tiled=True)
+    elif collective == "allreduce":
+        def body(s):
+            return C.allreduce(s, "outer", "local", algorithm=algorithm)
+    else:
+        raise ValueError(f"unknown collective {collective!r}")
+
+    f = jax.jit(jax.shard_map(body, mesh=mesh,
+                              in_specs=P(("outer", "local")),
+                              out_specs=P(("outer", "local"))))
+    for _ in range(warmup):
+        f(x).block_until_ready()
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        f(x).block_until_ready()
+        samples.append(time.perf_counter() - t0)
+    return statistics.median(samples)
+
+
+# ---------------------------------------------------------------------------
+# entry point
+# ---------------------------------------------------------------------------
+def measure(collective: str, algorithm: str, p: int, p_local: int,
+            nbytes: float, dtype: str = "float32", *, mode: str = "auto",
+            machine: str = "lassen", iters: int = 5, warmup: int = 2) -> float:
+    """Median time (seconds) for one collective configuration.
+
+    mode: "real" (wall clock on the live mesh), "simulated" (deterministic
+    schedule pricing under ``machine``), or "auto" — real on accelerator
+    backends with enough devices, simulated otherwise (the CPU fallback
+    that makes sweeps runnable in single-device containers).
+    """
+    if mode == "auto":
+        import jax
+        real = jax.default_backend() != "cpu" and len(jax.devices()) >= p
+        mode = "real" if real else "simulated"
+    if mode == "simulated":
+        return simulate(collective, algorithm, p, p_local, nbytes, machine)
+    if mode == "real":
+        return _measure_real(collective, algorithm, p, p_local, nbytes, dtype,
+                             iters=iters, warmup=warmup)
+    raise ValueError(f"unknown mode {mode!r}")

@@ -1,0 +1,187 @@
+"""Selection policy: measured crossover tables backed by the postal model.
+
+The policy answers one question — *which algorithm for this collective at
+this size on this topology* — from two sources:
+
+1. a :class:`~repro.tuning.cache.TuningCache` of measured (or simulated)
+   per-bucket costs, compiled into a byte-bucketed **crossover table** with
+   hysteresis: walking buckets in ascending byte order, the incumbent
+   algorithm is kept unless a challenger beats it by more than
+   ``hysteresis`` (default 10%) *in that bucket*. This suppresses flapping
+   between near-tied algorithms across adjacent buckets (measured costs are
+   noisy exactly near crossover points, NCCL's tuner does the same);
+2. the paper's postal model (``core/autotune.model_costs`` for allgather,
+   ``measure.simulate_allreduce`` for allreduce) when no table entry covers
+   the request — so ``algorithm="auto"`` always resolves, table or not.
+
+The process-default policy is discovered lazily from ``REPRO_TUNING_TABLE``
+or ``./results/tuning_table.json`` (what ``benchmarks/run.py tune`` writes).
+"""
+from __future__ import annotations
+
+import dataclasses
+import os
+import threading
+
+from .cache import SchemaVersionError, TuningCache, bucket_bytes
+from .measure import ALLREDUCE_ALGORITHMS, Fingerprint, simulate_allreduce
+
+DEFAULT_TABLE_ENV = "REPRO_TUNING_TABLE"
+DEFAULT_TABLE_PATH = os.path.join("results", "tuning_table.json")
+
+
+@dataclasses.dataclass(frozen=True)
+class Selection:
+    algorithm: str
+    source: str                 # "table" | "model"
+    cost: float | None = None   # seconds under the deciding source, if known
+
+
+class Policy:
+    def __init__(self, cache: TuningCache | None = None, *,
+                 fingerprint: str | None = None, machine: str = "tpu_v5e",
+                 hysteresis: float = 0.10):
+        self.cache = cache
+        self._fingerprint = fingerprint
+        self.machine = machine
+        self.hysteresis = hysteresis
+        self._crossover_memo: dict[tuple, list[tuple[int, str, float]]] = {}
+
+    @property
+    def fingerprint(self) -> str:
+        # lazy: detection touches jax.devices() (backend init) and is only
+        # needed once a table lookup actually happens
+        if self._fingerprint is None:
+            self._fingerprint = Fingerprint.detect().key()
+        return self._fingerprint
+
+    # ------------------------------------------------------------------
+    def crossover_table(self, collective: str, p: int, p_local: int,
+                        dtype: str) -> list[tuple[int, str, float]]:
+        """[(bucket_bytes, algorithm, cost_s)] ascending, hysteresis applied.
+
+        The returned algorithm for bucket b applies to all sizes in
+        (prev_bucket, b]; the last entry extends to infinity.
+        """
+        key = (collective, p, p_local, dtype)
+        memo = self._crossover_memo.get(key)
+        if memo is not None:
+            return memo
+        table: list[tuple[int, str, float]] = []
+        if self.cache is not None:
+            incumbent: str | None = None
+            for e in self.cache.group(self.fingerprint, p, p_local,
+                                      collective, dtype):
+                best = e.best
+                if incumbent is not None and incumbent in e.costs:
+                    # keep the incumbent unless the challenger clearly wins
+                    if e.costs[best] >= (1.0 - self.hysteresis) * e.costs[incumbent]:
+                        best = incumbent
+                incumbent = best
+                table.append((e.bucket, best, e.costs[best]))
+        self._crossover_memo[key] = table
+        return table
+
+    # ------------------------------------------------------------------
+    def select(self, collective: str, p: int, p_local: int, nbytes: float,
+               dtype: str = "float32") -> Selection:
+        if p <= 1:
+            return Selection("bruck" if collective == "allgather" else "xla",
+                             "model", 0.0)
+        table = self.crossover_table(collective, p, p_local, dtype)
+        if table:
+            b = bucket_bytes(nbytes)
+            for bucket, algorithm, cost in table:
+                if b <= bucket:
+                    return Selection(algorithm, "table", cost)
+            # beyond the largest measured bucket: bandwidth regime is flat
+            # in algorithm order, extend the last entry
+            bucket, algorithm, cost = table[-1]
+            return Selection(algorithm, "table", cost)
+        return self._model_fallback(collective, p, p_local, nbytes)
+
+    def _model_fallback(self, collective: str, p: int, p_local: int,
+                        nbytes: float) -> Selection:
+        if collective == "allgather":
+            from repro.core.autotune import model_costs
+            if p_local <= 1 or p <= p_local:
+                return Selection("bruck", "model")
+            costs = model_costs(p, p_local, nbytes, self.machine)
+            best = min(costs, key=costs.get)
+            return Selection(best, "model", costs[best])
+        if collective == "allreduce":
+            costs = {a: simulate_allreduce(a, p, p_local, nbytes, self.machine)
+                     for a in ALLREDUCE_ALGORITHMS}
+            if p_local <= 1 or p <= p_local:
+                return Selection("xla", "model", costs["xla"])
+            best = min(costs, key=costs.get)
+            return Selection(best, "model", costs[best])
+        raise ValueError(f"unknown collective {collective!r}")
+
+
+# ---------------------------------------------------------------------------
+# process-default policy
+# ---------------------------------------------------------------------------
+_default_lock = threading.Lock()
+_default_policy: Policy | None = None
+_default_loaded = False
+
+
+def _discover_table_path() -> str | None:
+    env = os.environ.get(DEFAULT_TABLE_ENV)
+    if env:
+        return env if os.path.exists(env) else None
+    return DEFAULT_TABLE_PATH if os.path.exists(DEFAULT_TABLE_PATH) else None
+
+
+def default_policy() -> Policy:
+    """The lazily-discovered process policy (always returns one).
+
+    With a persisted table (``$REPRO_TUNING_TABLE`` or
+    ``results/tuning_table.json``) selections come from measured crossovers;
+    otherwise from the postal-model prior. A table written by the simulated
+    executor fingerprints as ``sim:<machine>`` and is honoured on any host
+    (it is a deterministic function of the machine parameters, not of the
+    hardware it was computed on).
+    """
+    global _default_policy, _default_loaded
+    with _default_lock:
+        if not _default_loaded:
+            cache = None
+            fingerprint = None
+            path = _discover_table_path()
+            if path:
+                try:
+                    cache = TuningCache.load(path)
+                except (SchemaVersionError, OSError, ValueError,
+                        TypeError, KeyError):
+                    # unreadable/corrupt/foreign table: "auto" must still
+                    # resolve — fall back to the model prior
+                    cache = None
+                if cache is not None and len(cache):
+                    # honour a simulated-sweep table regardless of host:
+                    # if the live fingerprint has no entries, adopt the
+                    # (lexicographically first) sim fingerprint present
+                    fps = {k.split("|", 1)[0] for k in cache.entries}
+                    live = Fingerprint.detect().key()
+                    if live not in fps:
+                        sims = sorted(f for f in fps if f.startswith("sim:"))
+                        if sims:
+                            fingerprint = sims[0]
+            _default_policy = Policy(cache, fingerprint=fingerprint)
+            _default_loaded = True
+        return _default_policy
+
+
+def set_default_policy(policy: Policy | None) -> None:
+    """Inject (tests) or reset (None -> rediscover on next use)."""
+    global _default_policy, _default_loaded
+    with _default_lock:
+        _default_policy = policy
+        _default_loaded = policy is not None
+
+
+def resolve(collective: str, p: int, p_local: int, nbytes: float,
+            dtype: str = "float32") -> str:
+    """Convenience: algorithm name for ``algorithm="auto"`` call sites."""
+    return default_policy().select(collective, p, p_local, nbytes, dtype).algorithm

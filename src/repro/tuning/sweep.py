@@ -1,0 +1,161 @@
+"""Offline sweep driver: measure every (collective, algorithm, size) cell,
+persist the tuning table, and emit a Fig. 9-style measured-vs-modeled report.
+
+``python -m repro.tuning.sweep --p 16 --p-local 4`` (or the ``tune``
+subcommand of ``benchmarks/run.py``) produces:
+
+* ``results/tuning_table.json``  — the versioned TuningCache the policy
+  layer consults for ``algorithm="auto"`` (see policy.py discovery rules);
+* ``BENCH_tuning.json``          — per-cell measured + modeled costs, the
+  winner under each, and the crossover tables with hysteresis applied —
+  the data behind the paper's Fig. 9 comparison, plus an agreement summary
+  (fraction of cells where model and measurement pick the same winner).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+from typing import Any, Sequence
+
+from repro.core import autotune
+from .cache import Entry, TuningCache, bucket_bytes
+from .measure import (ALLGATHER_ALGORITHMS, ALLREDUCE_ALGORITHMS, Fingerprint,
+                      measure, simulate_allreduce)
+from .policy import Policy
+
+DEFAULT_SIZES = tuple(2 ** k for k in range(6, 23, 2))   # 64 B .. 4 MiB
+
+
+def run_sweep(p: int = 16, p_local: int = 4, *,
+              sizes: Sequence[int] = DEFAULT_SIZES,
+              collectives: Sequence[str] = ("allgather", "allreduce"),
+              dtype: str = "float32", mode: str = "auto",
+              machine: str = "lassen", hysteresis: float = 0.10,
+              iters: int = 5, warmup: int = 2) -> tuple[TuningCache, dict]:
+    """Measure the grid, returning (cache, report_dict)."""
+    import jax
+
+    simulated = mode == "simulated" or (
+        mode == "auto" and (jax.default_backend() == "cpu"
+                            or len(jax.devices()) < p))
+    fp = Fingerprint.detect(simulated_machine=machine if simulated else "")
+    eff_mode = "simulated" if simulated else "real"
+
+    cache = TuningCache()
+    cells: list[dict[str, Any]] = []
+    for collective in collectives:
+        algorithms = (ALLGATHER_ALGORITHMS if collective == "allgather"
+                      else ALLREDUCE_ALGORITHMS)
+        for nbytes in sizes:
+            costs = {}
+            for alg in algorithms:
+                costs[alg] = measure(collective, alg, p, p_local, nbytes,
+                                     dtype, mode=eff_mode, machine=machine,
+                                     iters=iters, warmup=warmup)
+            entry = Entry(collective=collective, p=p, p_local=p_local,
+                          dtype=dtype, bucket=bucket_bytes(nbytes),
+                          costs=costs, source=eff_mode)
+            cache.put(fp.key(), entry)
+
+            # the paper's closed-form prediction for the same cell. For
+            # allreduce in simulated mode "measured" IS the model (there is
+            # no schedule generator for the reduce structures), so the cell
+            # is flagged and excluded from the agreement statistic below.
+            if collective == "allgather":
+                modeled = autotune.model_costs(p, p_local, nbytes, machine)
+                self_cmp = False
+            else:
+                modeled = {a: simulate_allreduce(a, p, p_local, nbytes, machine)
+                           for a in ALLREDUCE_ALGORITHMS}
+                self_cmp = eff_mode == "simulated"
+            cells.append({
+                "collective": collective, "p": p, "p_local": p_local,
+                "dtype": dtype, "nbytes": nbytes,
+                "measured_s": costs, "modeled_s": modeled,
+                "measured_winner": min(costs, key=costs.get),
+                "modeled_winner": min(modeled, key=modeled.get),
+                "self_comparison": self_cmp,
+            })
+
+    policy = Policy(cache, fingerprint=fp.key(), machine=machine,
+                    hysteresis=hysteresis)
+    crossovers = {
+        c: [{"bucket_bytes": b, "algorithm": a, "cost_s": t}
+            for b, a, t in policy.crossover_table(c, p, p_local, dtype)]
+        for c in collectives
+    }
+    agree = [c["measured_winner"] == c["modeled_winner"] for c in cells
+             if not c["self_comparison"]]
+    report = {
+        "fingerprint": fp.key(),
+        "mode": eff_mode,
+        "machine_model": machine,
+        "topology": {"p": p, "p_local": p_local, "n_regions": p // p_local},
+        "hysteresis": hysteresis,
+        "cells": cells,
+        "crossover_tables": crossovers,
+        "winner_agreement": {
+            "matched": sum(agree), "total": len(agree),
+            "fraction": (sum(agree) / len(agree)) if agree else None,
+        },
+    }
+    return cache, report
+
+
+def write_outputs(cache: TuningCache, report: dict, *,
+                  table_path: str, report_path: str) -> None:
+    """Persist, merging into an existing table (so an operator can sweep one
+    topology at a time — entries are keyed by topology, new keys win)."""
+    if os.path.exists(table_path):
+        try:
+            merged = TuningCache.load(table_path)
+        except (OSError, ValueError, TypeError, KeyError):
+            merged = TuningCache()          # unreadable/corrupt: start over
+        # SchemaVersionError propagates: never clobber a table written by a
+        # newer schema (cache.py's refuse-to-guess invariant)
+        merged.entries.update(cache.entries)
+        cache = merged
+    cache.save(table_path)
+    d = os.path.dirname(os.path.abspath(report_path))
+    os.makedirs(d, exist_ok=True)
+    with open(report_path, "w") as f:
+        json.dump(report, f, indent=1, sort_keys=True)
+
+
+def main(argv: Sequence[str] | None = None) -> tuple[TuningCache, dict]:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--p", type=int, default=16, help="total ranks")
+    ap.add_argument("--p-local", type=int, default=4, help="ranks per region")
+    ap.add_argument("--sizes", default=None,
+                    help="comma-separated bytes-per-rank list")
+    ap.add_argument("--collectives", default="allgather,allreduce")
+    ap.add_argument("--dtype", default="float32")
+    ap.add_argument("--mode", default="auto",
+                    choices=["auto", "real", "simulated"])
+    ap.add_argument("--machine", default="lassen",
+                    help="cost-model parameter set for the simulated executor")
+    ap.add_argument("--hysteresis", type=float, default=0.10)
+    ap.add_argument("--table", default=os.path.join("results",
+                                                    "tuning_table.json"))
+    ap.add_argument("--report", default="BENCH_tuning.json")
+    args = ap.parse_args(argv)
+
+    sizes = (tuple(int(s) for s in args.sizes.split(","))
+             if args.sizes else DEFAULT_SIZES)
+    cache, report = run_sweep(
+        args.p, args.p_local, sizes=sizes,
+        collectives=tuple(args.collectives.split(",")), dtype=args.dtype,
+        mode=args.mode, machine=args.machine, hysteresis=args.hysteresis)
+    write_outputs(cache, report, table_path=args.table,
+                  report_path=args.report)
+    agg = report["winner_agreement"]
+    print(f"tuning table: {args.table} ({len(cache)} entries, "
+          f"fingerprint {report['fingerprint']})")
+    print(f"report:       {args.report} "
+          f"(model/measurement winner agreement {agg['matched']}/{agg['total']})")
+    return cache, report
+
+
+if __name__ == "__main__":
+    main()

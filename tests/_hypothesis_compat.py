@@ -1,0 +1,81 @@
+"""Fallback shim for ``hypothesis`` so property tests degrade to skips.
+
+Import the hypothesis API from here instead of ``hypothesis`` directly::
+
+    from _hypothesis_compat import given, settings, assume, strategies as st
+
+When hypothesis is installed (see requirements-dev.txt) the real library is
+re-exported unchanged. When it is missing (the pinned CI container does not
+ship it), ``@given`` replaces the test body with a ``pytest.skip`` so the
+module still collects and the non-property tests in it still run.
+"""
+from __future__ import annotations
+
+try:
+    from hypothesis import assume, example, given, settings  # noqa: F401
+    from hypothesis import strategies  # noqa: F401
+
+    HAVE_HYPOTHESIS = True
+except ModuleNotFoundError:
+    import pytest
+
+    HAVE_HYPOTHESIS = False
+
+    class _Strategy:
+        """Opaque strategy stub supporting the combinator surface we use."""
+
+        def __init__(self, desc: str = "stub"):
+            self.desc = desc
+
+        def _derived(self, op: str) -> "_Strategy":
+            return _Strategy(f"{self.desc}.{op}")
+
+        def map(self, fn):
+            return self._derived("map")
+
+        def filter(self, fn):
+            return self._derived("filter")
+
+        def flatmap(self, fn):
+            return self._derived("flatmap")
+
+        def __repr__(self):
+            return f"<stub strategy {self.desc}>"
+
+    class _Strategies:
+        def __getattr__(self, name):
+            # integers / sampled_from / tuples / lists / floats / just / ...
+            return lambda *a, **k: _Strategy(name)
+
+    strategies = _Strategies()
+
+    def given(*_args, **_kwargs):
+        def decorate(fn):
+            # NOTE: deliberately no functools.wraps — pytest must see the
+            # (*a, **k) signature, not the original's hypothesis-injected
+            # parameters (it would look for fixtures of those names).
+            def skipper(*a, **k):
+                pytest.skip("hypothesis not installed "
+                            "(pip install -r requirements-dev.txt)")
+
+            skipper.__name__ = fn.__name__
+            skipper.__doc__ = fn.__doc__
+            skipper.__module__ = fn.__module__
+            return skipper
+
+        return decorate
+
+    def settings(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate
+
+    def assume(condition):
+        return True
+
+    def example(*_args, **_kwargs):
+        def decorate(fn):
+            return fn
+
+        return decorate

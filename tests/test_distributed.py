@@ -132,6 +132,18 @@ def test_grad_sync_modes_agree(subproc):
     assert "GRAD_SYNC_OK" in subproc(GRAD_SYNC_CODE, devices=8)
 
 
+def _legacy_pallas_interpret() -> bool:
+    from repro.kernels import _pallas_compat
+    return _pallas_compat._InterpretParams is None
+
+
+@pytest.mark.xfail(
+    _legacy_pallas_interpret(),
+    reason="pallas interpret-mode DMA discharge on this JAX version rejects "
+           "meshes with more than one named dimension (dma_start_p "
+           "NotImplementedError) — the cross-device DMA interpreter only "
+           "exists in the newer TPU interpret backend",
+    strict=False)
 def test_dma_allgather_kernel(subproc):
     assert "DMA_OK" in subproc(DMA_KERNEL_CODE, devices=8)
 

@@ -1,5 +1,5 @@
 import pytest
-from hypothesis import given, strategies as st
+from _hypothesis_compat import given, strategies as st
 
 from repro.core.topology import RegionMap, ceil_log, is_power_of
 
