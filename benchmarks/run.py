@@ -25,7 +25,7 @@ if __package__ in (None, ""):                     # `python benchmarks/run.py`
     __package__ = "benchmarks"
 
 from . import (collective_hlo_audit, fig3_pingpong, fig7_model_scaling,
-               fig8_model_datasize, fig9_measured, roofline)
+               fig8_model_datasize, fig9_measured, roofline, serve_combine)
 
 BENCHES = {
     "fig3": fig3_pingpong,
@@ -34,6 +34,7 @@ BENCHES = {
     "fig9": fig9_measured,
     "hlo_audit": collective_hlo_audit,
     "roofline": roofline,
+    "serve_combine": serve_combine,
 }
 
 

@@ -1,0 +1,95 @@
+#!/usr/bin/env python
+"""Validate a persisted tuning table (CI schema gate).
+
+``python scripts/check_tuning_schema.py [results/tuning_table.json ...]``
+
+Loads each table through :class:`repro.tuning.cache.TuningCache` (which
+enforces ``schema_version`` and runs migrations) and then checks every
+entry invariant the policy layer depends on:
+
+* key format ``<fingerprint>|p<P>xl<PL>|<collective>|<dtype>|b<bucket>``
+  consistent with the entry's own fields;
+* bucket is a power of two; p divisible by p_local;
+* costs: non-empty map of known algorithm names to positive finite floats;
+* source is "measured" or "simulated".
+
+Exits non-zero with a per-entry diagnostic on the first violation, so a
+sweep refactor can never silently persist a table the policy would misread.
+"""
+from __future__ import annotations
+
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.tuning.cache import TuningCache, make_key           # noqa: E402
+from repro.tuning.measure import (ALLGATHER_ALGORITHMS,        # noqa: E402
+                                  ALLREDUCE_ALGORITHMS,
+                                  LOGSUMEXP_ALGORITHMS)
+
+KNOWN_ALGORITHMS = {
+    "allgather": set(ALLGATHER_ALGORITHMS) | {"xla"},
+    "allreduce": set(ALLREDUCE_ALGORITHMS),
+    "logsumexp_combine": set(LOGSUMEXP_ALGORITHMS),
+}
+
+
+def check_table(path: str) -> int:
+    cache = TuningCache.load(path)          # schema_version enforced here
+    if not len(cache):
+        print(f"{path}: FAIL — table has no entries")
+        return 1
+    for key, e in cache.entries.items():
+        ctx = f"{path}: entry {key!r}"
+        fingerprint = key.split("|", 1)[0]
+        expect = make_key(fingerprint, e.p, e.p_local, e.collective, e.dtype,
+                          e.bucket)
+        if key != expect:
+            print(f"{ctx}: FAIL — key disagrees with fields ({expect!r})")
+            return 1
+        if e.bucket < 1 or (e.bucket & (e.bucket - 1)) != 0:
+            print(f"{ctx}: FAIL — bucket {e.bucket} is not a power of two")
+            return 1
+        if e.p_local < 1 or e.p % e.p_local != 0:
+            print(f"{ctx}: FAIL — p={e.p} not divisible by p_local={e.p_local}")
+            return 1
+        algs = KNOWN_ALGORITHMS.get(e.collective)
+        if algs is None:
+            print(f"{ctx}: FAIL — unknown collective {e.collective!r}")
+            return 1
+        if not e.costs:
+            print(f"{ctx}: FAIL — empty costs map")
+            return 1
+        for alg, cost in e.costs.items():
+            if alg not in algs:
+                print(f"{ctx}: FAIL — unknown algorithm {alg!r} "
+                      f"for {e.collective}")
+                return 1
+            if not isinstance(cost, (int, float)) or not math.isfinite(cost) \
+                    or cost <= 0:
+                print(f"{ctx}: FAIL — non-positive/non-finite cost "
+                      f"{alg}={cost!r}")
+                return 1
+        if e.source not in ("measured", "simulated"):
+            print(f"{ctx}: FAIL — unknown source {e.source!r}")
+            return 1
+    print(f"{path}: OK ({len(cache)} entries)")
+    return 0
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or [os.path.join("results", "tuning_table.json")]
+    rc = 0
+    for path in paths:
+        if not os.path.exists(path):
+            print(f"{path}: FAIL — file does not exist")
+            return 1
+        rc |= check_table(path)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -24,6 +24,11 @@ Algorithms (same five as ``core/schedules.py``, which is the oracle):
 plus reductions built on them:
   reduce_scatter            linear transpose of any allgather
   locality_allreduce        local RS → per-lane outer allreduce → local AG
+                            (generic over the reduction op: sum / max / min)
+  locality_logsumexp_combine  numerically-safe combine of flash-style partial
+                            softmax stats: max-allreduce → rescale →
+                            packed sum-allreduce (the serve decode
+                            cache-combine executed by serve/engine.py)
 """
 from __future__ import annotations
 
@@ -343,12 +348,28 @@ def reduce_scatter(y: jax.Array, outer: Axes, local: Axes = (), *,
     return out
 
 
-def _rhd_reduce_scatter(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+# Generic reduction-op hook: every hand-rolled reduction below is written
+# against a binary combiner, so allreduce is not sum-only (the serve decode
+# cache-combine needs a max phase for its running softmax maximum).
+REDUCE_BINOPS = {"sum": jnp.add, "max": jnp.maximum, "min": jnp.minimum}
+_XLA_REDUCERS = {"sum": lax.psum, "max": lax.pmax, "min": lax.pmin}
+
+
+def _binop(op):
+    if op not in REDUCE_BINOPS:
+        raise ValueError(f"unknown reduction op {op!r}; "
+                         f"known: {sorted(REDUCE_BINOPS)}")
+    return REDUCE_BINOPS[op]
+
+
+def _rhd_reduce_scatter(x: jax.Array, axes: tuple[str, ...],
+                        op: str = "sum") -> jax.Array:
     """Recursive-halving reduce-scatter over ``axes`` (XOR partners).
 
-    Leading dim must be divisible by p. Rank i ends with tile i of the sum.
-    log2(p) rounds; round k exchanges 1/2^{k+1} of the buffer.
+    Leading dim must be divisible by p. Rank i ends with tile i of the
+    reduction. log2(p) rounds; round k exchanges 1/2^{k+1} of the buffer.
     """
+    combine = _binop(op)
     p = _size(axes)
     idx = lax.axis_index(axes)
     assert x.shape[0] % p == 0
@@ -366,26 +387,29 @@ def _rhd_reduce_scatter(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
         send = lax.dynamic_slice(buf, starts(send_start), (half,) + buf.shape[1:])
         keep = lax.dynamic_slice(buf, starts(keep_start), (half,) + buf.shape[1:])
         recv = lax.ppermute(send, axes, pairs)
-        buf = keep + recv
+        buf = combine(keep, recv)
         d //= 2
     return buf
 
 
-def _rd_allreduce(x: jax.Array, axes: tuple[str, ...]) -> jax.Array:
+def _rd_allreduce(x: jax.Array, axes: tuple[str, ...],
+                  op: str = "sum") -> jax.Array:
     """Recursive-doubling allreduce: log2(p) full-buffer exchanges (latency-opt)."""
+    combine = _binop(op)
     p = _size(axes)
     assert p & (p - 1) == 0, "recursive doubling needs power-of-two size"
     buf = x
     d = 1
     while d < p:
         pairs = [(s, s ^ d) for s in range(p)]
-        buf = buf + lax.ppermute(buf, axes, pairs)
+        buf = combine(buf, lax.ppermute(buf, axes, pairs))
         d *= 2
     return buf
 
 
 def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
-                       outer_algorithm: str = "rhd") -> jax.Array:
+                       outer_algorithm: str = "rhd",
+                       op: str = "sum") -> jax.Array:
     """Locality-aware allreduce (paper's structure applied to reductions).
 
     local reduce-scatter → per-lane allreduce across regions → local
@@ -393,11 +417,28 @@ def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
     b/p_ℓ bytes ("rhd"), or log2(r) messages ("rd", latency-optimal), or
     XLA's choice ("psum") — vs ~2·b bytes for a flat ring allreduce.
 
+    ``op`` selects the reduction ("sum"/"max"/"min"). Non-sum reductions
+    skip the scatter structure (there is no pmax_scatter, and their use
+    case — running softmax maxima — is latency-bound): local
+    recursive-doubling then per-lane outer recursive-doubling, log2(p_ℓ)
+    local + log2(r) non-local full-buffer messages. Non-power-of-two axis
+    sizes fall back to the XLA primitive on that axis set.
+
     Works on arbitrary-shaped ``x`` (flattens + pads internally).
     """
     outer, local = _tup(outer), _tup(local)
     r, pl = _size(outer), _size(local)
     x = _varying(x, outer + local)
+    if op != "sum":
+        _binop(op)                           # validate
+        with jax.named_scope(f"loc_allreduce_{op}_r{r}_pl{pl}"):
+            if pl > 1:
+                x = (_rd_allreduce(x, local, op=op) if pl & (pl - 1) == 0
+                     else _XLA_REDUCERS[op](x, local))
+            if r > 1:
+                x = (_rd_allreduce(x, outer, op=op) if r & (r - 1) == 0
+                     else _XLA_REDUCERS[op](x, outer))
+        return x
     shape = x.shape
     flat = x.reshape(-1)
     n = flat.shape[0]
@@ -436,14 +477,57 @@ def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
 
 
 def allreduce(x: jax.Array, outer: Axes, local: Axes = (), *,
-              algorithm: str = "locality", outer_algorithm: str = "rhd") -> jax.Array:
-    """Allreduce dispatcher: 'locality' (paper-structured), 'xla' (lax.psum),
-    or 'auto' (tuning policy picks between the two)."""
+              algorithm: str = "locality", outer_algorithm: str = "rhd",
+              op: str = "sum") -> jax.Array:
+    """Allreduce dispatcher: 'locality' (paper-structured), 'xla' (lax.psum /
+    pmax / pmin per ``op``), or 'auto' (tuning policy picks between the two)."""
     outer, local = _tup(outer), _tup(local)
+    _binop(op)                               # validate early
     if algorithm == "auto":
         algorithm = _resolve_auto("allreduce", x, outer, local)
     if algorithm == "xla" or (not local) or _size(local) == 1:
-        return lax.psum(x, outer + local)
+        return _XLA_REDUCERS[op](x, outer + local)
     if algorithm == "locality":
-        return locality_allreduce(x, outer, local, outer_algorithm=outer_algorithm)
+        return locality_allreduce(x, outer, local,
+                                  outer_algorithm=outer_algorithm, op=op)
     raise ValueError(f"unknown allreduce algorithm {algorithm!r}")
+
+
+# =============================================================================
+# Logsumexp combine — the serve decode cache-combine (§Perf, serve/engine.py)
+# =============================================================================
+def locality_logsumexp_combine(o: jax.Array, m: jax.Array, l: jax.Array,
+                               outer: Axes, local: Axes = (), *,
+                               algorithm: str = "locality",
+                               outer_algorithm: str = "rhd"
+                               ) -> tuple[jax.Array, jax.Array]:
+    """Numerically-safe combine of flash-style partial softmax stats.
+
+    Each rank holds, for its slice of the attention (reduction) axis:
+      o: (..., D)  unnormalized accumulator  Σ_j exp(s_j − m)·v_j
+      m: (...)     running maximum of its local scores
+      l: (...)     Σ_j exp(s_j − m)
+
+    Three steps over the ``(outer, local)`` axes:
+      1. max-allreduce of ``m`` → global maximum M (latency-bound:
+         recursive doubling per locality level, payload is bytes/(D+1));
+      2. device-local rescale of o and l by exp(m − M) — a rank whose slice
+         is fully masked carries m = −big and contributes exp(−big) ≈ 0;
+      3. ONE packed sum-allreduce of [o, l] (paper-structured RS→AG for
+         "locality", psum for "xla") instead of two separate collectives.
+
+    Returns (o_total, l_total) in fp32; the caller normalizes o/l.
+    """
+    outer, local = _tup(outer), _tup(local)
+    m = m.astype(jnp.float32)
+    with jax.named_scope("logsumexp_combine"):
+        M = allreduce(m, outer, local, algorithm=algorithm,
+                      outer_algorithm="rd", op="max")
+        scale = jnp.exp(m - M)
+        o32 = o.astype(jnp.float32) * scale[..., None]
+        l32 = l.astype(jnp.float32) * scale
+        payload = jnp.concatenate([o32.reshape(-1), l32.reshape(-1)])
+        tot = allreduce(payload, outer, local, algorithm=algorithm,
+                        outer_algorithm=outer_algorithm, op="sum")
+    n_o = o32.size
+    return tot[:n_o].reshape(o32.shape), tot[n_o:].reshape(l32.shape)

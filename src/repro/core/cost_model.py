@@ -186,6 +186,34 @@ def ring_model(p: int, block_bytes: float, m: MachineParams,
                   n_nonlocal=n_nl, s_nonlocal=block_bytes * n_nl)
 
 
+def max_allreduce_model(p: int, p_local: int, nbytes: float, m: MachineParams,
+                        *, structure: str = "locality") -> float:
+    """Recursive-doubling max-allreduce (the first phase of the serve decode
+    logsumexp combine — no scatter structure exists for non-sum ops).
+
+    structure="locality": log2(p_ℓ) local rounds then log2(r) non-local
+    rounds, each moving the full (tiny) buffer — matches
+    ``collectives.locality_allreduce(op="max")``.
+    structure="flat": log2(p) rounds over the flat rank; partners at
+    distance ≥ p_ℓ cross the region boundary, so only the first
+    log2(p_ℓ) rounds stay local.
+    """
+    region = RegionMap(p=p, p_local=p_local)
+    r = region.n_regions
+    if p <= 1:
+        return 0.0
+    if structure == "locality":
+        n_l, n_nl = ceil_log(2, p_local), ceil_log(2, r)
+    elif structure == "flat":
+        n = ceil_log(2, p)
+        n_l = min(ceil_log(2, p_local), n)
+        n_nl = n - n_l
+    else:
+        raise ValueError(f"unknown structure {structure!r}")
+    return m.cost(n_local=n_l, s_local=nbytes * n_l,
+                  n_nonlocal=n_nl, s_nonlocal=nbytes * n_nl)
+
+
 MODELS = {
     "bruck": lambda p, pl, bb, m: bruck_model(p, bb, m),
     "ring": lambda p, pl, bb, m: ring_model(p, bb, m, pl),

@@ -76,13 +76,7 @@ def collective_stats(hlo_text: str, device_pod: dict[int, int] | None = None
     counts: dict = defaultdict(int)
     nbytes: dict = defaultdict(int)
     st = CollectiveStats(counts=counts, bytes_=nbytes)
-    for line in hlo_text.splitlines():
-        if "-done" in line:
-            continue                       # count start/done pairs once
-        m = _OP_RE.search(line)
-        if not m:
-            continue
-        type_str, op = m.group(1), m.group(2)
+    for op, type_str, line in _collective_lines(hlo_text):
         b = _shape_bytes(type_str)
         counts[op] += 1
         nbytes[op] += b
@@ -102,6 +96,72 @@ def collective_stats(hlo_text: str, device_pod: dict[int, int] | None = None
                 st.permute_bytes_local += b * (n_local > 0)
                 st.permute_bytes_nonlocal += b * (n_nonlocal > 0)
     return st
+
+
+_TO_APPLY_RE = re.compile(r"to_apply=%?([\w.\-]+)")
+_COMPUTATION_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*\([^)]*\)\s*->")
+_ROOT_OP_RE = re.compile(r"ROOT\s+%?[\w.\-]+\s*=\s*\S+\s+([a-z\-]+)\(")
+
+
+def _collective_lines(hlo_text: str):
+    """Yield (op, type_str, line) for every collective op line, counting
+    async start/done pairs once (the shared scan behind the helpers below)."""
+    for line in hlo_text.splitlines():
+        if "-done" in line:
+            continue
+        m = _OP_RE.search(line)
+        if m:
+            yield m.group(2), m.group(1), line
+
+
+def op_payloads(hlo_text: str, op: str) -> list[int]:
+    """Per-op payload bytes for every occurrence of one collective ``op``
+    (e.g. "all-reduce") in the HLO. Used to assert the *absence* of a
+    collective over a given payload — the locality decode path must show no
+    all-reduce of the full attention-stat payload (its combine compiles to
+    collective-permutes / reduce-scatters instead)."""
+    if op not in COLLECTIVES:
+        raise ValueError(f"unknown collective op {op!r}")
+    return [_shape_bytes(t) for o, t, _ in _collective_lines(hlo_text)
+            if o == op]
+
+
+def _combiner_roots(hlo_text: str) -> dict[str, str]:
+    """Computation name -> its ROOT operation (e.g. "maximum", "add")."""
+    roots: dict[str, str] = {}
+    current = None
+    for line in hlo_text.splitlines():
+        s = line.strip()
+        m = _COMPUTATION_RE.match(s)
+        if m and "=" not in s.split("(", 1)[0]:
+            current = m.group(1)
+            continue
+        r = _ROOT_OP_RE.search(s)
+        if r and current is not None:
+            roots.setdefault(current, r.group(1))
+    return roots
+
+
+def allreduce_combiners(hlo_text: str) -> list[str]:
+    """The ROOT operation of every all-reduce's ``to_apply`` computation
+    ("add", "maximum", ...). GSPMD's implicit combine of a softmax over a
+    sharded axis necessarily includes a MAX-combiner all-reduce (the
+    running maximum) — its absence, together with the explicit
+    permute/reduce-scatter schedule, is the compiled-artifact proof that
+    the locality decode path executes the combine manually. The combiner
+    computation's NAME is not trustworthy (GSPMD emits "region_N.clone"
+    etc.), so the computation body is resolved to its root op; add-combiner
+    all-reduces also arise from harmless sharded-matmul partial sums, so
+    combiner kind, not payload size, is the discriminator."""
+    roots = _combiner_roots(hlo_text)
+    out = []
+    for op, _, line in _collective_lines(hlo_text):
+        if op != "all-reduce":
+            continue
+        t = _TO_APPLY_RE.search(line)
+        name = t.group(1) if t else ""
+        out.append(roots.get(name, name))
+    return out
 
 
 # ---------------------------------------------------------------------------

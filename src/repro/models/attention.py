@@ -114,6 +114,48 @@ def multihead_attention(q, k, v, *, causal=True, window=0, chunk=0, cap=0.0,
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
 
+def decode_partial_stats(q, k_cache, v_cache, pos, *, slot_offset=0,
+                         total_len=None, window=0, chunk=0, cap=0.0,
+                         ring=False):
+    """Flash-style partial stats of one-token decode attention over a cache
+    *slice*: q (B,1,H,D) vs k/v (B,Lloc,KV,D) holding global slots
+    [slot_offset, slot_offset + Lloc) of a ``total_len``-slot cache.
+
+    Returns fp32 ``(o, m, l)`` with o (B,1,H,D) the UNNORMALIZED accumulator
+    Σ_j exp(s_j − m)·v_j, m (B,1,H) the running max over this slice, and
+    l (B,1,H) = Σ_j exp(s_j − m). A fully-masked slice yields (0, NEG_INF, 0)
+    — the combine's global rescale exp(m − M) zeroes its contribution. This
+    is the per-shard body the serve engine wraps in ``shard_map`` for the
+    sequence-parallel locality cache-combine; the single-device decode path
+    below finalizes the same stats, so the two paths cannot drift.
+    """
+    B, _, H, D = q.shape
+    L_loc = k_cache.shape[1]
+    L_tot = total_len or L_loc
+    KV = k_cache.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, D)
+    s = jnp.einsum("bkgd,bjkd->bkgj", qg, k_cache).astype(jnp.float32)
+    s = s * (D ** -0.5)
+    if cap:
+        s = cap * jnp.tanh(s / cap)
+    j = slot_offset + jnp.arange(L_loc)
+    t_j = (pos - ((pos - j) % L_tot)) if ring else j  # token held by slot j
+    mask = t_j >= 0 if ring else (j <= pos)
+    if window:
+        mask &= (pos - t_j) < window
+    if chunk:
+        mask &= (t_j // chunk) == (pos // chunk)
+    s = jnp.where(mask[None, None, None], s, NEG_INF)
+    m = jnp.max(s, axis=-1)                           # (B,KV,G)
+    p = jnp.exp(s - m[..., None])
+    p = jnp.where(mask[None, None, None], p, 0.0)     # m=NEG_INF ⇒ exp(0)=1
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v_cache.dtype),
+                   v_cache).astype(jnp.float32)
+    return (o.reshape(B, 1, H, D), m.reshape(B, 1, H), l.reshape(B, 1, H))
+
+
 def decode_attention(q, k_cache, v_cache, pos, *, window=0, chunk=0, cap=0.0,
                      ring=False):
     """One-token decode: q (B,1,H,D) vs cache (B,L,KV,D); ``pos`` = absolute
@@ -124,26 +166,10 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=0, chunk=0, cap=0.0,
     chunked-local layers never need more history than that — a long_500k
     windowed cache shrinks from 524288 to 4096 slots (§Perf iteration 7).
     """
-    B, _, H, D = q.shape
-    L = k_cache.shape[1]
-    KV = k_cache.shape[2]
-    G = H // KV
-    qg = q.reshape(B, KV, G, D)
-    s = jnp.einsum("bkgd,bjkd->bkgj", qg, k_cache).astype(jnp.float32)
-    s = s * (D ** -0.5)
-    if cap:
-        s = cap * jnp.tanh(s / cap)
-    j = jnp.arange(L)
-    t_j = (pos - ((pos - j) % L)) if ring else j     # token held by slot j
-    mask = t_j >= 0 if ring else (j <= pos)
-    if window:
-        mask &= (pos - t_j) < window
-    if chunk:
-        mask &= (t_j // chunk) == (pos // chunk)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
-    p = jax.nn.softmax(s, axis=-1)
-    o = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v_cache.dtype), v_cache)
-    return o.reshape(B, 1, H, D)
+    o, _, l = decode_partial_stats(q, k_cache, v_cache, pos, window=window,
+                                   chunk=chunk, cap=cap, ring=ring)
+    # slot ``pos`` is always attendable, so l > 0 on the full cache
+    return (o / l[..., None]).astype(v_cache.dtype)
 
 
 # ---------------------------------------------------------------------------
@@ -151,7 +177,7 @@ def decode_attention(q, k_cache, v_cache, pos, *, window=0, chunk=0, cap=0.0,
 # ---------------------------------------------------------------------------
 
 def attention(params, x, cfg, spec, *, positions=None, cache=None,
-              cross_kv=None, causal=True, shard=None):
+              cross_kv=None, causal=True, shard=None, decode_combine=None):
     """Self- (or cross-) attention layer.
 
     Modes:
@@ -159,6 +185,13 @@ def attention(params, x, cfg, spec, *, positions=None, cache=None,
                                   (out, (k, v)) so prefill can build a cache.
       cache (k,v,pos)           : single-token decode; returns (out, new_cache).
       cross_kv (k,v)            : cross-attention (whisper decoder); no mask.
+
+    decode_combine: optional serve-layer hook replacing the decode cache
+    write + attention with a distributed implementation (the locality-aware
+    sequence-parallel combine). Called as
+    ``decode_combine(q, k_new, v_new, k_cache, v_cache, pos, meta)`` with
+    meta = {window, chunk, cap, ring}; returns ``(o, k_cache', v_cache')``
+    or None to fall back to the plain (GSPMD) path for this layer.
     """
     shard = shard or (lambda t, _k: t)
     dt = cfg.dtype
@@ -193,13 +226,21 @@ def attention(params, x, cfg, spec, *, positions=None, cache=None,
         k_cache, v_cache, pos = cache["k"], cache["v"], cache["pos"]
         L_c = k_cache.shape[1]
         ring = bool(cache.get("ring", False))
-        slot = pos % L_c if ring else pos
-        k_cache = jax.lax.dynamic_update_slice(k_cache, k.astype(k_cache.dtype),
-                                               (0, slot, 0, 0))
-        v_cache = jax.lax.dynamic_update_slice(v_cache, v.astype(v_cache.dtype),
-                                               (0, slot, 0, 0))
-        o = decode_attention(q, k_cache, v_cache, pos, window=window,
-                             chunk=chunk, cap=cfg.attn_softcap, ring=ring)
+        res = None
+        if decode_combine is not None:
+            res = decode_combine(q, k, v, k_cache, v_cache, pos,
+                                 {"window": window, "chunk": chunk,
+                                  "cap": cfg.attn_softcap, "ring": ring})
+        if res is None:
+            slot = pos % L_c if ring else pos
+            k_cache = jax.lax.dynamic_update_slice(
+                k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+            v_cache = jax.lax.dynamic_update_slice(
+                v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+            o = decode_attention(q, k_cache, v_cache, pos, window=window,
+                                 chunk=chunk, cap=cfg.attn_softcap, ring=ring)
+        else:
+            o, k_cache, v_cache = res
         new_cache = {"k": k_cache, "v": v_cache, "pos": pos}
         out = o.reshape(B, S, H * D) @ params["wo"].astype(dt)
         return out, new_cache

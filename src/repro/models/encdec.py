@@ -94,11 +94,14 @@ def _cross_kv(lp, cfg, enc_out):
 
 
 def forward(params, cfg, tokens, *, frames=None, mode="train", cache=None,
-            cache_len=0, shard=None, remat=True):
+            cache_len=0, shard=None, remat=True, decode_combine=None):
     """Returns (logits, aux, new_cache). See transformer.forward for modes.
 
     decode-mode cache: {"self": stacked {k,v}, "cross": stacked (k,v),
                         "pos": int32} — cross K/V computed once at prefill.
+    decode_combine applies to the decoder *self*-attention caches only; the
+    cross-attention K/V are read-only prefill products and stay on the
+    GSPMD path.
     """
     shard = shard or _noop
     dt = cfg.dtype
@@ -130,7 +133,8 @@ def forward(params, cfg, tokens, *, frames=None, mode="train", cache=None,
             self_cache = {"k": c["k"], "v": c["v"], "pos": pos}
             a, nc_full = attention(lp["self_attn"], h, cfg, _SELF,
                                    positions=positions, cache=self_cache,
-                                   shard=shard)
+                                   shard=shard,
+                                   decode_combine=decode_combine)
             nc = {"k": nc_full["k"], "v": nc_full["v"]}
             ck, cv = cross
         else:

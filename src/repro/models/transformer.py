@@ -92,7 +92,7 @@ def _shared_attn_init(rng, cfg) -> dict:
 
 
 def _apply_layer(lp, x, cfg, spec, *, positions, cache, build_cache,
-                 cache_len, pos, shard: Shard):
+                 cache_len, pos, shard: Shard, decode_combine=None):
     """Returns (x, aux, new_cache)."""
     aux = jnp.zeros((), jnp.float32)
     if spec.mixer == "mamba2":
@@ -111,7 +111,8 @@ def _apply_layer(lp, x, cfg, spec, *, positions, cache, build_cache,
         attn_cache = {"k": cache["k"], "v": cache["v"], "pos": pos,
                       "ring": ring_len is not None}
         a, nc_full = attention(lp["attn"], h, cfg, spec, positions=positions,
-                               cache=attn_cache, shard=shard)
+                               cache=attn_cache, shard=shard,
+                               decode_combine=decode_combine)
         nc = {"k": nc_full["k"], "v": nc_full["v"]}
     else:
         a, kv = attention(lp["attn"], h, cfg, spec, positions=positions,
@@ -181,13 +182,16 @@ def init_params(rng, cfg) -> dict:
 
 
 def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
-            cache_len=0, shard: Shard | None = None, remat=True):
+            cache_len=0, shard: Shard | None = None, remat=True,
+            decode_combine=None):
     """Returns (logits, aux, new_cache).
 
     train:   logits (B,S,Vpad); new_cache None.
     prefill: logits (B,1,Vpad) for the last position; new_cache filled, with
              cache["pos"] = S (next write position).
     decode:  tokens (B,1); cache required; logits (B,1,Vpad).
+    decode_combine: serve-layer hook for the decode cache write + attention
+             over a sequence-sharded cache (see models/attention.attention).
     """
     shard = shard or _noop
     plan = cfg.layer_plan()
@@ -226,7 +230,7 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
             x_carry, aux, nc = _apply_layer(
                 lp, x_carry, cfg, spec, positions=positions, cache=c,
                 build_cache=build_cache, cache_len=cache_len, pos=pos,
-                shard=shard)
+                shard=shard, decode_combine=decode_combine)
             aux_acc += aux
             ncs[f"slot{j}"] = nc
         return x_carry, (aux_acc, ncs)
@@ -246,7 +250,8 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
               else params["rest"][i])
         x, aux, nc = _apply_layer(
             lp, x, cfg, spec, positions=positions, cache=c,
-            build_cache=build_cache, cache_len=cache_len, pos=pos, shard=shard)
+            build_cache=build_cache, cache_len=cache_len, pos=pos, shard=shard,
+            decode_combine=decode_combine)
         aux_total += aux
         rest_ncs.append(nc)
 

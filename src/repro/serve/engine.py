@@ -6,9 +6,25 @@ Cache placement policy (per leaf):
     sharded over 'data' (long_500k: B=1, 512k context split across the pod)
     — sequence-parallel decode. KV heads shard over 'model' when divisible.
   * SSM caches: batch over DP, heads over 'model'.
-The decode step is a single jit; XLA turns the position-masked attention
-over a sequence-sharded cache into partial reductions + a combine, which the
-§Perf pass replaces with the explicit locality-aware logsumexp combine.
+
+Decode is compiled twice when the tuning policy picks a non-XLA combine for
+the sequence-parallel cache reduction:
+  * "xla"      — single jit; XLA turns the position-masked attention over
+    the sequence-sharded cache into partial reductions + its own implicit
+    combine (an all-reduce of the full per-step stat payload).
+  * "locality" — the same forward, but every decode-attention layer runs
+    inside a FULLY-manual ``shard_map`` region (all mesh axes manual — the
+    legacy partitioner cannot place manual-axis collectives in partial-auto
+    regions, see DESIGN.md §3): per-shard flash-style partial stats
+    (o-accumulator, running max, sumexp) from
+    ``models.attention.decode_partial_stats``, combined with the explicit
+    ``core.collectives.locality_logsumexp_combine``
+    (max-allreduce → rescale → packed sum-allreduce). The cache write lands
+    on the owning shard via a masked device-local dynamic_update_slice —
+    no gather of the sharded cache, and no all-reduce of the stat payload
+    in the compiled HLO.
+``Engine`` dispatches on the resolved ``CombineChoice`` and surfaces
+per-step combine traffic in ``Engine.stats()``.
 """
 from __future__ import annotations
 
@@ -18,9 +34,12 @@ from typing import Any, Callable
 import jax
 import jax.numpy as jnp
 import numpy as np
+from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import collectives as C
 from repro.models import encdec, transformer
+from repro.models.attention import decode_partial_stats
 from repro.train.sharding import dp_axes, make_shard_fn, param_specs
 
 
@@ -116,6 +135,9 @@ class ServeArtifacts:
     cache_shardings_: Any
     abstract_params: Any
     combine: Any = None       # CombineChoice for the decode cache-combine
+    decode_fn_xla: Callable | None = None       # always-compiled GSPMD path
+    decode_fn_locality: Callable | None = None  # manual combine path (or None)
+    combine_layers: int = 0   # attention layers the manual combine covers
 
 
 @dataclasses.dataclass(frozen=True)
@@ -137,8 +159,19 @@ class CombineChoice:
     p_local: int
 
 
-def resolve_cache_combine(cfg, mesh, batch: int, cache_len: int) -> CombineChoice:
-    """Resolve the decode cache-combine collective through repro.tuning."""
+def resolve_cache_combine(cfg, mesh, batch: int, cache_len: int,
+                          override: str | None = None) -> CombineChoice:
+    """Resolve the decode cache-combine collective through repro.tuning.
+
+    The combine is priced as the two-phase ``logsumexp_combine`` collective
+    (max-allreduce of the running max, then the packed o+l sum-allreduce) —
+    not as a single sum allreduce, which is what it replaces.
+    ``override`` ("xla"/"locality") forces the algorithm, keeping the
+    resolved geometry (source becomes "explicit"); the layout still decides
+    whether there is anything to combine at all.
+    """
+    if override is not None and override not in ("xla", "locality"):
+        raise ValueError(f"unknown combine override {override!r}")
     batch_sharded, seq_ax = _cache_layout(mesh, batch)
     seq_sharded = (not batch_sharded and seq_ax is not None
                    and _axsize(mesh, seq_ax) > 1
@@ -147,17 +180,126 @@ def resolve_cache_combine(cfg, mesh, batch: int, cache_len: int) -> CombineChoic
         return CombineChoice("none", "n/a", 0, 1, 1)
     H = getattr(cfg, "n_heads", 1)
     D = getattr(cfg, "head_dim_", getattr(cfg, "d_model", 0) // max(H, 1))
+    # per-RANK stat payload: when cache_shardings puts KV heads on 'model'
+    # the combine moves H/m heads per rank, not H — pricing with the full
+    # head count would overstate the payload by the TP factor
+    m = _axsize(mesh, "model")
+    if m > 1 and getattr(cfg, "n_kv_heads", H) % m == 0:
+        H //= m
     nbytes = batch * H * (D + 1) * 4          # fp32 o + logsumexp per step
     # the cache L dim is sharded over 'data' ONLY (pods hold replicas), so
     # the combine spans exactly the 'data' ranks — one region, all ICI
     p = p_local = _axsize(mesh, seq_ax)
+    if override is not None:
+        return CombineChoice(override, "explicit", nbytes, p, p_local)
     from repro.tuning.policy import default_policy
-    sel = default_policy().select("allreduce", p, p_local, nbytes)
+    sel = default_policy().select("logsumexp_combine", p, p_local, nbytes)
     return CombineChoice(sel.algorithm, sel.source, nbytes, p, p_local)
 
 
+def _combine_layer_count(cfg, mesh, cache_len: int, seq_ax: str | None) -> int:
+    """Decode-attention layers the locality hook will actually handle —
+    mirrors the per-layer fallbacks of ``_make_locality_decode_combine``
+    (ring/chunk cache lengths indivisible by the shard count, head_dim
+    model-sharded caches), so engine stats account real combine traffic
+    and a layout with zero eligible layers never compiles the manual path."""
+    if seq_ax is None:
+        return 0
+    n = _axsize(mesh, seq_ax)
+    m = _axsize(mesh, "model")
+    if n <= 1:
+        return 0
+    kv = getattr(cfg, "n_kv_heads", 1)
+    kv_sharded = m > 1 and kv % m == 0
+    if m > 1 and not kv_sharded and cfg.head_dim_ % m == 0:
+        return 0                       # head_dim-sharded caches: xla path
+    if cfg.family == "audio":
+        return cfg.n_layers if cache_len % n == 0 else 0
+    count = 0
+    for spec in cfg.layer_plan():
+        if spec.mixer not in ("attn", "shared_attn"):
+            continue
+        rl = transformer.ring_cache_len(cfg, spec)
+        L = cache_len if rl is None else min(cache_len, rl)
+        if L % n == 0:
+            count += 1
+    return count
+
+
+def _make_locality_decode_combine(cfg, mesh, seq_ax: str):
+    """Build the per-layer ``decode_combine`` hook for sequence-sharded caches.
+
+    Returns a callable matching ``models.attention.attention``'s
+    ``decode_combine`` protocol. Per layer it traces ONE fully-manual
+    ``shard_map`` region (manual over every mesh axis — required on the
+    legacy partitioner, and it keeps the whole cache update + partial-stat
+    attention device-local) that:
+
+      1. writes the new token's K/V into the owning sequence shard
+         (masked device-local dynamic_update_slice — slot ``pos`` lives on
+         shard ``pos // L_loc``; ring caches use slot ``pos % L``);
+      2. computes flash-style partial stats over the local cache slice;
+      3. combines them with ``locality_logsumexp_combine`` over the
+         sequence axis and normalizes.
+
+    Falls back (returns None → the layer keeps the GSPMD path) when the
+    layer's cache length is not divisible by the sequence shard count, or
+    when ``cache_shardings`` would put 'model' on the head_dim (the q·k
+    contraction would then need a model-axis reduction inside the region).
+    """
+    n = _axsize(mesh, seq_ax)
+    m = _axsize(mesh, "model")
+    axis_names = set(mesh.axis_names)        # fully manual region
+
+    def combine(q, k_new, v_new, k_cache, v_cache, pos, meta):
+        B, L, KV, D = k_cache.shape
+        if L % n != 0 or n == 1:
+            return None
+        kv_m = "model" if (m > 1 and KV % m == 0) else None
+        if m > 1 and kv_m is None and D % m == 0:
+            return None       # head_dim model-sharded cache: xla path
+        L_loc = L // n
+        ring = meta["ring"]
+        cache_spec = P(None, seq_ax, kv_m, None)
+        new_spec = P(None, None, kv_m, None)
+        q_spec = P(None, None, kv_m, None)   # H sharded iff KV heads are
+
+        def region(q_, k_n, v_n, k_c, v_c, pos_):
+            i = lax.axis_index(seq_ax)
+            offset = i * L_loc
+            slot_g = pos_ % L if ring else pos_
+            slot_l = slot_g - offset
+            owns = (slot_l >= 0) & (slot_l < L_loc)
+            idx = jnp.clip(slot_l, 0, L_loc - 1)
+            k_u = lax.dynamic_update_slice(k_c, k_n.astype(k_c.dtype),
+                                           (0, idx, 0, 0))
+            v_u = lax.dynamic_update_slice(v_c, v_n.astype(v_c.dtype),
+                                           (0, idx, 0, 0))
+            k_c = jnp.where(owns, k_u, k_c)
+            v_c = jnp.where(owns, v_u, v_c)
+            o, mx, l = decode_partial_stats(
+                q_, k_c, v_c, pos_, slot_offset=offset, total_len=L,
+                window=meta["window"], chunk=meta["chunk"], cap=meta["cap"],
+                ring=ring)
+            o, l = C.locality_logsumexp_combine(o, mx, l, (), (seq_ax,))
+            out = (o / l[..., None]).astype(v_c.dtype)
+            return out, k_c, v_c
+
+        fn = jax.shard_map(region, mesh=mesh,
+                           in_specs=(q_spec, new_spec, new_spec,
+                                     cache_spec, cache_spec, P()),
+                           out_specs=(q_spec, cache_spec, cache_spec),
+                           axis_names=axis_names, check_vma=False)
+        return fn(q, k_new, v_new, k_cache, v_cache, pos)
+
+    return combine
+
+
 def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
-                   prefill_len: int | None = None) -> ServeArtifacts:
+                   prefill_len: int | None = None,
+                   combine: str = "auto") -> ServeArtifacts:
+    """combine: "auto" resolves through repro.tuning; "xla"/"locality" force
+    the decode cache-combine algorithm (explicit benchmark/test dispatch)."""
     mod = encdec if cfg.family == "audio" else transformer
     a_params = jax.eval_shape(
         lambda k: mod.init_params(k, cfg), jax.random.PRNGKey(0))
@@ -190,6 +332,24 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
                                        shard=shard)
         return logits, cache
 
+    choice = resolve_cache_combine(
+        cfg, mesh, batch, cache_len,
+        override=None if combine == "auto" else combine)
+    _, seq_ax = _cache_layout(mesh, batch)
+    combine_layers = 0
+    if choice.algorithm == "locality":
+        combine_layers = _combine_layer_count(cfg, mesh, cache_len, seq_ax)
+        if combine_layers == 0:
+            # every layer would take the per-layer fallback — don't compile
+            # a manual path that executes nothing
+            choice = dataclasses.replace(choice, algorithm="xla")
+
+    def decode_locality(params, cache, tokens):
+        hook = _make_locality_decode_combine(cfg, mesh, seq_ax)
+        logits, _, cache = mod.forward(params, cfg, tokens, cache=cache,
+                                       shard=shard, decode_combine=hook)
+        return logits, cache
+
     dp_size = max(1, int(np.prod([_axsize(mesh, a) for a in dp])))
     row_spec = P(dp, None) if (dp and batch % dp_size == 0) else P()
     tok_sh = NamedSharding(mesh, row_spec)
@@ -206,32 +366,59 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
         batch_in_sh["img_embeds"] = in_sh(3)
     prefill_fn = jax.jit(prefill, in_shardings=(p_sh, batch_in_sh),
                          out_shardings=(None, c_sh))
-    decode_fn = jax.jit(decode, in_shardings=(p_sh, c_sh, tok_sh),
-                        donate_argnums=(1,), out_shardings=(None, c_sh))
+    decode_jit_kw: dict[str, Any] = dict(in_shardings=(p_sh, c_sh, tok_sh),
+                                         donate_argnums=(1,),
+                                         out_shardings=(None, c_sh))
+    decode_fn_xla = jax.jit(decode, **decode_jit_kw)
+    decode_fn_locality = None
+    if choice.algorithm == "locality":
+        decode_fn_locality = jax.jit(decode_locality, **decode_jit_kw)
+    # dispatch: the CombineChoice picks which compiled decode serves traffic
+    decode_fn = decode_fn_locality or decode_fn_xla
     return ServeArtifacts(prefill_fn=prefill_fn, decode_fn=decode_fn,
                           param_shardings=p_sh, cache_shardings_=c_sh,
-                          abstract_params=a_params,
-                          combine=resolve_cache_combine(cfg, mesh, batch,
-                                                        cache_len))
+                          abstract_params=a_params, combine=choice,
+                          decode_fn_xla=decode_fn_xla,
+                          decode_fn_locality=decode_fn_locality,
+                          combine_layers=combine_layers)
 
 
 class Engine:
     """Minimal batched greedy-decoding engine over the jitted steps."""
 
     def __init__(self, cfg, mesh, params, *, batch: int, cache_len: int,
+                 combine: str = "auto",
                  log: Callable[[str], None] | None = None):
         self.cfg = cfg
-        self.art = make_serve_fns(cfg, mesh, batch=batch, cache_len=cache_len)
+        self.art = make_serve_fns(cfg, mesh, batch=batch, cache_len=cache_len,
+                                  combine=combine)
         params = jax.tree.map(
             lambda p: p.astype(cfg.dtype) if p.dtype == jnp.float32 else p,
             params)
         self.params = jax.device_put(params, self.art.param_shardings)
         self.cache_len = cache_len
         self.combine = self.art.combine
+        self._stats = {"decode_steps": 0, "combine_steps": 0,
+                       "combine_bytes": 0}
         if log and self.combine.algorithm != "none":
             log(f"[engine] cache-combine: {self.combine.algorithm} "
                 f"({self.combine.source}, {self.combine.nbytes} B/step, "
                 f"p={self.combine.p} p_local={self.combine.p_local})")
+
+    def _next_token(self, logits) -> jax.Array:
+        """Greedy sampling rule, shared by prefill and decode so it cannot
+        drift: argmax over the last position, clamped below the padded-vocab
+        ids (vocab is padded to a multiple; padding logits must never be
+        emitted as tokens)."""
+        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
+        return jnp.minimum(tok, self.cfg.vocab_size - 1)
+
+    def stats(self) -> dict:
+        """Cumulative serving counters: decode steps and the explicit
+        cache-combine traffic they generated (bytes = per-rank stat payload
+        × eligible attention layers × steps; zero when the combine runs on
+        the implicit XLA path or no layer qualifies for the manual one)."""
+        return dict(self._stats)
 
     def generate(self, prompts: np.ndarray, max_new: int,
                  extra: dict | None = None) -> np.ndarray:
@@ -240,12 +427,15 @@ class Engine:
         batch_in.update(extra or {})
         logits, cache = self.art.prefill_fn(self.params, batch_in)
         out = []
-        tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-        # never emit padding ids (vocab padded to a multiple)
-        tok = jnp.minimum(tok, self.cfg.vocab_size - 1)
+        tok = self._next_token(logits)
+        combining = self.combine.algorithm == "locality"
         for _ in range(max_new):
             out.append(np.asarray(tok))
             logits, cache = self.art.decode_fn(self.params, cache, tok)
-            tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
-            tok = jnp.minimum(tok, self.cfg.vocab_size - 1)
+            tok = self._next_token(logits)
+            self._stats["decode_steps"] += 1
+            if combining:
+                self._stats["combine_steps"] += 1
+                self._stats["combine_bytes"] += (
+                    self.combine.nbytes * self.art.combine_layers)
         return np.concatenate(out, axis=1)

@@ -29,6 +29,12 @@ from repro.core.topology import RegionMap, ceil_log
 
 ALLGATHER_ALGORITHMS = tuple(schedules.ALGORITHMS)   # the five paper algs
 ALLREDUCE_ALGORITHMS = ("locality", "xla")
+LOGSUMEXP_ALGORITHMS = ("locality", "xla")
+
+# Serving head dims are 64-128; the running-max phase of the logsumexp
+# combine moves payload/(D+1) bytes. Priced at D=64 (the conservative end:
+# the largest relative max-phase cost).
+LOGSUMEXP_HEAD_DIM = 64
 
 
 @dataclasses.dataclass(frozen=True)
@@ -114,12 +120,43 @@ def simulate_allreduce(algorithm: str, p: int, p_local: int,
     raise ValueError(f"unknown allreduce algorithm {algorithm!r}")
 
 
+def simulate_logsumexp_combine(algorithm: str, p: int, p_local: int,
+                               nbytes: float,
+                               machine: cost_model.MachineParams | str,
+                               head_dim: int = LOGSUMEXP_HEAD_DIM) -> float:
+    """Two-phase decode cache-combine: max-allreduce of the running maxima
+    (payload nbytes/(head_dim+1)) then the packed o+l sum-allreduce
+    (payload nbytes). "xla" prices GSPMD's implicit combine (flat recursive
+    doubling for the max, flat ring for the sum); "locality" the explicit
+    ``collectives.locality_logsumexp_combine`` structure. The two-phase
+    accounting replaces the single-sum-allreduce pricing the serve layer
+    used before it could execute the combine.
+    """
+    if isinstance(machine, str):
+        machine = cost_model.MACHINES[machine]
+    if p <= 1:
+        return 0.0
+    max_bytes = nbytes / (head_dim + 1)
+    if algorithm == "xla":
+        return (cost_model.max_allreduce_model(p, p_local, max_bytes, machine,
+                                               structure="flat")
+                + simulate_allreduce("xla", p, p_local, nbytes, machine))
+    if algorithm == "locality":
+        return (cost_model.max_allreduce_model(p, p_local, max_bytes, machine,
+                                               structure="locality")
+                + simulate_allreduce("locality", p, p_local, nbytes, machine))
+    raise ValueError(f"unknown logsumexp_combine algorithm {algorithm!r}")
+
+
 def simulate(collective: str, algorithm: str, p: int, p_local: int,
              nbytes: float, machine: cost_model.MachineParams | str) -> float:
     if collective == "allgather":
         return simulate_allgather(algorithm, p, p_local, nbytes, machine)
     if collective == "allreduce":
         return simulate_allreduce(algorithm, p, p_local, nbytes, machine)
+    if collective == "logsumexp_combine":
+        return simulate_logsumexp_combine(algorithm, p, p_local, nbytes,
+                                          machine)
     raise ValueError(f"unknown collective {collective!r}")
 
 
@@ -152,18 +189,43 @@ def _measure_real(collective: str, algorithm: str, p: int, p_local: int,
     elif collective == "allreduce":
         def body(s):
             return C.allreduce(s, "outer", "local", algorithm=algorithm)
+    elif collective == "logsumexp_combine":
+        # payload layout mirrors the decode stats: (n, D) o-accumulator +
+        # (n,) running max + (n,) sumexp, n rows per rank
+        D = LOGSUMEXP_HEAD_DIM
+        n_rows = max(1, int(nbytes) // ((D + 1) * itemsize))
+        x = (jnp.zeros((p * n_rows, D), dtype), jnp.zeros((p * n_rows,), dtype),
+             jnp.ones((p * n_rows,), dtype))
+
+        def body(o, m, l):
+            ot, lt = C.locality_logsumexp_combine(
+                o, m, l, "outer", "local", algorithm=algorithm)
+            return ot, lt
     else:
         raise ValueError(f"unknown collective {collective!r}")
 
-    f = jax.jit(jax.shard_map(body, mesh=mesh,
-                              in_specs=P(("outer", "local")),
-                              out_specs=P(("outer", "local"))))
+    if collective == "logsumexp_combine":
+        spec = P(("outer", "local"))
+        f = jax.jit(jax.shard_map(body, mesh=mesh,
+                                  in_specs=(spec, spec, spec),
+                                  out_specs=(spec, spec), check_vma=False))
+        args = x
+    else:
+        f = jax.jit(jax.shard_map(body, mesh=mesh,
+                                  in_specs=P(("outer", "local")),
+                                  out_specs=P(("outer", "local"))))
+        args = (x,)
+
+    def run():
+        out = f(*args)
+        jax.block_until_ready(out)
+
     for _ in range(warmup):
-        f(x).block_until_ready()
+        run()
     samples = []
     for _ in range(iters):
         t0 = time.perf_counter()
-        f(x).block_until_ready()
+        run()
         samples.append(time.perf_counter() - t0)
     return statistics.median(samples)
 

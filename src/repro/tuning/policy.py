@@ -24,7 +24,8 @@ import os
 import threading
 
 from .cache import SchemaVersionError, TuningCache, bucket_bytes
-from .measure import ALLREDUCE_ALGORITHMS, Fingerprint, simulate_allreduce
+from .measure import (ALLREDUCE_ALGORITHMS, LOGSUMEXP_ALGORITHMS, Fingerprint,
+                      simulate_allreduce, simulate_logsumexp_combine)
 
 DEFAULT_TABLE_ENV = "REPRO_TUNING_TABLE"
 DEFAULT_TABLE_PATH = os.path.join("results", "tuning_table.json")
@@ -114,6 +115,17 @@ class Policy:
                      for a in ALLREDUCE_ALGORITHMS}
             if p_local <= 1 or p <= p_local:
                 return Selection("xla", "model", costs["xla"])
+            best = min(costs, key=costs.get)
+            return Selection(best, "model", costs[best])
+        if collective == "logsumexp_combine":
+            # the serve decode cache-combine: two-phase max+sum pricing.
+            # Unlike plain allreduce, a single-region topology does NOT
+            # default to "xla" — the explicit RS→AG sum structure can beat
+            # the flat ring even inside one region, and the manual decode
+            # path only engages when the policy (or an override) says so.
+            costs = {a: simulate_logsumexp_combine(a, p, p_local, nbytes,
+                                                   self.machine)
+                     for a in LOGSUMEXP_ALGORITHMS}
             best = min(costs, key=costs.get)
             return Selection(best, "model", costs[best])
         raise ValueError(f"unknown collective {collective!r}")

@@ -20,16 +20,23 @@ from typing import Any, Sequence
 
 from repro.core import autotune
 from .cache import Entry, TuningCache, bucket_bytes
-from .measure import (ALLGATHER_ALGORITHMS, ALLREDUCE_ALGORITHMS, Fingerprint,
-                      measure, simulate_allreduce)
+from .measure import (ALLGATHER_ALGORITHMS, ALLREDUCE_ALGORITHMS,
+                      LOGSUMEXP_ALGORITHMS, Fingerprint, measure,
+                      simulate_allreduce, simulate_logsumexp_combine)
 from .policy import Policy
 
 DEFAULT_SIZES = tuple(2 ** k for k in range(6, 23, 2))   # 64 B .. 4 MiB
+DEFAULT_COLLECTIVES = ("allgather", "allreduce", "logsumexp_combine")
+SMOKE_SIZES = (256, 4096, 65536)         # CI pre-merge: 3 octaves, 1 iter
+
+_ALGORITHMS = {"allgather": ALLGATHER_ALGORITHMS,
+               "allreduce": ALLREDUCE_ALGORITHMS,
+               "logsumexp_combine": LOGSUMEXP_ALGORITHMS}
 
 
 def run_sweep(p: int = 16, p_local: int = 4, *,
               sizes: Sequence[int] = DEFAULT_SIZES,
-              collectives: Sequence[str] = ("allgather", "allreduce"),
+              collectives: Sequence[str] = DEFAULT_COLLECTIVES,
               dtype: str = "float32", mode: str = "auto",
               machine: str = "lassen", hysteresis: float = 0.10,
               iters: int = 5, warmup: int = 2) -> tuple[TuningCache, dict]:
@@ -45,8 +52,7 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
     cache = TuningCache()
     cells: list[dict[str, Any]] = []
     for collective in collectives:
-        algorithms = (ALLGATHER_ALGORITHMS if collective == "allgather"
-                      else ALLREDUCE_ALGORITHMS)
+        algorithms = _ALGORITHMS[collective]
         for nbytes in sizes:
             costs = {}
             for alg in algorithms:
@@ -65,9 +71,14 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
             if collective == "allgather":
                 modeled = autotune.model_costs(p, p_local, nbytes, machine)
                 self_cmp = False
-            else:
+            elif collective == "allreduce":
                 modeled = {a: simulate_allreduce(a, p, p_local, nbytes, machine)
                            for a in ALLREDUCE_ALGORITHMS}
+                self_cmp = eff_mode == "simulated"
+            else:                       # logsumexp_combine
+                modeled = {a: simulate_logsumexp_combine(a, p, p_local,
+                                                         nbytes, machine)
+                           for a in LOGSUMEXP_ALGORITHMS}
                 self_cmp = eff_mode == "simulated"
             cells.append({
                 "collective": collective, "p": p, "p_local": p_local,
@@ -129,7 +140,14 @@ def main(argv: Sequence[str] | None = None) -> tuple[TuningCache, dict]:
     ap.add_argument("--p-local", type=int, default=4, help="ranks per region")
     ap.add_argument("--sizes", default=None,
                     help="comma-separated bytes-per-rank list")
-    ap.add_argument("--collectives", default="allgather,allreduce")
+    ap.add_argument("--collectives", default=",".join(DEFAULT_COLLECTIVES))
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI pre-merge mode: 3 byte octaves, single "
+                         "iteration, no warmup, and (unless --mode is "
+                         "given) the deterministic simulated executor — "
+                         "a single unwarmed wall-clock sample would be "
+                         "compile-dominated and must never be persisted "
+                         "as a real-hardware crossover")
     ap.add_argument("--dtype", default="float32")
     ap.add_argument("--mode", default="auto",
                     choices=["auto", "real", "simulated"])
@@ -142,11 +160,19 @@ def main(argv: Sequence[str] | None = None) -> tuple[TuningCache, dict]:
     args = ap.parse_args(argv)
 
     sizes = (tuple(int(s) for s in args.sizes.split(","))
-             if args.sizes else DEFAULT_SIZES)
+             if args.sizes else (SMOKE_SIZES if args.smoke else DEFAULT_SIZES))
+    mode = args.mode
+    if args.smoke:
+        if mode == "real":
+            ap.error("--smoke cannot use --mode real: a single unwarmed "
+                     "sample is compile-dominated and would be persisted "
+                     "as a measured crossover")
+        mode = "simulated"
     cache, report = run_sweep(
         args.p, args.p_local, sizes=sizes,
         collectives=tuple(args.collectives.split(",")), dtype=args.dtype,
-        mode=args.mode, machine=args.machine, hysteresis=args.hysteresis)
+        mode=mode, machine=args.machine, hysteresis=args.hysteresis,
+        iters=1 if args.smoke else 5, warmup=0 if args.smoke else 2)
     write_outputs(cache, report, table_path=args.table,
                   report_path=args.report)
     agg = report["winner_agreement"]

@@ -6,6 +6,8 @@ the TPU interpret backend.
 """
 import pytest
 
+pytestmark = pytest.mark.slow      # multi-device subprocess suite
+
 COLLECTIVES_CODE = r"""
 import jax, jax.numpy as jnp
 import numpy as np

@@ -8,6 +8,8 @@ from repro.core.topology import RegionMap, ceil_log
 from repro.kernels.dma_allgather.schedule_compile import (
     compile_schedule, execute_table, locality_bruck_raw)
 
+pytestmark = pytest.mark.hypothesis
+
 
 def _check(dma):
     out = execute_table(dma)

@@ -10,6 +10,8 @@ from _hypothesis_compat import given, settings, strategies as st
 from repro import configs
 from repro.models.moe import _dispatch_tables, capacity, moe_apply, moe_init
 
+pytestmark = pytest.mark.hypothesis
+
 
 @settings(max_examples=25, deadline=None)
 @given(st.integers(2, 16), st.integers(1, 4), st.integers(4, 32),

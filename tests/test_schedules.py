@@ -7,6 +7,8 @@ from _hypothesis_compat import given, settings, strategies as st
 from repro.core import schedules as S
 from repro.core.topology import RegionMap, ceil_log
 
+pytestmark = pytest.mark.hypothesis
+
 ALGS = ["bruck", "ring", "hierarchical", "multilane", "locality_bruck"]
 
 

@@ -1,6 +1,8 @@
 import pytest
 from _hypothesis_compat import given, strategies as st
 
+pytestmark = pytest.mark.hypothesis
+
 from repro.core.topology import RegionMap, ceil_log, is_power_of
 
 

@@ -4,6 +4,8 @@ import pytest
 
 from repro.runtime import StepMonitor
 
+pytestmark = pytest.mark.slow      # multi-device subprocess suite
+
 TRAINER_CODE = r"""
 import jax, shutil, dataclasses
 from repro import configs

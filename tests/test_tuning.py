@@ -199,6 +199,7 @@ print("GRAD_SYNC_AUTO_OK", tr.artifacts.grad_sync,
 """
 
 
+@pytest.mark.slow
 def test_trainer_grad_sync_auto(subproc):
     assert "GRAD_SYNC_AUTO_OK" in subproc(GRAD_SYNC_AUTO_CODE, devices=8)
 
@@ -240,5 +241,6 @@ print("AUTO_EQUIV_OK")
 """
 
 
+@pytest.mark.slow
 def test_allgather_auto_equivalence_in_shard_map(subproc):
     assert "AUTO_EQUIV_OK" in subproc(AUTO_EQUIV_CODE, devices=16)
