@@ -1,6 +1,9 @@
-"""Shared benchmark utilities: timing + subprocess multi-device runs."""
+"""Shared benchmark utilities: timing, subprocess multi-device runs, and the
+environment metadata stamp every BENCH_*.json carries (the CI trend job only
+diffs artifacts whose stamps match — like with like)."""
 from __future__ import annotations
 
+import json
 import os
 import subprocess
 import sys
@@ -9,6 +12,31 @@ import time
 REPO = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
 SRC = os.path.join(REPO, "src")
 RESULTS = os.path.join(REPO, "results")
+
+
+def bench_metadata(devices: int | None = None) -> dict:
+    """jax version / backend / device identity of this benchmark run.
+
+    ``devices`` overrides the live device count for benchmarks whose real
+    work runs in a forced-host-device subprocess (the parent process only
+    sees 1 CPU device).
+    """
+    import jax
+    return {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": devices if devices is not None else jax.device_count(),
+        "device_kind": jax.devices()[0].device_kind,
+    }
+
+
+def write_bench_json(path: str, payload: dict, *,
+                     devices: int | None = None) -> None:
+    """Persist one BENCH_*.json with the metadata stamp injected."""
+    payload = dict(payload)
+    payload.setdefault("meta", bench_metadata(devices))
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1, sort_keys=True)
 
 
 def time_us(fn, *, warmup: int = 3, iters: int = 20) -> float:

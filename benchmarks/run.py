@@ -10,6 +10,13 @@
     ``allgather(..., algorithm="auto")`` and ``grad_sync="auto"`` then
     resolve through — and writes the Fig. 9-style measured-vs-modeled
     report to ``BENCH_tuning.json``.
+
+``python benchmarks/run.py overlap``
+    Eager vs double-buffered-prefetch FSDP train pipeline (DESIGN.md §5):
+    wall-clock step time / tokens per second on an 8-device subprocess plus
+    the simulated exposed-communication split; writes
+    ``BENCH_overlap.json`` and fails if the prefetched pipeline does not
+    reduce exposed communication (or breaks exact equality).
 """
 from __future__ import annotations
 
@@ -25,7 +32,8 @@ if __package__ in (None, ""):                     # `python benchmarks/run.py`
     __package__ = "benchmarks"
 
 from . import (collective_hlo_audit, fig3_pingpong, fig7_model_scaling,
-               fig8_model_datasize, fig9_measured, roofline, serve_combine)
+               fig8_model_datasize, fig9_measured, overlap, roofline,
+               serve_combine)
 
 BENCHES = {
     "fig3": fig3_pingpong,
@@ -33,6 +41,7 @@ BENCHES = {
     "fig8": fig8_model_datasize,
     "fig9": fig9_measured,
     "hlo_audit": collective_hlo_audit,
+    "overlap": overlap,
     "roofline": roofline,
     "serve_combine": serve_combine,
 }
@@ -61,11 +70,16 @@ def main() -> None:
                        help="comma-separated subset of " + ",".join(BENCHES))
     sub.add_parser("tune", help="run the collective tuning sweep",
                    add_help=False)
+    sub.add_parser("overlap", help="eager vs prefetched pipeline benchmark")
     # default to `bench` for backward compatibility: `run.py --only fig7`
     argv = sys.argv[1:]
     if argv[:1] == ["tune"]:
         from repro.tuning import sweep
         sweep.main(argv[1:])
+        return
+    if argv[:1] == ["overlap"]:
+        print("name,us_per_call,derived")
+        overlap.main()
         return
     if argv[:1] != ["bench"] and any(a.startswith("--only") for a in argv):
         argv = ["bench"] + argv

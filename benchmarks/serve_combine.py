@@ -13,7 +13,7 @@ from __future__ import annotations
 import json
 import os
 
-from .common import REPO, emit, run_multidevice
+from .common import REPO, emit, run_multidevice, write_bench_json
 
 OUT = os.path.join(REPO, "BENCH_serve_combine.json")
 
@@ -71,8 +71,7 @@ def main() -> list[tuple]:
     stdout = run_multidevice(CODE, devices=8, timeout=1800)
     line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
     out = json.loads(line[4:])
-    with open(OUT, "w") as f:
-        json.dump(out, f, indent=1, sort_keys=True)
+    write_bench_json(OUT, out, devices=8)
 
     rows = []
     for alg in ("xla", "locality"):

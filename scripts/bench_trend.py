@@ -1,0 +1,135 @@
+#!/usr/bin/env python
+"""Perf-trend gate: diff BENCH_*.json artifacts against the previous run.
+
+``python scripts/bench_trend.py --prev prev-bench/ --cur . [--threshold 0.10]``
+
+Walks every ``BENCH_*.json`` present in BOTH directories, compares each
+known metric at the same JSON path, and exits non-zero when any regresses
+by more than the threshold (>10% by default — the nightly CI gate). Files
+whose ``meta`` stamp (jax version / backend / device count, see
+``benchmarks.common.bench_metadata``) differs between the runs are skipped
+with a notice: a jax upgrade or runner change is not a code regression and
+must not be graded as one.
+
+Metric direction is keyed by name: ``*_us``/``us_per_step`` and the modeled
+``*_s``/fractions regress UP, ``tokens_per_s`` regresses DOWN. Wall-clock
+metrics on shared CI runners are noisy, so they take
+``max(threshold, --wall-threshold)`` (default 0.30) while deterministic
+modeled/simulated metrics use the strict threshold.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+import sys
+
+#: metric-name -> direction ("lower" is better / "higher" is better),
+#: wall-clock flag (noisy on shared runners)
+METRICS: dict[str, tuple[str, bool]] = {
+    "us_per_step": ("lower", True),
+    "us_per_call": ("lower", True),
+    "tokens_per_s": ("higher", True),
+    "exposed_comm_s": ("lower", False),
+    "exposed_comm_fraction": ("lower", False),
+    "modeled_step_s": ("lower", False),
+    "hidden_s_per_layer": ("higher", False),
+}
+
+
+def _walk(node, path=()):
+    if isinstance(node, dict):
+        for k, v in node.items():
+            yield from _walk(v, path + (k,))
+    elif isinstance(node, list):
+        for i, v in enumerate(node):
+            yield from _walk(v, path + (str(i),))
+    elif isinstance(node, (int, float)) and not isinstance(node, bool):
+        yield path, float(node)
+
+
+def compare_file(name: str, prev: dict, cur: dict, threshold: float,
+                 wall_threshold: float) -> list[str]:
+    """Returns the list of regression messages for one artifact."""
+    if prev.get("meta") != cur.get("meta"):
+        print(f"{name}: SKIP — meta stamp changed "
+              f"({prev.get('meta')} -> {cur.get('meta')}); not comparable")
+        return []
+    prev_vals = dict(_walk(prev))
+    regressions = []
+    compared = 0
+    for path, cur_v in _walk(cur):
+        metric = path[-1]
+        spec = METRICS.get(metric)
+        if spec is None or path not in prev_vals:
+            continue
+        direction, wall = spec
+        prev_v = prev_vals[path]
+        if prev_v <= 0:
+            continue
+        change = (cur_v - prev_v) / prev_v
+        if direction == "higher":
+            change = -change            # normalized: positive == worse
+        compared += 1
+        limit = max(threshold, wall_threshold) if wall else threshold
+        tag = ".".join(path)
+        if change > limit:
+            regressions.append(
+                f"{name}: {tag} regressed {change * 100:.1f}% "
+                f"({prev_v:.6g} -> {cur_v:.6g}, limit {limit * 100:.0f}%)")
+        elif change < -threshold:
+            print(f"{name}: {tag} improved {-change * 100:.1f}% "
+                  f"({prev_v:.6g} -> {cur_v:.6g})")
+    print(f"{name}: compared {compared} metrics, "
+          f"{len(regressions)} regression(s)")
+    return regressions
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--prev", required=True,
+                    help="directory holding the previous run's artifacts")
+    ap.add_argument("--cur", default=".",
+                    help="directory holding this run's artifacts")
+    ap.add_argument("--threshold", type=float, default=0.10,
+                    help="relative regression that fails the gate")
+    ap.add_argument("--wall-threshold", type=float, default=0.30,
+                    help="noise floor for wall-clock metrics on shared "
+                         "runners (the larger of this and --threshold)")
+    ap.add_argument("--pattern", default="BENCH_*.json")
+    args = ap.parse_args(argv)
+
+    if not os.path.isdir(args.prev):
+        print(f"no previous artifacts at {args.prev!r} — first run, "
+              "nothing to diff")
+        return 0
+    cur_files = sorted(glob.glob(os.path.join(args.cur, args.pattern)))
+    if not cur_files:
+        print(f"FAIL: no {args.pattern} in {args.cur!r} — the bench step "
+              "produced nothing to track")
+        return 1
+    regressions: list[str] = []
+    for cur_path in cur_files:
+        name = os.path.basename(cur_path)
+        prev_path = os.path.join(args.prev, name)
+        if not os.path.exists(prev_path):
+            print(f"{name}: SKIP — no previous artifact (new benchmark)")
+            continue
+        try:
+            with open(prev_path) as f:
+                prev = json.load(f)
+            with open(cur_path) as f:
+                cur = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"{name}: SKIP — unreadable ({e})")
+            continue
+        regressions += compare_file(name, prev, cur, args.threshold,
+                                    args.wall_threshold)
+    for r in regressions:
+        print("REGRESSION:", r, file=sys.stderr)
+    return 1 if regressions else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())

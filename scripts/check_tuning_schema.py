@@ -28,13 +28,25 @@ sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
 from repro.tuning.cache import TuningCache, make_key           # noqa: E402
 from repro.tuning.measure import (ALLGATHER_ALGORITHMS,        # noqa: E402
                                   ALLREDUCE_ALGORITHMS,
-                                  LOGSUMEXP_ALGORITHMS)
+                                  LOGSUMEXP_ALGORITHMS,
+                                  OVERLAP_ALGORITHMS)
 
 KNOWN_ALGORITHMS = {
     "allgather": set(ALLGATHER_ALGORITHMS) | {"xla"},
     "allreduce": set(ALLREDUCE_ALGORITHMS),
     "logsumexp_combine": set(LOGSUMEXP_ALGORITHMS),
 }
+
+
+def _known_algorithms(collective: str):
+    if collective.startswith("overlap:i"):
+        # intensity-octave overlap cells: "overlap:i<k>" with integer k
+        try:
+            int(collective.split(":i", 1)[1])
+        except ValueError:
+            return None
+        return set(OVERLAP_ALGORITHMS)
+    return KNOWN_ALGORITHMS.get(collective)
 
 
 def check_table(path: str) -> int:
@@ -56,9 +68,12 @@ def check_table(path: str) -> int:
         if e.p_local < 1 or e.p % e.p_local != 0:
             print(f"{ctx}: FAIL — p={e.p} not divisible by p_local={e.p_local}")
             return 1
-        algs = KNOWN_ALGORITHMS.get(e.collective)
+        algs = _known_algorithms(e.collective)
         if algs is None:
             print(f"{ctx}: FAIL — unknown collective {e.collective!r}")
+            return 1
+        if not isinstance(e.generation, int) or e.generation < 0:
+            print(f"{ctx}: FAIL — invalid generation {e.generation!r}")
             return 1
         if not e.costs:
             print(f"{ctx}: FAIL — empty costs map")

@@ -29,9 +29,26 @@ plus reductions built on them:
                             softmax stats: max-allreduce → rescale →
                             packed sum-allreduce (the serve decode
                             cache-combine executed by serve/engine.py)
+
+and split (async-style) halves for the overlap pipeline (DESIGN.md §5):
+  allgather_start/finish    the non-local ``outer`` ppermute rounds run in
+                            ``start``; the final local redistribution
+                            completes in ``finish`` at the consumer —
+                            call start for layer i+1 before layer i's
+                            compute and the wire time is off the critical
+                            path (XLA overlaps the independent rounds)
+  allreduce_start/finish    program-order split (reduction rounds form one
+                            dependency chain, so start runs them all; the
+                            value is issuing them before independent
+                            compute in trace order)
+  locality_logsumexp_combine_start/finish
+                            the max-allreduce of the running maxima needs
+                            only ``m`` — issue it right after the scores
+                            and hide it behind the o/l accumulation
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import math
 from typing import Sequence
@@ -320,6 +337,170 @@ def allgather(x: jax.Array, outer: Axes, local: Axes = (), *,
 
 
 # =============================================================================
+# Split (start/finish) collectives — the overlap pipeline's communication half
+# =============================================================================
+# ``allgather_finish(allgather_start(x, ...)) == allgather(x, ...)`` — the
+# same op sequence, divided so the expensive non-local rounds run in start
+# and only the cheap local redistribution remains at the consumer. A caller
+# that issues start(layer i+1) before layer i's compute makes the non-local
+# ppermutes data-independent of that compute, which is exactly what XLA's
+# latency-hiding scheduler needs to overlap them (it splits collectives into
+# -start/-done pairs and slides independent work between).
+
+#: Default lookahead of the double-buffered pipelines (layers of params
+#: gathered ahead of the consumer). 1 = classic double buffering; 0 = eager.
+PREFETCH_DEPTH_DEFAULT = 1
+
+
+@dataclasses.dataclass(frozen=True)
+class _SplitMeta:
+    """Static half of a PendingCollective (hashable: safe under jit/scan)."""
+
+    op: str                        # "allgather" | "allreduce" | "logsumexp"
+    kind: str                      # phase tag, see the start functions
+    outer: tuple[str, ...] = ()
+    local: tuple[str, ...] = ()
+    tiled: bool = False
+    x_shape: tuple[int, ...] = ()
+    group: int = 1                 # locality_bruck: chunks held pre-finish
+    active: int = 1                # locality_bruck: lanes live in last round
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclasses.dataclass
+class PendingCollective:
+    """An in-flight split collective.
+
+    Registered as a pytree so it can ride a ``lax.scan`` carry (the
+    double-buffered pipelines keep one pending gather per lookahead slot).
+    """
+
+    arrays: tuple
+    meta: _SplitMeta
+
+    def tree_flatten(self):
+        return tuple(self.arrays), self.meta
+
+    @classmethod
+    def tree_unflatten(cls, meta, arrays):
+        return cls(tuple(arrays), meta)
+
+
+def locality_bruck_allgather_start(x: jax.Array, outer: Axes, local: Axes, *,
+                                   tiled: bool = False,
+                                   assume_varying: bool = False
+                                   ) -> PendingCollective:
+    """Algorithm 2, split: everything through the LAST non-local ppermute.
+
+    Intermediate rounds keep their local redistribution (the next non-local
+    round consumes it), so only the final local allgather + canonical
+    reordering — pure ICI traffic — is deferred to ``finish``. All DCN bytes
+    are on the wire when start returns.
+    """
+    outer, local = _tup(outer), _tup(local)
+    r, pl = _size(outer), _size(local)
+    if not assume_varying:
+        x = _varying(x, outer + local)
+    if pl == 1:
+        full = bruck_allgather(x, outer + local, tiled=tiled,
+                               assume_varying=True)
+        return PendingCollective((full,), _SplitMeta("allgather", "done"))
+    l = lax.axis_index(local)
+    flat = lambda Rg, lg: Rg * pl + lg
+
+    with jax.named_scope(f"loc_bruck_ag_start_r{r}_pl{pl}"):
+        buf = bruck_allgather(x, local, assume_varying=True)
+        if r == 1:
+            return PendingCollective(
+                (buf,), _SplitMeta("allgather", "local_done", outer, local,
+                                   tiled, x.shape, group=1, active=1))
+        group = 1
+        step = 0
+        while True:
+            n_groups = -(-r // group)
+            active = min(pl, n_groups)
+            pairs = [(flat(Rg, lg), flat((Rg - lg * group) % r, lg))
+                     for Rg in range(r) for lg in range(1, active)]
+            with jax.named_scope(f"nonlocal_step{step}"):
+                recv = lax.ppermute(buf, outer + local, pairs)
+            if group * active >= r:        # last round: defer redistribution
+                return PendingCollective(
+                    (buf, recv), _SplitMeta("allgather", "pending", outer,
+                                            local, tiled, x.shape,
+                                            group=group, active=active))
+            unit = jnp.where(l == 0, buf, recv)
+            with jax.named_scope(f"redistribute_step{step}"):
+                stacked = bruck_allgather(unit, local, assume_varying=True)
+            stacked = stacked[:active]
+            buf = stacked.reshape((active * group * pl,) + x.shape)
+            group *= active
+            step += 1
+
+
+def locality_bruck_allgather_finish(pending: PendingCollective) -> jax.Array:
+    """Complete a split Algorithm 2: final local redistribution + reorder."""
+    meta = pending.meta
+    if meta.kind == "done":
+        return pending.arrays[0]
+    outer, local = meta.outer, meta.local
+    r, pl = _size(outer) if outer else 1, _size(local)
+    x_shape = meta.x_shape
+    with jax.named_scope(f"loc_bruck_ag_finish_r{r}_pl{pl}"):
+        if meta.kind == "local_done":
+            (buf,) = pending.arrays
+            group = meta.group
+        else:
+            buf, recv = pending.arrays
+            l = lax.axis_index(local)
+            unit = jnp.where(l == 0, buf, recv)
+            with jax.named_scope("redistribute_final"):
+                stacked = bruck_allgather(unit, local, assume_varying=True)
+            stacked = stacked[:meta.active]
+            buf = stacked.reshape((meta.active * meta.group * pl,) + x_shape)
+            group = meta.group * meta.active
+        if group > r:                      # non-power wrap: drop duplicates
+            buf = buf[: r * pl]
+        chunks = buf.reshape((r, pl) + x_shape)
+        if outer:                          # canonical region order
+            chunks = jnp.roll(chunks, lax.axis_index(outer), axis=0)
+        buf = chunks.reshape((r * pl,) + x_shape)
+    return _out(buf, meta.tiled, x_shape)
+
+
+def allgather_start(x: jax.Array, outer: Axes, local: Axes = (), *,
+                    algorithm: str = "locality_bruck", tiled: bool = False,
+                    assume_varying: bool = False) -> PendingCollective:
+    """Issue an allgather; complete it with :func:`allgather_finish`.
+
+    For ``locality_bruck`` the non-local rounds genuinely complete in start
+    (locality_bruck_allgather_start); every other algorithm has no local
+    tail to defer, so start runs the whole gather and the split is a
+    program-order hook — still the mechanism that lets a double-buffered
+    caller issue it before independent compute.
+    """
+    if algorithm == "auto":
+        algorithm = _resolve_auto("allgather", x, _tup(outer), _tup(local))
+    if not _tup(local):
+        algorithm = "bruck" if algorithm in ("locality_bruck", "hierarchical",
+                                             "multilane") else algorithm
+    if algorithm == "locality_bruck":
+        return locality_bruck_allgather_start(
+            x, outer, local, tiled=tiled, assume_varying=assume_varying)
+    if algorithm == "bruck":
+        full = bruck_allgather(x, _tup(outer) + _tup(local), tiled=tiled,
+                               assume_varying=assume_varying)
+    else:
+        full = ALLGATHERS[algorithm](x, outer, local, tiled)
+    return PendingCollective((full,), _SplitMeta("allgather", "done"))
+
+
+def allgather_finish(pending: PendingCollective) -> jax.Array:
+    """Complete an :func:`allgather_start`; bit-identical to the eager path."""
+    assert pending.meta.op == "allgather", pending.meta
+    return locality_bruck_allgather_finish(pending)
+
+
+# =============================================================================
 # Reductions
 # =============================================================================
 def reduce_scatter(y: jax.Array, outer: Axes, local: Axes = (), *,
@@ -493,6 +674,27 @@ def allreduce(x: jax.Array, outer: Axes, local: Axes = (), *,
     raise ValueError(f"unknown allreduce algorithm {algorithm!r}")
 
 
+def allreduce_start(x: jax.Array, outer: Axes, local: Axes = (), *,
+                    algorithm: str = "locality", outer_algorithm: str = "rhd",
+                    op: str = "sum") -> PendingCollective:
+    """Issue an allreduce; complete it with :func:`allreduce_finish`.
+
+    Reduction rounds form one dependency chain (each combines the previous
+    round's result), so there is no local tail to defer: start runs the
+    whole reduction. The split is a *program-order* hook — call start as
+    soon as the operand exists and finish at the consumer, and every op
+    between the two is independent compute XLA can overlap the wire with.
+    """
+    red = allreduce(x, outer, local, algorithm=algorithm,
+                    outer_algorithm=outer_algorithm, op=op)
+    return PendingCollective((red,), _SplitMeta("allreduce", "done"))
+
+
+def allreduce_finish(pending: PendingCollective) -> jax.Array:
+    assert pending.meta.op == "allreduce", pending.meta
+    return pending.arrays[0]
+
+
 # =============================================================================
 # Logsumexp combine — the serve decode cache-combine (§Perf, serve/engine.py)
 # =============================================================================
@@ -517,12 +719,46 @@ def locality_logsumexp_combine(o: jax.Array, m: jax.Array, l: jax.Array,
          "locality", psum for "xla") instead of two separate collectives.
 
     Returns (o_total, l_total) in fp32; the caller normalizes o/l.
+
+    Composed of the split halves below, so the eager path and the
+    overlapped serve path (max-allreduce issued right after the scores,
+    finished after the o/l accumulation) cannot drift.
     """
+    with jax.named_scope("logsumexp_combine"):
+        pending = locality_logsumexp_combine_start(m, outer, local,
+                                                   algorithm=algorithm)
+        return locality_logsumexp_combine_finish(
+            o, l, pending, algorithm=algorithm,
+            outer_algorithm=outer_algorithm)
+
+
+def locality_logsumexp_combine_start(m: jax.Array, outer: Axes,
+                                     local: Axes = (), *,
+                                     algorithm: str = "locality"
+                                     ) -> PendingCollective:
+    """Phase 1 of the decode cache-combine: max-allreduce of the running
+    maxima. Depends ONLY on ``m`` — issue it the moment the masked scores
+    exist, before the (heavy) exp/accumulate that produces o and l, and the
+    latency-bound max phase rides behind that compute."""
     outer, local = _tup(outer), _tup(local)
     m = m.astype(jnp.float32)
-    with jax.named_scope("logsumexp_combine"):
+    with jax.named_scope("logsumexp_combine_start"):
         M = allreduce(m, outer, local, algorithm=algorithm,
                       outer_algorithm="rd", op="max")
+    return PendingCollective((m, M), _SplitMeta("logsumexp", "max_done",
+                                                outer, local))
+
+
+def locality_logsumexp_combine_finish(o: jax.Array, l: jax.Array,
+                                      pending: PendingCollective, *,
+                                      algorithm: str = "locality",
+                                      outer_algorithm: str = "rhd"
+                                      ) -> tuple[jax.Array, jax.Array]:
+    """Phases 2+3: rescale by exp(m − M), one packed [o, l] sum-allreduce."""
+    assert pending.meta.op == "logsumexp", pending.meta
+    m, M = pending.arrays
+    outer, local = pending.meta.outer, pending.meta.local
+    with jax.named_scope("logsumexp_combine_finish"):
         scale = jnp.exp(m - M)
         o32 = o.astype(jnp.float32) * scale[..., None]
         l32 = l.astype(jnp.float32) * scale

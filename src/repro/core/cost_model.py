@@ -214,6 +214,128 @@ def max_allreduce_model(p: int, p_local: int, nbytes: float, m: MachineParams,
                   n_nonlocal=n_nl, s_nonlocal=nbytes * n_nl)
 
 
+# ---------------------------------------------------------------------------
+# Overlap terms — the double-buffered prefetch pipeline (DESIGN.md §5).
+# ---------------------------------------------------------------------------
+#: TPU v5e bf16 peak (per chip) — the default compute-rate for pricing the
+#: overlap window; mirrors hlo_analysis.PEAK_FLOPS_BF16 (kept literal here so
+#: the postal layer stays import-free of the HLO layer).
+PEAK_FLOPS_DEFAULT = 197e12
+
+
+def locality_bruck_phase_split(p: int, p_local: int, block_bytes: float,
+                               m: MachineParams) -> tuple[float, float, float]:
+    """Algorithm 2's cost split along the ``allgather_start/finish`` seam.
+
+    Returns ``(t_start_local, t_nonlocal, t_finish_local)``:
+
+    * ``t_start_local``  — local traffic that must run before the last
+      non-local round (initial local allgather + intermediate
+      redistributions); lives in ``start``;
+    * ``t_nonlocal``     — every non-local (DCN) round; lives in ``start``;
+    * ``t_finish_local`` — the final local redistribution, deferred to
+      ``finish`` at the consumer.
+
+    The three phases are priced separately (per-phase mean message sizes),
+    which *refines* Eq. 4's aggregate-mean accounting: their sum is the
+    phase-resolved eager cost the overlap model composes from.
+    """
+    region = RegionMap(p=p, p_local=p_local)
+    r, pl = region.n_regions, p_local
+    if p <= 1:
+        return 0.0, 0.0, 0.0
+    if pl <= 1:
+        return 0.0, bruck_model(p, block_bytes, m), 0.0
+
+    b = block_bytes
+    n_sl, s_sl = ceil_log(2, pl), b * (pl - 1)        # initial local AG
+    n_nl = 0
+    s_nl = 0.0
+    n_fl = s_fl = 0.0
+    group = 1
+    while group < r:
+        n_groups = -(-r // group)
+        active = min(pl, n_groups)
+        n_nl += 1
+        s_nl += b * group * pl
+        redist_n = ceil_log(2, pl)
+        redist_s = b * (active - 1) * group * pl
+        if group * active >= r:            # last round: redistribute in finish
+            n_fl, s_fl = redist_n, redist_s
+        else:
+            n_sl += redist_n
+            s_sl += redist_s
+        group *= active
+
+    t_sl = m.cost(n_local=n_sl, s_local=s_sl, n_nonlocal=0, s_nonlocal=0.0)
+    t_nl = m.cost(n_local=0, s_local=0.0, n_nonlocal=n_nl, s_nonlocal=s_nl)
+    t_fl = m.cost(n_local=int(n_fl), s_local=s_fl, n_nonlocal=0,
+                  s_nonlocal=0.0)
+    return t_sl, t_nl, t_fl
+
+
+@dataclasses.dataclass(frozen=True)
+class OverlapCost:
+    """Per-layer gather cost under the eager vs prefetched schedule.
+
+    ``t_compute`` is the layer's matmul time — the window the double-buffered
+    pipeline slides the ``start`` chain (local prologue + non-local rounds)
+    into. The ``finish`` tail always stays exposed at the consumer.
+    """
+
+    t_start_local: float
+    t_nonlocal: float
+    t_finish_local: float
+    t_compute: float
+
+    @property
+    def exposed_eager(self) -> float:
+        """All communication serialized in front of the compute."""
+        return self.t_start_local + self.t_nonlocal + self.t_finish_local
+
+    @property
+    def exposed_prefetch(self) -> float:
+        """start chain hidden behind the previous layer's compute."""
+        chain = self.t_start_local + self.t_nonlocal
+        return self.t_finish_local + max(0.0, chain - self.t_compute)
+
+    @property
+    def exposed_nonlocal_eager(self) -> float:
+        return self.t_nonlocal
+
+    @property
+    def exposed_nonlocal_prefetch(self) -> float:
+        """The chain overlaps compute front-to-back; the non-local rounds sit
+        at its tail, so they are the last to become exposed."""
+        exposed_chain = max(0.0, self.t_start_local + self.t_nonlocal
+                            - self.t_compute)
+        return min(self.t_nonlocal, exposed_chain)
+
+    @property
+    def hidden(self) -> float:
+        return self.exposed_eager - self.exposed_prefetch
+
+    def step_time(self, prefetch: bool) -> float:
+        return self.t_compute + (self.exposed_prefetch if prefetch
+                                 else self.exposed_eager)
+
+
+def overlap_model(p: int, p_local: int, block_bytes: float, flops: float,
+                  m: MachineParams, *,
+                  peak_flops: float = PEAK_FLOPS_DEFAULT) -> OverlapCost:
+    """Price one layer's param gather against its compute window.
+
+    ``block_bytes`` is the per-rank shard of the layer's parameters (what
+    each rank contributes to the gather); ``flops`` the layer's per-device
+    matmul work. This is the (topology, bytes, flops) overlap term the
+    tuning policy learns crossovers over.
+    """
+    t_sl, t_nl, t_fl = locality_bruck_phase_split(p, p_local, block_bytes, m)
+    return OverlapCost(t_start_local=t_sl, t_nonlocal=t_nl,
+                       t_finish_local=t_fl,
+                       t_compute=flops / max(peak_flops, 1.0))
+
+
 MODELS = {
     "bruck": lambda p, pl, bb, m: bruck_model(p, bb, m),
     "ring": lambda p, pl, bb, m: ring_model(p, bb, m, pl),

@@ -1,0 +1,34 @@
+"""Dispatch layer for the fused decode-stat accumulation.
+
+``resolve_impl("auto")`` picks the Pallas kernel on real TPU backends and
+the jnp path elsewhere (the kernel only runs interpreted on CPU — correct
+but slow, so CPU serving keeps the fused-by-XLA jnp ops). The serve engine
+threads the resolved impl into its per-layer combine region.
+"""
+from __future__ import annotations
+
+import jax
+
+from .stats import decode_stats_accumulate_pallas
+
+IMPLS = ("auto", "jnp", "pallas", "pallas_interpret")
+
+
+def resolve_impl(impl: str = "auto") -> str:
+    if impl not in IMPLS:
+        raise ValueError(f"unknown decode-stats impl {impl!r}; known: {IMPLS}")
+    if impl == "auto":
+        return "pallas" if jax.default_backend() == "tpu" else "jnp"
+    return impl
+
+
+def accumulate(s, mask, m, v_cache, *, impl: str = "jnp"):
+    """(o, l) from masked scores — impl must already be resolved."""
+    if impl in ("pallas", "pallas_interpret"):
+        return decode_stats_accumulate_pallas(
+            s, m, v_cache, interpret=(impl == "pallas_interpret"))
+    if impl != "jnp":
+        raise ValueError(f"unresolved decode-stats impl {impl!r} "
+                         "(call resolve_impl first)")
+    from repro.models.attention import decode_stats_accumulate
+    return decode_stats_accumulate(s, mask, m, v_cache)

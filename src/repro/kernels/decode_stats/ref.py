@@ -1,0 +1,22 @@
+"""Pure-jnp oracle for the fused decode-stat accumulation kernel.
+
+Mirrors ``models/attention.decode_stats_accumulate`` with fp32 P·V
+accumulation (what the Pallas kernel computes); for fp32 caches the two are
+identical.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+NEG_INF = -2.0 ** 30
+
+
+def decode_stats_accumulate_ref(s, m, v_cache):
+    """s (B,KV,G,L) masked fp32, m (B,KV,G), v (B,L,KV,D) ->
+    (o (B,1,H,D) fp32, l (B,1,H) fp32)."""
+    B, KV, G, _ = s.shape
+    D = v_cache.shape[-1]
+    p = jnp.where(s > NEG_INF * 0.5, jnp.exp(s - m[..., None]), 0.0)
+    l = jnp.sum(p, axis=-1)
+    o = jnp.einsum("bkgj,bjkd->bkgd", p, v_cache.astype(jnp.float32))
+    return o.reshape(B, 1, KV * G, D), l.reshape(B, 1, KV * G)

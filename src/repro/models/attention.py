@@ -114,20 +114,19 @@ def multihead_attention(q, k, v, *, causal=True, window=0, chunk=0, cap=0.0,
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
 
-def decode_partial_stats(q, k_cache, v_cache, pos, *, slot_offset=0,
-                         total_len=None, window=0, chunk=0, cap=0.0,
-                         ring=False):
-    """Flash-style partial stats of one-token decode attention over a cache
-    *slice*: q (B,1,H,D) vs k/v (B,Lloc,KV,D) holding global slots
-    [slot_offset, slot_offset + Lloc) of a ``total_len``-slot cache.
+def decode_stats_scores(q, k_cache, pos, *, slot_offset=0, total_len=None,
+                        window=0, chunk=0, cap=0.0, ring=False):
+    """The cheap prefix of one-token decode attention over a cache slice:
+    masked fp32 scores.
 
-    Returns fp32 ``(o, m, l)`` with o (B,1,H,D) the UNNORMALIZED accumulator
-    Σ_j exp(s_j − m)·v_j, m (B,1,H) the running max over this slice, and
-    l (B,1,H) = Σ_j exp(s_j − m). A fully-masked slice yields (0, NEG_INF, 0)
-    — the combine's global rescale exp(m − M) zeroes its contribution. This
-    is the per-shard body the serve engine wraps in ``shard_map`` for the
-    sequence-parallel locality cache-combine; the single-device decode path
-    below finalizes the same stats, so the two paths cannot drift.
+    q (B,1,H,D) vs k (B,Lloc,KV,D) holding global slots
+    [slot_offset, slot_offset + Lloc) of a ``total_len``-slot cache.
+    Returns ``(s, mask)`` with s (B,KV,G,Lloc) already NEG_INF-masked and
+    mask (Lloc,) boolean. Split out so the serve engine can issue the
+    max-allreduce of the running maxima right here — everything after
+    (exp / sum / the P·V matmul, :func:`decode_stats_accumulate` or the
+    Pallas kernel in ``kernels/decode_stats``) is independent compute the
+    collective hides behind (DESIGN.md §5).
     """
     B, _, H, D = q.shape
     L_loc = k_cache.shape[1]
@@ -147,13 +146,52 @@ def decode_partial_stats(q, k_cache, v_cache, pos, *, slot_offset=0,
     if chunk:
         mask &= (t_j // chunk) == (pos // chunk)
     s = jnp.where(mask[None, None, None], s, NEG_INF)
-    m = jnp.max(s, axis=-1)                           # (B,KV,G)
+    return s, mask
+
+
+def decode_stats_accumulate(s, mask, m, v_cache):
+    """The heavy suffix: exp(s − m), row sums, and the P·V contraction.
+
+    s/mask from :func:`decode_stats_scores`, m (B,KV,G) the slice's running
+    max. Returns fp32 ``(o, l)`` reshaped to (B,1,H,D) / (B,1,H).
+    """
+    B, KV, G, _ = s.shape
+    H = KV * G
+    D = v_cache.shape[-1]
     p = jnp.exp(s - m[..., None])
     p = jnp.where(mask[None, None, None], p, 0.0)     # m=NEG_INF ⇒ exp(0)=1
     l = jnp.sum(p, axis=-1)
     o = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v_cache.dtype),
                    v_cache).astype(jnp.float32)
-    return (o.reshape(B, 1, H, D), m.reshape(B, 1, H), l.reshape(B, 1, H))
+    return o.reshape(B, 1, H, D), l.reshape(B, 1, H)
+
+
+def decode_partial_stats(q, k_cache, v_cache, pos, *, slot_offset=0,
+                         total_len=None, window=0, chunk=0, cap=0.0,
+                         ring=False):
+    """Flash-style partial stats of one-token decode attention over a cache
+    *slice*: q (B,1,H,D) vs k/v (B,Lloc,KV,D) holding global slots
+    [slot_offset, slot_offset + Lloc) of a ``total_len``-slot cache.
+
+    Returns fp32 ``(o, m, l)`` with o (B,1,H,D) the UNNORMALIZED accumulator
+    Σ_j exp(s_j − m)·v_j, m (B,1,H) the running max over this slice, and
+    l (B,1,H) = Σ_j exp(s_j − m). A fully-masked slice yields (0, NEG_INF, 0)
+    — the combine's global rescale exp(m − M) zeroes its contribution. This
+    is the per-shard body the serve engine wraps in ``shard_map`` for the
+    sequence-parallel locality cache-combine; the single-device decode path
+    below finalizes the same stats, so the two paths cannot drift.
+
+    Composed of :func:`decode_stats_scores` + :func:`decode_stats_accumulate`
+    — the exact op sequence the engine's overlapped region traces, so the
+    split path is bitwise-identical to this one.
+    """
+    B, _, H, _ = q.shape
+    s, mask = decode_stats_scores(q, k_cache, pos, slot_offset=slot_offset,
+                                  total_len=total_len, window=window,
+                                  chunk=chunk, cap=cap, ring=ring)
+    m = jnp.max(s, axis=-1)                           # (B,KV,G)
+    o, l = decode_stats_accumulate(s, mask, m, v_cache)
+    return o, m.reshape(B, 1, H), l
 
 
 def decode_attention(q, k_cache, v_cache, pos, *, window=0, chunk=0, cap=0.0,

@@ -94,7 +94,8 @@ def _cross_kv(lp, cfg, enc_out):
 
 
 def forward(params, cfg, tokens, *, frames=None, mode="train", cache=None,
-            cache_len=0, shard=None, remat=True, decode_combine=None):
+            cache_len=0, shard=None, remat=True, decode_combine=None,
+            prefetch=None):
     """Returns (logits, aux, new_cache). See transformer.forward for modes.
 
     decode-mode cache: {"self": stacked {k,v}, "cross": stacked (k,v),
@@ -102,7 +103,14 @@ def forward(params, cfg, tokens, *, frames=None, mode="train", cache=None,
     decode_combine applies to the decoder *self*-attention caches only; the
     cross-attention K/V are read-only prefill products and stay on the
     GSPMD path.
+    prefetch: the double-buffered FSDP pipeline hook is a decoder-only-stack
+    feature; the encoder-decoder path keeps eager gathers (train/step.py
+    never enables it for the audio family) and rejects a hook loudly rather
+    than consuming sharded params as if they were gathered.
     """
+    if prefetch is not None:
+        raise NotImplementedError(
+            "prefetch pipeline is transformer-only (see DESIGN.md §5)")
     shard = shard or _noop
     dt = cfg.dtype
     B, S = tokens.shape

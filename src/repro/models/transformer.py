@@ -183,7 +183,7 @@ def init_params(rng, cfg) -> dict:
 
 def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
             cache_len=0, shard: Shard | None = None, remat=True,
-            decode_combine=None):
+            decode_combine=None, prefetch=None):
     """Returns (logits, aux, new_cache).
 
     train:   logits (B,S,Vpad); new_cache None.
@@ -192,6 +192,14 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
     decode:  tokens (B,1); cache required; logits (B,1,Vpad).
     decode_combine: serve-layer hook for the decode cache write + attention
              over a sequence-sharded cache (see models/attention.attention).
+    prefetch: train-layer hook for the double-buffered FSDP pipeline
+             (DESIGN.md §5). When set (train mode only), ``params["blocks"]``
+             holds per-device SHARDS and the scan becomes a pipelined
+             double buffer: ``prefetch.start`` issues the gather for layer
+             i + depth BEFORE layer i's compute, ``prefetch.finish``
+             completes it at the consumer. The hook carries ``.depth``
+             (lookahead slots); every other param subtree arrives gathered
+             as usual.
     """
     shard = shard or _noop
     plan = cfg.layer_plan()
@@ -235,12 +243,67 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
             ncs[f"slot{j}"] = nc
         return x_carry, (aux_acc, ncs)
 
+    if prefetch is not None and mode != "train":
+        # the step.py contract puts per-device SHARDS in params["blocks"]
+        # whenever the hook is set — falling through to the eager scan
+        # would consume shard-shaped leaves as full weights
+        raise NotImplementedError(
+            "prefetch pipeline is train-mode only (see DESIGN.md §5)")
     body_fn = jax.checkpoint(body) if (remat and mode == "train") else body
     scan_cache = cache["blocks"] if decode else None
     from repro._jax_compat import scan_compat
-    x, (aux_s, scan_ncs) = scan_compat(
-        body_fn, x, (params["blocks"], scan_cache), length=reps)
-    aux_total += jnp.sum(aux_s)
+    if prefetch is not None:
+        # Double-buffered pipeline: the scan carries a FIFO of `depth`
+        # in-flight gathers. Each iteration issues the gather for layer
+        # i + depth FIRST (data-independent of this layer's output — the
+        # scheduler can put its rounds on the wire under the matmuls),
+        # then completes layer i's pending gather and computes. The last
+        # `depth` layers drain the FIFO unrolled. Gathers stay OUTSIDE the
+        # remat boundary so the backward transposes them into their
+        # reduce-scatters exactly once (no re-gather on recompute).
+        def apply_block(x_carry, lp_all):
+            aux_acc = jnp.zeros((), jnp.float32)
+            for j, spec in enumerate(block_specs):
+                lp = (params["shared_attn"] if spec.mixer == "shared_attn"
+                      else lp_all[f"slot{j}"])
+                x_carry, aux, _ = _apply_layer(
+                    lp, x_carry, cfg, spec, positions=positions, cache=None,
+                    build_cache=False, cache_len=cache_len, pos=pos,
+                    shard=shard, decode_combine=None)
+                aux_acc += aux
+            return x_carry, aux_acc
+
+        block_fn = jax.checkpoint(apply_block) if remat else apply_block
+        blocks = params["blocks"]
+        take = lambda i: jax.tree.map(lambda t: t[i], blocks)
+        depth = max(1, int(getattr(prefetch, "depth", 1)))
+        scan_ncs = None
+        if reps <= depth:
+            # lookahead covers the whole stack: issue everything up front
+            pendings = [prefetch.start(take(i)) for i in range(reps)]
+            for i in range(reps):
+                x, aux = block_fn(x, prefetch.finish(pendings[i]))
+                aux_total += aux
+        else:
+            fifo = tuple(prefetch.start(take(i)) for i in range(depth))
+            xs_ahead = jax.tree.map(lambda t: t[depth:], blocks)
+
+            def pf_body(carry, lp_ahead):
+                x_c, pend = carry
+                nxt = prefetch.start(lp_ahead)          # layer i + depth
+                x_c, aux = block_fn(x_c, prefetch.finish(pend[0]))
+                return (x_c, pend[1:] + (nxt,)), aux
+
+            (x, fifo), aux_s = scan_compat(pf_body, (x, fifo), xs_ahead,
+                                           length=reps - depth)
+            aux_total += jnp.sum(aux_s)
+            for i in range(depth):                      # drain the FIFO
+                x, aux = block_fn(x, prefetch.finish(fifo[i]))
+                aux_total += aux
+    else:
+        x, (aux_s, scan_ncs) = scan_compat(
+            body_fn, x, (params["blocks"], scan_cache), length=reps)
+        aux_total += jnp.sum(aux_s)
 
     rest_ncs = []
     for i in range(rem):

@@ -38,8 +38,9 @@ from jax import lax
 from jax.sharding import NamedSharding, PartitionSpec as P
 
 from repro.core import collectives as C
+from repro.kernels.decode_stats import ops as stats_ops
 from repro.models import encdec, transformer
-from repro.models.attention import decode_partial_stats
+from repro.models.attention import decode_stats_scores
 from repro.train.sharding import dp_axes, make_shard_fn, param_specs
 
 
@@ -138,6 +139,7 @@ class ServeArtifacts:
     decode_fn_xla: Callable | None = None       # always-compiled GSPMD path
     decode_fn_locality: Callable | None = None  # manual combine path (or None)
     combine_layers: int = 0   # attention layers the manual combine covers
+    fused_stats: str = "jnp"  # resolved partial-stat impl ("jnp"/"pallas"/...)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -226,7 +228,8 @@ def _combine_layer_count(cfg, mesh, cache_len: int, seq_ax: str | None) -> int:
     return count
 
 
-def _make_locality_decode_combine(cfg, mesh, seq_ax: str):
+def _make_locality_decode_combine(cfg, mesh, seq_ax: str,
+                                  stats_impl: str = "jnp"):
     """Build the per-layer ``decode_combine`` hook for sequence-sharded caches.
 
     Returns a callable matching ``models.attention.attention``'s
@@ -238,9 +241,15 @@ def _make_locality_decode_combine(cfg, mesh, seq_ax: str):
       1. writes the new token's K/V into the owning sequence shard
          (masked device-local dynamic_update_slice — slot ``pos`` lives on
          shard ``pos // L_loc``; ring caches use slot ``pos % L``);
-      2. computes flash-style partial stats over the local cache slice;
-      3. combines them with ``locality_logsumexp_combine`` over the
-         sequence axis and normalizes.
+      2. computes the masked scores + running max over the local cache
+         slice and IMMEDIATELY issues the combine's max-allreduce
+         (``locality_logsumexp_combine_start`` — split halves of
+         core/collectives);
+      3. accumulates the flash-style o/l partials (``stats_impl`` picks the
+         jnp ops or the fused Pallas kernel of ``kernels/decode_stats``) —
+         the real compute the in-flight max-allreduce hides behind;
+      4. finishes the combine (rescale + packed sum-allreduce) and
+         normalizes.
 
     Falls back (returns None → the layer keeps the GSPMD path) when the
     layer's cache length is not divisible by the sequence shard count, or
@@ -277,11 +286,16 @@ def _make_locality_decode_combine(cfg, mesh, seq_ax: str):
                                            (0, idx, 0, 0))
             k_c = jnp.where(owns, k_u, k_c)
             v_c = jnp.where(owns, v_u, v_c)
-            o, mx, l = decode_partial_stats(
-                q_, k_c, v_c, pos_, slot_offset=offset, total_len=L,
+            s, smask = decode_stats_scores(
+                q_, k_c, pos_, slot_offset=offset, total_len=L,
                 window=meta["window"], chunk=meta["chunk"], cap=meta["cap"],
                 ring=ring)
-            o, l = C.locality_logsumexp_combine(o, mx, l, (), (seq_ax,))
+            mx = jnp.max(s, axis=-1)                 # (B, KV/m, G)
+            B_, KV_, G_ = mx.shape
+            pend = C.locality_logsumexp_combine_start(
+                mx.reshape(B_, 1, KV_ * G_), (), (seq_ax,))
+            o, l = stats_ops.accumulate(s, smask, mx, v_c, impl=stats_impl)
+            o, l = C.locality_logsumexp_combine_finish(o, l, pend)
             out = (o / l[..., None]).astype(v_c.dtype)
             return out, k_c, v_c
 
@@ -297,9 +311,13 @@ def _make_locality_decode_combine(cfg, mesh, seq_ax: str):
 
 def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
                    prefill_len: int | None = None,
-                   combine: str = "auto") -> ServeArtifacts:
+                   combine: str = "auto",
+                   fused_stats: str = "auto") -> ServeArtifacts:
     """combine: "auto" resolves through repro.tuning; "xla"/"locality" force
-    the decode cache-combine algorithm (explicit benchmark/test dispatch)."""
+    the decode cache-combine algorithm (explicit benchmark/test dispatch).
+    fused_stats: partial-stat accumulation inside the locality combine
+    region — "auto" (Pallas kernel on TPU, jnp elsewhere), "jnp", "pallas",
+    or "pallas_interpret" (kernel-path testing on CPU)."""
     mod = encdec if cfg.family == "audio" else transformer
     a_params = jax.eval_shape(
         lambda k: mod.init_params(k, cfg), jax.random.PRNGKey(0))
@@ -344,8 +362,11 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
             # a manual path that executes nothing
             choice = dataclasses.replace(choice, algorithm="xla")
 
+    stats_impl = stats_ops.resolve_impl(fused_stats)
+
     def decode_locality(params, cache, tokens):
-        hook = _make_locality_decode_combine(cfg, mesh, seq_ax)
+        hook = _make_locality_decode_combine(cfg, mesh, seq_ax,
+                                             stats_impl=stats_impl)
         logits, _, cache = mod.forward(params, cfg, tokens, cache=cache,
                                        shard=shard, decode_combine=hook)
         return logits, cache
@@ -380,18 +401,19 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
                           abstract_params=a_params, combine=choice,
                           decode_fn_xla=decode_fn_xla,
                           decode_fn_locality=decode_fn_locality,
-                          combine_layers=combine_layers)
+                          combine_layers=combine_layers,
+                          fused_stats=stats_impl)
 
 
 class Engine:
     """Minimal batched greedy-decoding engine over the jitted steps."""
 
     def __init__(self, cfg, mesh, params, *, batch: int, cache_len: int,
-                 combine: str = "auto",
+                 combine: str = "auto", fused_stats: str = "auto",
                  log: Callable[[str], None] | None = None):
         self.cfg = cfg
         self.art = make_serve_fns(cfg, mesh, batch=batch, cache_len=cache_len,
-                                  combine=combine)
+                                  combine=combine, fused_stats=fused_stats)
         params = jax.tree.map(
             lambda p: p.astype(cfg.dtype) if p.dtype == jnp.float32 else p,
             params)

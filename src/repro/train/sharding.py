@@ -105,6 +105,35 @@ def batch_spec() -> dict:
 
 
 # ---------------------------------------------------------------------------
+# FSDP gather geometry (shared by the eager gather and the prefetch pipeline)
+# ---------------------------------------------------------------------------
+def fsdp_dim(spec: P) -> int:
+    """Index of the 'data'-sharded dim of a leaf spec (-1 = replicated) —
+    the dim the ZeRO-3 gather (and its reduce-scatter transpose) runs over."""
+    for i, s in enumerate(spec):
+        names = (s,) if isinstance(s, str) else tuple(s or ())
+        if "data" in names:
+            return i
+    return -1
+
+
+def fsdp_param_dims(pspecs):
+    """Per-leaf fsdp dim for a whole param-spec pytree."""
+    return jax.tree.map(fsdp_dim, pspecs, is_leaf=lambda x: isinstance(x, P))
+
+
+def block_slice_dims(block_dims):
+    """Shift stacked-block fsdp dims to ONE scan slice's coordinates.
+
+    ``param_specs`` prefixes stacked leaves with P(None, ...) for the reps
+    dim, so a leaf sharded on dim k of the slice reports k+1 on the stack;
+    inside the scan the slice has no leading dim and the gather runs on
+    k — this undoes the offset (replicated leaves stay -1).
+    """
+    return jax.tree.map(lambda k: k - 1 if k >= 1 else -1, block_dims)
+
+
+# ---------------------------------------------------------------------------
 # activation constraint hooks
 # ---------------------------------------------------------------------------
 _ACT_RULES: dict[str, tuple] = {

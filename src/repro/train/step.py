@@ -31,8 +31,8 @@ from jax.sharding import NamedSharding, PartitionSpec as P
 from repro.core import collectives as C
 from repro.models import encdec, transformer
 from repro.optim import AdamW, TrainState
-from .sharding import (DP_AXES, batch_spec, dp_axes, make_shard_fn,
-                       param_specs)
+from .sharding import (DP_AXES, batch_spec, block_slice_dims, dp_axes,
+                       fsdp_param_dims, make_shard_fn, param_specs)
 
 
 # ---------------------------------------------------------------------------
@@ -62,12 +62,14 @@ def xent_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
 def make_loss_fn(cfg, *, remat: bool = True):
     model = encdec if cfg.family == "audio" else transformer
 
-    def loss_fn(params, batch, shard):
+    def loss_fn(params, batch, shard, prefetch=None):
         kw: dict[str, Any] = {}
         if cfg.family == "audio":
             kw["frames"] = batch["frames"]
         if cfg.family == "vlm" and "img_embeds" in batch:
             kw["img_embeds"] = batch["img_embeds"]
+        if prefetch is not None:
+            kw["prefetch"] = prefetch
         logits, aux, _ = model.forward(params, cfg, batch["tokens"],
                                        mode="train", shard=shard, remat=remat,
                                        **kw)
@@ -76,6 +78,54 @@ def make_loss_fn(cfg, *, remat: bool = True):
         return total, {"loss": loss, "moe_aux": aux["moe_aux"]}
 
     return loss_fn
+
+
+# ---------------------------------------------------------------------------
+# double-buffered FSDP param prefetch (the train half of DESIGN.md §5)
+# ---------------------------------------------------------------------------
+
+class BlockPrefetch:
+    """Per-layer ZeRO-3 gather hook for the scanned transformer pipeline.
+
+    ``start`` issues the allgather of ONE super-block slice's shards over
+    'data' (split halves of core/collectives — the wire rounds complete in
+    start); ``finish`` completes the local tail at the consumer. The model
+    scan calls start for layer i + depth before layer i's compute, so the
+    gather rides behind the matmuls instead of serializing in front of
+    them; autodiff transposes each start/finish pair into the matching
+    reduce-scatter, placed with the same lookahead in the backward.
+
+    Bitwise-identical to the eager ``_gather`` path: same cast, same
+    moveaxis, same Bruck schedule over 'data' (a single region —
+    ``locality_bruck`` start/finish degenerates to the local Bruck with a
+    deferred reorder).
+    """
+
+    def __init__(self, slice_dims, dtype, depth: int):
+        self.dims = slice_dims        # fsdp dim per slice leaf (-1 = repl.)
+        self.dtype = dtype
+        self.depth = depth
+
+    def _cast(self, leaf):
+        return leaf.astype(self.dtype) if leaf.dtype == jnp.float32 else leaf
+
+    def start(self, slice_shards):
+        def go(leaf, k):
+            if k < 0:
+                return self._cast(leaf)
+            x = jnp.moveaxis(self._cast(leaf), k, 0)
+            return C.allgather_start(x, (), ("data",),
+                                     algorithm="locality_bruck", tiled=True,
+                                     assume_varying=True)
+        return jax.tree.map(go, slice_shards, self.dims)
+
+    def finish(self, pending):
+        def done(p, k):
+            if k < 0:
+                return p
+            return jnp.moveaxis(C.allgather_finish(p), 0, k)
+        return jax.tree.map(done, pending, self.dims,
+                            is_leaf=lambda v: isinstance(v, C.PendingCollective))
 
 
 # ---------------------------------------------------------------------------
@@ -130,6 +180,8 @@ class StepArtifacts:
     grad_sync: str = ""               # resolved mode (never "auto")
     grad_algorithm: str = ""          # collective algorithm behind it
     grad_sync_source: str = ""        # "table" | "model" | "explicit"
+    prefetch_depth: int = 0           # resolved FSDP gather lookahead (0=eager)
+    prefetch_source: str = ""         # "table" | "model" | "explicit" | "n/a"
 
 
 def abstract_batch(cfg, shape) -> dict:
@@ -158,7 +210,8 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                     seq_shard: bool = False, remat: bool = True,
                     bucket_mb: float = 64.0, compress: bool = False,
                     donate: bool = True, shape="train_4k",
-                    grad_accum: int = 1) -> StepArtifacts:
+                    grad_accum: int = 1,
+                    prefetch_depth: int | str = 0) -> StepArtifacts:
     """grad_accum > 1 splits the per-device batch into microbatches inside a
     lax.scan: activation residency drops ~grad_accum×, the DP sync still
     happens once per step on the accumulated grads (the paper's collective
@@ -166,7 +219,15 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
 
     grad_sync="auto" resolves the algorithm from the postal model
     (core/autotune.py) using the model's gradient size and the mesh
-    topology — the paper's Eq. 2-4 promoted into a runtime policy."""
+    topology — the paper's Eq. 2-4 promoted into a runtime policy.
+
+    prefetch_depth: lookahead of the double-buffered FSDP gather pipeline
+    (DESIGN.md §5): 0 = eager (whole stacked gather in front of the
+    forward), d >= 1 = layer i + d's gather issued before layer i's
+    compute inside the scan. "auto" asks the tuning policy's overlap term
+    (per-layer gather bytes × layer flops on this topology). Applies to
+    paper-mode FSDP on the transformer family; degrades to eager where the
+    in-scan gather cannot run (legacy partial-auto split, encdec)."""
     optimizer = optimizer or AdamW()
     model = encdec if cfg.family == "audio" else transformer
     loss_fn = make_loss_fn(cfg, remat=remat)
@@ -213,6 +274,42 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
     for ax in dp:
         dp_size *= mesh.devices.shape[list(mesh.axis_names).index(ax)]
 
+    # --- prefetch pipeline resolution (paper-mode FSDP, transformer only) ---
+    names = list(mesh.axis_names)
+    d_size = mesh.devices.shape[names.index("data")] if "data" in names else 1
+    can_prefetch = (fsdp and grad_sync != "xla" and cfg.family != "audio"
+                    and d_size > 1 and "blocks" in a_params)
+    prefetch_source = "explicit"
+    if prefetch_depth == "auto":
+        prefetch_source = "n/a"
+        resolved_depth = 0
+        if can_prefetch:
+            # per-layer overlap term: per-rank gather bytes of one scanned
+            # super-block slice vs that slice's forward matmul window
+            blk_dims = fsdp_param_dims(pspecs)["blocks"]
+            blk_leaves = jax.tree.leaves(a_params["blocks"])
+            dim_leaves = jax.tree.leaves(blk_dims)
+            itemsize = jnp.dtype(cfg.dtype).itemsize
+            slice_elems = sum(int(np.prod(l.shape[1:])) for l in blk_leaves)
+            sharded_elems = sum(int(np.prod(l.shape[1:]))
+                                for l, k in zip(blk_leaves, dim_leaves)
+                                if k >= 0)
+            gather_bytes = sharded_elems * itemsize / d_size
+            tokens_per_dev = int(np.prod(b_abstract["tokens"].shape)) \
+                // max(dp_size, 1)
+            layer_flops = 2.0 * slice_elems * tokens_per_dev
+            from repro.tuning.policy import default_policy
+            sel = default_policy().select_overlap(d_size, d_size,
+                                                  gather_bytes, layer_flops)
+            resolved_depth = (C.PREFETCH_DEPTH_DEFAULT
+                              if sel.algorithm == "prefetch" else 0)
+            prefetch_source = sel.source
+    else:
+        resolved_depth = int(prefetch_depth)
+        if resolved_depth and not can_prefetch:
+            resolved_depth = 0          # nothing to pipeline on this config
+            prefetch_source = "n/a"
+
     # --- microbatch accumulation helper -------------------------------------
     def _accumulated(one_fn, batch):
         """Run one_fn over grad_accum microbatches via lax.scan, summing the
@@ -256,15 +353,7 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
         # reduce-scatter of the gradients — paper Algorithm 2 as the literal
         # FSDP communication path. Only the per-shard all-reduce over 'pod'
         # crosses the DCN boundary (1/16 of the bytes).
-        def _fsdp_dim(spec: P) -> int:
-            for i, s in enumerate(spec):
-                names = (s,) if isinstance(s, str) else tuple(s or ())
-                if "data" in names:
-                    return i
-            return -1
-
-        fsdp_dims = jax.tree.map(_fsdp_dim, pspecs,
-                                 is_leaf=lambda x: isinstance(x, P))
+        fsdp_dims = fsdp_param_dims(pspecs)
         param_in_specs = jax.tree.map(
             lambda sp, k: P(*[("data" if i == k else None)
                               for i in range(len(sp))]),
@@ -290,11 +379,26 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
             return C.allreduce(t, outer, local, algorithm=alg[0],
                                outer_algorithm=alg[1]) / dp_size
 
+        # the double-buffered pipeline hook: block shards stay sharded into
+        # the forward, gathered per scanned layer with depth-ahead issue
+        hook = None
+        if resolved_depth > 0 and can_prefetch:
+            hook = BlockPrefetch(block_slice_dims(fsdp_dims["blocks"]),
+                                 cfg.dtype, resolved_depth)
+
         def body(params, batch):
             shard = make_shard_fn(mesh, manual_dp=True, seq_shard=seq_shard)
 
             def one(mb):
                 def sharded_loss(shards):
+                    if hook is not None:
+                        rest = {k: v for k, v in shards.items()
+                                if k != "blocks"}
+                        rdims = {k: v for k, v in fsdp_dims.items()
+                                 if k != "blocks"}
+                        full = jax.tree.map(_gather, rest, rdims)
+                        full["blocks"] = shards["blocks"]
+                        return loss_fn(full, mb, shard, prefetch=hook)
                     full = jax.tree.map(_gather, shards, fsdp_dims)
                     return loss_fn(full, mb, shard)
                 return jax.value_and_grad(sharded_loss, has_aux=True)(params)
@@ -341,7 +445,10 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
             # FSDP degrades to ZeRO-1 semantics here: the in-body Bruck
             # param gather is also a manual-axis collective, so GSPMD
             # gathers at the jit boundary instead (in_specs P() below) and
-            # the step's final with_sharding_constraint re-scatters.
+            # the step's final with_sharding_constraint re-scatters. The
+            # prefetch pipeline needs the in-body gather, so it degrades
+            # with it (reflected in StepArtifacts.prefetch_depth = 0).
+            resolved_depth, prefetch_source = 0, "n/a"
             nogather_dims = jax.tree.map(lambda _: -1, fsdp_dims)
 
             def _strip_data(sp: P) -> P:
@@ -420,7 +527,9 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                          batch_shardings=batch_sh, abstract_state=a_state,
                          pspecs=pspecs, grad_sync=grad_sync,
                          grad_algorithm=grad_algorithm,
-                         grad_sync_source=grad_sync_source)
+                         grad_sync_source=grad_sync_source,
+                         prefetch_depth=resolved_depth,
+                         prefetch_source=prefetch_source)
 
 
 def init_state(cfg, mesh, artifacts: StepArtifacts, seed: int = 0) -> TrainState:

@@ -41,6 +41,7 @@ class TrainerConfig:
     grad_sync: str = "locality"
     fsdp: bool = False
     seq_shard: bool = False
+    prefetch_depth: int | str = 0     # FSDP gather lookahead (DESIGN.md §5)
     lr: float = 3e-4
     seed: int = 0
     straggler_k: float = 3.0
@@ -74,12 +75,17 @@ class Trainer:
             self.model_cfg, mesh,
             optimizer=AdamW(lr=t.lr),
             grad_sync=t.grad_sync, fsdp=t.fsdp, seq_shard=t.seq_shard,
+            prefetch_depth=t.prefetch_depth,
             shape=custom_batch_specs(self.model_cfg, t.global_batch, t.seq_len))
         if t.grad_sync == "auto":
             self.log(f"[trainer] grad_sync=auto -> "
                      f"{self.artifacts.grad_sync} "
                      f"({self.artifacts.grad_algorithm}, "
                      f"{self.artifacts.grad_sync_source})")
+        if t.prefetch_depth == "auto":
+            self.log(f"[trainer] prefetch_depth=auto -> "
+                     f"{self.artifacts.prefetch_depth} "
+                     f"({self.artifacts.prefetch_source})")
 
     def _init_or_restore(self) -> None:
         restored = self.ckpt.restore(self.artifacts.abstract_state,

@@ -17,6 +17,13 @@ Writes go through a tempfile + ``os.replace`` so a crashed sweep can never
 leave a torn table, and every file carries ``schema_version``: older known
 versions are migrated forward at load, newer (or unknown) versions raise
 ``SchemaVersionError`` rather than being silently misread.
+
+Staleness (schema v3): every entry is stamped with the measurement
+``generation`` — the sweep counter at the time it was measured. A sweep run
+against an existing table writes at ``max_generation() + 1``; buckets whose
+generation lags the table maximum by ``max_age`` or more are *stale* and
+``stale_keys()`` / ``Policy.stale_buckets()`` surface them so the next sweep
+re-measures exactly those cells instead of the full grid.
 """
 from __future__ import annotations
 
@@ -26,7 +33,7 @@ import os
 import tempfile
 from typing import Any, Callable, Iterator
 
-SCHEMA_VERSION = 2
+SCHEMA_VERSION = 3
 
 
 class SchemaVersionError(RuntimeError):
@@ -57,6 +64,7 @@ class Entry:
     bucket: int                    # bytes-per-rank bucket (power of two)
     costs: dict[str, float]        # algorithm -> seconds (median)
     source: str                    # "measured" | "simulated"
+    generation: int = 0            # sweep counter when this cell was measured
 
     @property
     def best(self) -> str:
@@ -81,8 +89,17 @@ def _migrate_v1(raw: dict[str, Any]) -> dict[str, Any]:
     return raw
 
 
+def _migrate_v2(raw: dict[str, Any]) -> dict[str, Any]:
+    """v2 lacked per-entry ``generation`` (no staleness tracking)."""
+    for e in raw.get("entries", {}).values():
+        e.setdefault("generation", 0)
+    raw["schema_version"] = 3
+    return raw
+
+
 _MIGRATIONS: dict[int, Callable[[dict[str, Any]], dict[str, Any]]] = {
     1: _migrate_v1,
+    2: _migrate_v2,
 }
 
 
@@ -116,6 +133,20 @@ class TuningCache:
 
     def __iter__(self) -> Iterator[Entry]:
         return iter(self.entries.values())
+
+    # ---- staleness -------------------------------------------------------
+    def max_generation(self) -> int:
+        """Latest sweep generation present (0 for an empty table)."""
+        return max((e.generation for e in self.entries.values()), default=0)
+
+    def stale_keys(self, max_age: int) -> list[str]:
+        """Keys whose measurement lags the newest sweep by >= max_age
+        generations — the re-measure set for the next sweep."""
+        if max_age < 1:
+            raise ValueError(f"max_age must be >= 1, got {max_age}")
+        cur = self.max_generation()
+        return [k for k, e in sorted(self.entries.items())
+                if cur - e.generation >= max_age]
 
     # ---- persistence -----------------------------------------------------
     def save(self, path: str) -> None:

@@ -30,11 +30,33 @@ from repro.core.topology import RegionMap, ceil_log
 ALLGATHER_ALGORITHMS = tuple(schedules.ALGORITHMS)   # the five paper algs
 ALLREDUCE_ALGORITHMS = ("locality", "xla")
 LOGSUMEXP_ALGORITHMS = ("locality", "xla")
+OVERLAP_ALGORITHMS = ("eager", "prefetch")
 
 # Serving head dims are 64-128; the running-max phase of the logsumexp
 # combine moves payload/(D+1) bytes. Priced at D=64 (the conservative end:
 # the largest relative max-phase cost).
 LOGSUMEXP_HEAD_DIM = 64
+
+# The overlap term is a function of (topology, bytes, FLOPs) but the table
+# schema is 2-D (topology × byte bucket), so arithmetic intensity
+# (flops-per-gathered-byte) is folded into the collective NAME at octave
+# resolution: "overlap:i<k>" covers intensities in (2^{k-1}, 2^k]. For an
+# FSDP transformer layer the intensity is ≈ tokens-per-device-per-step
+# (flops ≈ 2·params·tokens, bytes ≈ 2·params), so the sweep default spans
+# small-batch (2^7) to large-batch (2^13) regimes.
+OVERLAP_INTENSITY_OCTAVES = (7, 10, 13)
+
+
+def overlap_collective(flops_per_byte: float) -> str:
+    """Collective name keying the overlap term's intensity octave."""
+    import math
+    k = max(0, math.ceil(math.log2(max(flops_per_byte, 1.0))))
+    return f"overlap:i{k}"
+
+
+def overlap_intensity(collective: str) -> float:
+    """Representative flops-per-byte of an "overlap:i<k>" collective name."""
+    return float(2 ** int(collective.split(":i", 1)[1]))
 
 
 @dataclasses.dataclass(frozen=True)
@@ -148,6 +170,28 @@ def simulate_logsumexp_combine(algorithm: str, p: int, p_local: int,
     raise ValueError(f"unknown logsumexp_combine algorithm {algorithm!r}")
 
 
+def simulate_overlap(algorithm: str, p: int, p_local: int, nbytes: float,
+                     machine: cost_model.MachineParams | str, *,
+                     flops: float | None = None,
+                     flops_per_byte: float | None = None) -> float:
+    """Per-layer step-time under the eager vs prefetched gather schedule.
+
+    ``nbytes`` is the per-rank shard of one layer's parameters. The compute
+    window is ``flops`` (exact, when the caller knows the layer) or
+    ``flops_per_byte · nbytes`` (the octave representative the sweep grids
+    over). Deterministic — there is no wall-clock overlap executor; real
+    overlap is measured end-to-end by ``benchmarks/overlap.py``.
+    """
+    if isinstance(machine, str):
+        machine = cost_model.MACHINES[machine]
+    if algorithm not in OVERLAP_ALGORITHMS:
+        raise ValueError(f"unknown overlap algorithm {algorithm!r}")
+    if flops is None:
+        flops = (flops_per_byte or 1.0) * nbytes
+    oc = cost_model.overlap_model(p, p_local, nbytes, flops, machine)
+    return oc.step_time(prefetch=(algorithm == "prefetch"))
+
+
 def simulate(collective: str, algorithm: str, p: int, p_local: int,
              nbytes: float, machine: cost_model.MachineParams | str) -> float:
     if collective == "allgather":
@@ -157,6 +201,9 @@ def simulate(collective: str, algorithm: str, p: int, p_local: int,
     if collective == "logsumexp_combine":
         return simulate_logsumexp_combine(algorithm, p, p_local, nbytes,
                                           machine)
+    if collective.startswith("overlap:i"):
+        return simulate_overlap(algorithm, p, p_local, nbytes, machine,
+                                flops_per_byte=overlap_intensity(collective))
     raise ValueError(f"unknown collective {collective!r}")
 
 
@@ -242,7 +289,13 @@ def measure(collective: str, algorithm: str, p: int, p_local: int,
     schedule pricing under ``machine``), or "auto" — real on accelerator
     backends with enough devices, simulated otherwise (the CPU fallback
     that makes sweeps runnable in single-device containers).
+
+    The overlap term ("overlap:i<k>") is always simulated: its "real"
+    number needs a fused compute+gather pipeline, which is exactly what
+    ``benchmarks/overlap.py`` measures end-to-end.
     """
+    if collective.startswith("overlap:"):
+        mode = "simulated"
     if mode == "auto":
         import jax
         real = jax.default_backend() != "cpu" and len(jax.devices()) >= p

@@ -24,8 +24,10 @@ import os
 import threading
 
 from .cache import SchemaVersionError, TuningCache, bucket_bytes
-from .measure import (ALLREDUCE_ALGORITHMS, LOGSUMEXP_ALGORITHMS, Fingerprint,
-                      simulate_allreduce, simulate_logsumexp_combine)
+from .measure import (ALLREDUCE_ALGORITHMS, LOGSUMEXP_ALGORITHMS,
+                      OVERLAP_ALGORITHMS, Fingerprint, overlap_collective,
+                      overlap_intensity, simulate_allreduce,
+                      simulate_logsumexp_combine, simulate_overlap)
 
 DEFAULT_TABLE_ENV = "REPRO_TUNING_TABLE"
 DEFAULT_TABLE_PATH = os.path.join("results", "tuning_table.json")
@@ -84,6 +86,18 @@ class Policy:
         return table
 
     # ------------------------------------------------------------------
+    @staticmethod
+    def _table_lookup(table, nbytes: float) -> Selection:
+        """Bucket walk shared by every table-backed selection. Beyond the
+        largest measured bucket the bandwidth regime is flat in algorithm
+        order, so the last entry extends to infinity."""
+        b = bucket_bytes(nbytes)
+        for bucket, algorithm, cost in table:
+            if b <= bucket:
+                return Selection(algorithm, "table", cost)
+        _, algorithm, cost = table[-1]
+        return Selection(algorithm, "table", cost)
+
     def select(self, collective: str, p: int, p_local: int, nbytes: float,
                dtype: str = "float32") -> Selection:
         if p <= 1:
@@ -91,14 +105,7 @@ class Policy:
                              "model", 0.0)
         table = self.crossover_table(collective, p, p_local, dtype)
         if table:
-            b = bucket_bytes(nbytes)
-            for bucket, algorithm, cost in table:
-                if b <= bucket:
-                    return Selection(algorithm, "table", cost)
-            # beyond the largest measured bucket: bandwidth regime is flat
-            # in algorithm order, extend the last entry
-            bucket, algorithm, cost = table[-1]
-            return Selection(algorithm, "table", cost)
+            return self._table_lookup(table, nbytes)
         return self._model_fallback(collective, p, p_local, nbytes)
 
     def _model_fallback(self, collective: str, p: int, p_local: int,
@@ -128,7 +135,47 @@ class Policy:
                      for a in LOGSUMEXP_ALGORITHMS}
             best = min(costs, key=costs.get)
             return Selection(best, "model", costs[best])
+        if collective.startswith("overlap:i"):
+            fpb = overlap_intensity(collective)
+            costs = {a: simulate_overlap(a, p, p_local, nbytes, self.machine,
+                                         flops_per_byte=fpb)
+                     for a in OVERLAP_ALGORITHMS}
+            best = min(costs, key=costs.get)
+            return Selection(best, "model", costs[best])
         raise ValueError(f"unknown collective {collective!r}")
+
+    # ------------------------------------------------------------------
+    def select_overlap(self, p: int, p_local: int, nbytes: float,
+                       flops: float, dtype: str = "float32") -> Selection:
+        """Eager vs prefetched gather schedule for one layer.
+
+        The (topology, bytes, flops) domain maps onto the 2-D table by
+        folding arithmetic intensity into the collective name
+        ("overlap:i<k>", octave resolution). With a table entry the
+        crossover machinery (buckets + hysteresis) decides; otherwise the
+        model fallback prices the layer with its *exact* flops.
+        """
+        if p <= 1:
+            return Selection("eager", "model", 0.0)
+        coll = overlap_collective(flops / max(nbytes, 1.0))
+        table = self.crossover_table(coll, p, p_local, dtype)
+        if table:
+            return self._table_lookup(table, nbytes)
+        costs = {a: simulate_overlap(a, p, p_local, nbytes, self.machine,
+                                     flops=flops)
+                 for a in OVERLAP_ALGORITHMS}
+        best = min(costs, key=costs.get)
+        return Selection(best, "model", costs[best])
+
+    # ------------------------------------------------------------------
+    def stale_buckets(self, max_age: int) -> list[str]:
+        """Table keys whose measurement lags the newest sweep by >= max_age
+        generations (empty without a cache). Operators feed this to
+        ``benchmarks/run.py tune --stale-after N`` to re-measure exactly the
+        aged cells."""
+        if self.cache is None:
+            return []
+        return self.cache.stale_keys(max_age)
 
 
 # ---------------------------------------------------------------------------

@@ -19,19 +19,37 @@ import os
 from typing import Any, Sequence
 
 from repro.core import autotune
-from .cache import Entry, TuningCache, bucket_bytes
+from .cache import Entry, TuningCache, bucket_bytes, make_key
 from .measure import (ALLGATHER_ALGORITHMS, ALLREDUCE_ALGORITHMS,
-                      LOGSUMEXP_ALGORITHMS, Fingerprint, measure,
-                      simulate_allreduce, simulate_logsumexp_combine)
+                      LOGSUMEXP_ALGORITHMS, OVERLAP_ALGORITHMS,
+                      OVERLAP_INTENSITY_OCTAVES, Fingerprint, measure,
+                      overlap_intensity, simulate_allreduce,
+                      simulate_logsumexp_combine, simulate_overlap)
 from .policy import Policy
 
 DEFAULT_SIZES = tuple(2 ** k for k in range(6, 23, 2))   # 64 B .. 4 MiB
-DEFAULT_COLLECTIVES = ("allgather", "allreduce", "logsumexp_combine")
+DEFAULT_COLLECTIVES = ("allgather", "allreduce", "logsumexp_combine",
+                       "overlap")
 SMOKE_SIZES = (256, 4096, 65536)         # CI pre-merge: 3 octaves, 1 iter
 
-_ALGORITHMS = {"allgather": ALLGATHER_ALGORITHMS,
-               "allreduce": ALLREDUCE_ALGORITHMS,
-               "logsumexp_combine": LOGSUMEXP_ALGORITHMS}
+
+def _algorithms_for(collective: str):
+    if collective.startswith("overlap"):
+        return OVERLAP_ALGORITHMS
+    return {"allgather": ALLGATHER_ALGORITHMS,
+            "allreduce": ALLREDUCE_ALGORITHMS,
+            "logsumexp_combine": LOGSUMEXP_ALGORITHMS}[collective]
+
+
+def _expand_collectives(collectives: Sequence[str]) -> list[str]:
+    """"overlap" fans out into its intensity-octave cells (overlap:i<k>)."""
+    out: list[str] = []
+    for c in collectives:
+        if c == "overlap":
+            out.extend(f"overlap:i{k}" for k in OVERLAP_INTENSITY_OCTAVES)
+        else:
+            out.append(c)
+    return out
 
 
 def run_sweep(p: int = 16, p_local: int = 4, *,
@@ -39,8 +57,17 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
               collectives: Sequence[str] = DEFAULT_COLLECTIVES,
               dtype: str = "float32", mode: str = "auto",
               machine: str = "lassen", hysteresis: float = 0.10,
-              iters: int = 5, warmup: int = 2) -> tuple[TuningCache, dict]:
-    """Measure the grid, returning (cache, report_dict)."""
+              iters: int = 5, warmup: int = 2,
+              existing: TuningCache | None = None,
+              stale_after: int | None = None) -> tuple[TuningCache, dict]:
+    """Measure the grid, returning (cache, report_dict).
+
+    New entries are stamped with generation ``existing.max_generation() + 1``
+    (1 on a fresh table). With ``stale_after=N`` and an ``existing`` table,
+    cells whose current entry is younger than N generations are SKIPPED —
+    the merge in :func:`write_outputs` keeps their old measurement — so a
+    periodic re-measure sweep touches only aged buckets.
+    """
     import jax
 
     simulated = mode == "simulated" or (
@@ -48,20 +75,36 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
                             or len(jax.devices()) < p))
     fp = Fingerprint.detect(simulated_machine=machine if simulated else "")
     eff_mode = "simulated" if simulated else "real"
+    generation = (existing.max_generation() if existing is not None else 0) + 1
 
     cache = TuningCache()
     cells: list[dict[str, Any]] = []
-    for collective in collectives:
-        algorithms = _ALGORITHMS[collective]
+    skipped = 0
+    for collective in _expand_collectives(collectives):
+        algorithms = _algorithms_for(collective)
         for nbytes in sizes:
+            if stale_after is not None and existing is not None:
+                prev = existing.entries.get(make_key(
+                    fp.key(), p, p_local, collective, dtype,
+                    bucket_bytes(nbytes)))
+                if prev is not None and \
+                        generation - 1 - prev.generation < stale_after:
+                    skipped += 1          # fresh enough: keep the old cell
+                    continue
+            # overlap cells have no wall-clock executor (measure() forces
+            # them simulated) — label the persisted source accordingly even
+            # on accelerator sweeps where every other cell is real
+            cell_mode = ("simulated" if collective.startswith("overlap:")
+                         else eff_mode)
             costs = {}
             for alg in algorithms:
                 costs[alg] = measure(collective, alg, p, p_local, nbytes,
-                                     dtype, mode=eff_mode, machine=machine,
+                                     dtype, mode=cell_mode, machine=machine,
                                      iters=iters, warmup=warmup)
             entry = Entry(collective=collective, p=p, p_local=p_local,
                           dtype=dtype, bucket=bucket_bytes(nbytes),
-                          costs=costs, source=eff_mode)
+                          costs=costs, source=cell_mode,
+                          generation=generation)
             cache.put(fp.key(), entry)
 
             # the paper's closed-form prediction for the same cell. For
@@ -75,6 +118,12 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
                 modeled = {a: simulate_allreduce(a, p, p_local, nbytes, machine)
                            for a in ALLREDUCE_ALGORITHMS}
                 self_cmp = eff_mode == "simulated"
+            elif collective.startswith("overlap:i"):
+                fpb = overlap_intensity(collective)
+                modeled = {a: simulate_overlap(a, p, p_local, nbytes, machine,
+                                               flops_per_byte=fpb)
+                           for a in OVERLAP_ALGORITHMS}
+                self_cmp = True         # the overlap executor IS the model
             else:                       # logsumexp_combine
                 modeled = {a: simulate_logsumexp_combine(a, p, p_local,
                                                          nbytes, machine)
@@ -94,7 +143,7 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
     crossovers = {
         c: [{"bucket_bytes": b, "algorithm": a, "cost_s": t}
             for b, a, t in policy.crossover_table(c, p, p_local, dtype)]
-        for c in collectives
+        for c in _expand_collectives(collectives)
     }
     agree = [c["measured_winner"] == c["modeled_winner"] for c in cells
              if not c["self_comparison"]]
@@ -104,6 +153,8 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
         "machine_model": machine,
         "topology": {"p": p, "p_local": p_local, "n_regions": p // p_local},
         "hysteresis": hysteresis,
+        "generation": generation,
+        "stale_skipped": skipped,
         "cells": cells,
         "crossover_tables": crossovers,
         "winner_agreement": {
@@ -115,16 +166,30 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
 
 
 def write_outputs(cache: TuningCache, report: dict, *,
-                  table_path: str, report_path: str) -> None:
+                  table_path: str, report_path: str,
+                  existing: TuningCache | None = None) -> None:
     """Persist, merging into an existing table (so an operator can sweep one
-    topology at a time — entries are keyed by topology, new keys win)."""
-    if os.path.exists(table_path):
+    topology at a time — entries are keyed by topology, new keys win).
+    ``existing`` reuses an already-loaded merge base (main() loads it for
+    the staleness pass) instead of re-parsing the file."""
+    import jax
+    # same shape as benchmarks.common.bench_metadata — the CI trend job only
+    # compares BENCH files whose meta matches (like with like)
+    report.setdefault("meta", {
+        "jax_version": jax.__version__,
+        "backend": jax.default_backend(),
+        "device_count": jax.device_count(),
+        "device_kind": jax.devices()[0].device_kind,
+    })
+    if existing is None and os.path.exists(table_path):
         try:
-            merged = TuningCache.load(table_path)
+            existing = TuningCache.load(table_path)
         except (OSError, ValueError, TypeError, KeyError):
-            merged = TuningCache()          # unreadable/corrupt: start over
+            existing = None                 # unreadable/corrupt: start over
         # SchemaVersionError propagates: never clobber a table written by a
         # newer schema (cache.py's refuse-to-guess invariant)
+    if existing is not None:
+        merged = TuningCache(dict(existing.entries))
         merged.entries.update(cache.entries)
         cache = merged
     cache.save(table_path)
@@ -154,6 +219,10 @@ def main(argv: Sequence[str] | None = None) -> tuple[TuningCache, dict]:
     ap.add_argument("--machine", default="lassen",
                     help="cost-model parameter set for the simulated executor")
     ap.add_argument("--hysteresis", type=float, default=0.10)
+    ap.add_argument("--stale-after", type=int, default=None, metavar="N",
+                    help="re-measure only buckets whose entry is >= N sweep "
+                         "generations old (plus missing cells); fresh cells "
+                         "keep their existing measurement")
     ap.add_argument("--table", default=os.path.join("results",
                                                     "tuning_table.json"))
     ap.add_argument("--report", default="BENCH_tuning.json")
@@ -168,16 +237,24 @@ def main(argv: Sequence[str] | None = None) -> tuple[TuningCache, dict]:
                      "sample is compile-dominated and would be persisted "
                      "as a measured crossover")
         mode = "simulated"
+    existing = None
+    if os.path.exists(args.table):
+        try:
+            existing = TuningCache.load(args.table)
+        except (OSError, ValueError, TypeError, KeyError):
+            existing = None             # corrupt: sweep from scratch
     cache, report = run_sweep(
         args.p, args.p_local, sizes=sizes,
         collectives=tuple(args.collectives.split(",")), dtype=args.dtype,
         mode=mode, machine=args.machine, hysteresis=args.hysteresis,
-        iters=1 if args.smoke else 5, warmup=0 if args.smoke else 2)
+        iters=1 if args.smoke else 5, warmup=0 if args.smoke else 2,
+        existing=existing, stale_after=args.stale_after)
     write_outputs(cache, report, table_path=args.table,
-                  report_path=args.report)
+                  report_path=args.report, existing=existing)
     agg = report["winner_agreement"]
-    print(f"tuning table: {args.table} ({len(cache)} entries, "
-          f"fingerprint {report['fingerprint']})")
+    print(f"tuning table: {args.table} ({len(cache)} entries at generation "
+          f"{report['generation']}, {report['stale_skipped']} fresh cells "
+          f"kept, fingerprint {report['fingerprint']})")
     print(f"report:       {args.report} "
           f"(model/measurement winner agreement {agg['matched']}/{agg['total']})")
     return cache, report

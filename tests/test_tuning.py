@@ -72,6 +72,88 @@ def test_bucket_bytes():
 
 
 # ---------------------------------------------------------------------------
+# staleness (generation stamping, schema v3)
+# ---------------------------------------------------------------------------
+def test_cache_migrates_v2_adds_generation(tmp_path):
+    key = tcache.make_key(FP, 16, 4, "allgather", "float32", 1024)
+    v2 = {"schema_version": 2,
+          "entries": {key: {"collective": "allgather", "p": 16, "p_local": 4,
+                            "dtype": "float32", "bucket": 1024,
+                            "costs": {"bruck": 1e-5},
+                            "source": "simulated"}}}   # v2: no "generation"
+    path = tmp_path / "t.json"
+    path.write_text(json.dumps(v2))
+    loaded = TuningCache.load(str(path))
+    assert loaded.entries[key].generation == 0
+    assert loaded.max_generation() == 0
+
+
+def test_stale_keys_and_policy_surface():
+    cache = TuningCache()
+    for bucket, gen in ((1024, 1), (4096, 3), (16384, 5)):
+        e = _entry(bucket, {"bruck": 1e-5, "ring": 2e-5})
+        e.generation = gen
+        cache.put(FP, e)
+    assert cache.max_generation() == 5
+    stale = cache.stale_keys(2)            # age >= 2 sweeps behind gen 5
+    assert len(stale) == 2 and all("b1024" in k or "b4096" in k
+                                   for k in stale)
+    assert cache.stale_keys(10) == []
+    with pytest.raises(ValueError):
+        cache.stale_keys(0)
+    pol = tpolicy.Policy(cache, fingerprint=FP)
+    assert pol.stale_buckets(2) == stale
+    assert tpolicy.Policy(None).stale_buckets(2) == []
+
+
+def test_sweep_generation_stamp_and_stale_refresh():
+    c1, r1 = tsweep.run_sweep(8, 2, sizes=(256,), collectives=("allgather",),
+                              mode="simulated", machine="lassen")
+    assert r1["generation"] == 1
+    assert all(e.generation == 1 for e in c1)
+    # everything fresh: a stale_after sweep measures nothing new
+    c2, r2 = tsweep.run_sweep(8, 2, sizes=(256,), collectives=("allgather",),
+                              mode="simulated", machine="lassen",
+                              existing=c1, stale_after=3)
+    assert len(c2) == 0 and r2["stale_skipped"] == 1 and r2["generation"] == 2
+    # age the cell out: a later sweep pushed the table generation far ahead
+    # (simulated by a fresh unrelated entry), so the same sweep re-measures
+    fresh = _entry(1 << 30, {"bruck": 1e-5}, p=8, pl=2)
+    fresh.generation = 6
+    c1.put(FP, fresh)
+    c3, r3 = tsweep.run_sweep(8, 2, sizes=(256,), collectives=("allgather",),
+                              mode="simulated", machine="lassen",
+                              existing=c1, stale_after=3)
+    assert len(c3) == 1 and r3["stale_skipped"] == 0
+    assert next(iter(c3)).generation == r3["generation"] == 7
+
+
+def test_sweep_includes_overlap_cells(tmp_path):
+    from repro.tuning.measure import OVERLAP_INTENSITY_OCTAVES
+    cache, report = tsweep.run_sweep(
+        16, 4, sizes=(4096,), collectives=("overlap",),
+        mode="simulated", machine="lassen")
+    colls = {e.collective for e in cache}
+    assert colls == {f"overlap:i{k}" for k in OVERLAP_INTENSITY_OCTAVES}
+    assert all(set(e.costs) == {"eager", "prefetch"} for e in cache)
+    # the whole table (with overlap cells) round-trips the schema gate
+    table = tmp_path / "tab.json"
+    rep = tmp_path / "rep.json"
+    tsweep.write_outputs(cache, report, table_path=str(table),
+                         report_path=str(rep))
+    import subprocess, sys, os
+    repo = os.path.dirname(os.path.dirname(os.path.abspath(__file__)))
+    out = subprocess.run(
+        [sys.executable, os.path.join(repo, "scripts",
+                                      "check_tuning_schema.py"), str(table)],
+        capture_output=True, text=True)
+    assert out.returncode == 0, out.stdout + out.stderr
+    # BENCH report carries the metadata stamp for the trend job
+    meta = json.loads(rep.read_text())["meta"]
+    assert {"jax_version", "backend", "device_count"} <= set(meta)
+
+
+# ---------------------------------------------------------------------------
 # policy
 # ---------------------------------------------------------------------------
 def test_policy_crossover_monotone_in_bytes():
