@@ -14,7 +14,13 @@ simulated backend: the cost-model overlap term
 matmul window on the tpu_v5e parameter set — the same term
 ``prefetch_depth="auto"`` resolves through. The prefetched exposed-comm
 numbers must come out strictly below the eager ones; the acceptance gate of
-the overlap subsystem. Writes ``BENCH_overlap.json``.
+the overlap subsystem.
+
+Wall clock is gated (prefetched strictly faster) ONLY on accelerator
+backends; on the CPU harness it is reported, and the gate is instead that
+``prefetch_depth="auto"`` resolves to eager via the measured-dispatch
+guard (``Policy.select_overlap(dispatch_overhead_s=...)``) — a host with
+no wire must never be told to prefetch. Writes ``BENCH_overlap.json``.
 """
 from __future__ import annotations
 
@@ -73,6 +79,15 @@ for depth in (0, 1):
         "loss": float(metrics["loss"]),
     }
 assert metrics_by_depth[0] == metrics_by_depth[1], metrics_by_depth
+
+# prefetch_depth="auto" through the tuning policy + the measured-dispatch
+# guard: on a host-CPU harness (no wire to hide, real per-dispatch cost)
+# it must resolve to the eager schedule
+art_auto = make_train_step(cfg, mesh, grad_sync="locality", fsdp=True,
+                           shape=bspec, donate=False, prefetch_depth="auto")
+out["auto"] = {"depth": art_auto.prefetch_depth,
+               "source": art_auto.prefetch_source,
+               "backend": jax.default_backend()}
 
 # --- simulated backend: the cost-model overlap term on this topology -------
 from repro.models import transformer
@@ -158,9 +173,26 @@ def main() -> list[tuple]:
         assert (prod["prefetched"]["exposed_comm_s"]
                 < prod["eager"]["exposed_comm_s"]), name
         # the acceptance gate: the prefetched pipeline must expose strictly
-        # less non-local/communication time than the eager baseline
+        # less modeled communication time than the eager baseline
         assert p < e, (name, e, p)
         assert r["eager"]["loss"] == r["prefetched"]["loss"], name
+        # wall clock: REPORTED everywhere, GATED only on accelerator
+        # backends — a host-CPU harness has no network to hide, so the
+        # pipeline's dispatch overhead legitimately makes prefetched
+        # slower there (the recorded gemma9b_4L 463.7ms vs 377.5ms); on
+        # CPU the policy fix is the gate instead: "auto" must resolve to
+        # eager (depth 0, source "dispatch" when the guard fired)
+        wall_e, wall_p = r["eager"]["us_per_step"], r["prefetched"]["us_per_step"]
+        auto = r["auto"]
+        rows.append((f"overlap/{name}/wall_clock_gate", None,
+                     f"prefetched_faster={wall_p < wall_e} "
+                     f"auto_depth={auto['depth']} "
+                     f"auto_source={auto['source']} "
+                     f"backend={auto['backend']}"))
+        if auto["backend"] == "cpu":
+            assert auto["depth"] == 0, (name, auto)
+        else:
+            assert wall_p < wall_e, (name, wall_e, wall_p)
     return emit(rows)
 
 

@@ -17,6 +17,14 @@
     the simulated exposed-communication split; writes
     ``BENCH_overlap.json`` and fails if the prefetched pipeline does not
     reduce exposed communication (or breaks exact equality).
+
+``python benchmarks/run.py multipod``
+    The ('pod','data') sharding-domain proof (DESIGN.md §6): compiled-HLO
+    non-local byte/message comparison of the locality train-FSDP and
+    serve-combine paths vs the flat XLA paths on multi-pod meshes, plus
+    layout-equivalence numerics; writes ``BENCH_multipod.json`` and fails
+    unless the locality paths move strictly fewer inter-pod bytes AND
+    messages.
 """
 from __future__ import annotations
 
@@ -71,6 +79,7 @@ def main() -> None:
     sub.add_parser("tune", help="run the collective tuning sweep",
                    add_help=False)
     sub.add_parser("overlap", help="eager vs prefetched pipeline benchmark")
+    sub.add_parser("multipod", help="('pod','data') non-local traffic proof")
     # default to `bench` for backward compatibility: `run.py --only fig7`
     argv = sys.argv[1:]
     if argv[:1] == ["tune"]:
@@ -80,6 +89,11 @@ def main() -> None:
     if argv[:1] == ["overlap"]:
         print("name,us_per_call,derived")
         overlap.main()
+        return
+    if argv[:1] == ["multipod"]:
+        from . import multipod
+        print("name,us_per_call,derived")
+        multipod.main()
         return
     if argv[:1] != ["bench"] and any(a.startswith("--only") for a in argv):
         argv = ["bench"] + argv

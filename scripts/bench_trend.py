@@ -1,15 +1,25 @@
 #!/usr/bin/env python
-"""Perf-trend gate: diff BENCH_*.json artifacts against the previous run.
+"""Perf-trend gate: diff BENCH_*.json artifacts against previous runs.
 
 ``python scripts/bench_trend.py --prev prev-bench/ --cur . [--threshold 0.10]``
 
-Walks every ``BENCH_*.json`` present in BOTH directories, compares each
-known metric at the same JSON path, and exits non-zero when any regresses
-by more than the threshold (>10% by default — the nightly CI gate). Files
-whose ``meta`` stamp (jax version / backend / device count, see
-``benchmarks.common.bench_metadata``) differs between the runs are skipped
-with a notice: a jax upgrade or runner change is not a code regression and
-must not be graded as one.
+``--prev`` holds the baseline in one of two layouts:
+
+* a single run's artifacts directly (``prev-bench/BENCH_*.json``) —
+  the original previous-run-only diff;
+* one subdirectory per previous run (``prev-bench/<run-id>/BENCH_*.json``,
+  what the nightly CI fetch step downloads) — the baseline for each metric
+  is then the MEDIAN over the last K runs whose ``meta`` stamp matches the
+  current one (``--k``, default 5, newest first by mtime). A single noisy
+  or lucky previous nightly can no longer move the gate by itself.
+
+Walks every ``BENCH_*.json`` present in the current directory and at least
+one baseline run, compares each known metric at the same JSON path, and
+exits non-zero when any regresses by more than the threshold (>10% by
+default — the nightly CI gate). Baseline runs whose ``meta`` stamp (jax
+version / backend / device count, see ``benchmarks.common.bench_metadata``)
+differs from the current run are skipped with a notice: a jax upgrade or
+runner change is not a code regression and must not be graded as one.
 
 Metric direction is keyed by name: ``*_us``/``us_per_step`` and the modeled
 ``*_s``/fractions regress UP, ``tokens_per_s`` regresses DOWN. Wall-clock
@@ -23,6 +33,7 @@ import argparse
 import glob
 import json
 import os
+import statistics
 import sys
 
 #: metric-name -> direction ("lower" is better / "higher" is better),
@@ -49,23 +60,35 @@ def _walk(node, path=()):
         yield path, float(node)
 
 
-def compare_file(name: str, prev: dict, cur: dict, threshold: float,
+def compare_file(name: str, prevs: list[dict], cur: dict, threshold: float,
                  wall_threshold: float) -> list[str]:
-    """Returns the list of regression messages for one artifact."""
-    if prev.get("meta") != cur.get("meta"):
-        print(f"{name}: SKIP — meta stamp changed "
-              f"({prev.get('meta')} -> {cur.get('meta')}); not comparable")
+    """Regression messages for one artifact vs the median-of-K baseline.
+
+    ``prevs`` holds one dict per previous run (newest first); runs with a
+    non-matching meta stamp are dropped here, and each metric's baseline is
+    the median of the values the surviving runs recorded at that path.
+    """
+    matching = [p for p in prevs if p.get("meta") == cur.get("meta")]
+    if not matching:
+        stamps = {json.dumps(p.get("meta"), sort_keys=True) for p in prevs}
+        print(f"{name}: SKIP — no baseline run with a matching meta stamp "
+              f"({len(prevs)} run(s), stamps {sorted(stamps)} vs "
+              f"{json.dumps(cur.get('meta'), sort_keys=True)})")
         return []
-    prev_vals = dict(_walk(prev))
+    prev_series: dict[tuple, list[float]] = {}
+    for p in matching:
+        for path, v in _walk(p):
+            prev_series.setdefault(path, []).append(v)
     regressions = []
     compared = 0
     for path, cur_v in _walk(cur):
         metric = path[-1]
         spec = METRICS.get(metric)
-        if spec is None or path not in prev_vals:
+        series = prev_series.get(path)
+        if spec is None or not series:
             continue
         direction, wall = spec
-        prev_v = prev_vals[path]
+        prev_v = statistics.median(series)
         if prev_v <= 0:
             continue
         change = (cur_v - prev_v) / prev_v
@@ -77,13 +100,39 @@ def compare_file(name: str, prev: dict, cur: dict, threshold: float,
         if change > limit:
             regressions.append(
                 f"{name}: {tag} regressed {change * 100:.1f}% "
-                f"({prev_v:.6g} -> {cur_v:.6g}, limit {limit * 100:.0f}%)")
+                f"(median-of-{len(series)} {prev_v:.6g} -> {cur_v:.6g}, "
+                f"limit {limit * 100:.0f}%)")
         elif change < -threshold:
             print(f"{name}: {tag} improved {-change * 100:.1f}% "
-                  f"({prev_v:.6g} -> {cur_v:.6g})")
-    print(f"{name}: compared {compared} metrics, "
-          f"{len(regressions)} regression(s)")
+                  f"(median-of-{len(series)} {prev_v:.6g} -> {cur_v:.6g})")
+    print(f"{name}: compared {compared} metrics over {len(matching)} "
+          f"baseline run(s), {len(regressions)} regression(s)")
     return regressions
+
+
+def baseline_dirs(prev_root: str, pattern: str, k: int) -> list[str]:
+    """Baseline run directories under ``prev_root``, newest run first,
+    capped at K: the root itself when it directly holds artifacts
+    (single-run layout) plus any per-run subdirectory holding artifacts.
+
+    Recency ordering: all-numeric subdirectory names are GitHub run ids
+    (monotonically increasing — what the CI fetch step creates), sorted
+    descending; otherwise directory mtime is the fallback. The fetch loop
+    downloads newest runs FIRST, so mtime of the download is inverted
+    relative to run recency and must not be trusted when run ids are
+    available."""
+    subs = []
+    root_holds = bool(glob.glob(os.path.join(prev_root, pattern)))
+    for sub in os.listdir(prev_root):
+        d = os.path.join(prev_root, sub)
+        if os.path.isdir(d) and glob.glob(os.path.join(d, pattern)):
+            subs.append((sub, d))
+    if subs and all(name.isdigit() for name, _ in subs):
+        subs.sort(key=lambda x: int(x[0]), reverse=True)
+    else:
+        subs.sort(key=lambda x: os.path.getmtime(x[1]), reverse=True)
+    dirs = ([prev_root] if root_holds else []) + [d for _, d in subs]
+    return dirs[:k]
 
 
 def main(argv=None) -> int:
@@ -97,6 +146,8 @@ def main(argv=None) -> int:
     ap.add_argument("--wall-threshold", type=float, default=0.30,
                     help="noise floor for wall-clock metrics on shared "
                          "runners (the larger of this and --threshold)")
+    ap.add_argument("--k", type=int, default=5,
+                    help="max previous runs forming the median baseline")
     ap.add_argument("--pattern", default="BENCH_*.json")
     args = ap.parse_args(argv)
 
@@ -109,22 +160,37 @@ def main(argv=None) -> int:
         print(f"FAIL: no {args.pattern} in {args.cur!r} — the bench step "
               "produced nothing to track")
         return 1
+    run_dirs = baseline_dirs(args.prev, args.pattern, args.k)
+    if not run_dirs:
+        print(f"no previous artifacts under {args.prev!r} — first run, "
+              "nothing to diff")
+        return 0
+    print(f"baseline: {len(run_dirs)} run(s): "
+          + ", ".join(os.path.relpath(d, args.prev) or "." for d in run_dirs))
     regressions: list[str] = []
     for cur_path in cur_files:
         name = os.path.basename(cur_path)
-        prev_path = os.path.join(args.prev, name)
-        if not os.path.exists(prev_path):
+        prevs = []
+        for d in run_dirs:
+            prev_path = os.path.join(d, name)
+            if not os.path.exists(prev_path):
+                continue
+            try:
+                with open(prev_path) as f:
+                    prevs.append(json.load(f))
+            except (OSError, ValueError) as e:
+                print(f"{name}: skipping unreadable baseline "
+                      f"{prev_path!r} ({e})")
+        if not prevs:
             print(f"{name}: SKIP — no previous artifact (new benchmark)")
             continue
         try:
-            with open(prev_path) as f:
-                prev = json.load(f)
             with open(cur_path) as f:
                 cur = json.load(f)
         except (OSError, ValueError) as e:
             print(f"{name}: SKIP — unreadable ({e})")
             continue
-        regressions += compare_file(name, prev, cur, args.threshold,
+        regressions += compare_file(name, prevs, cur, args.threshold,
                                     args.wall_threshold)
     for r in regressions:
         print("REGRESSION:", r, file=sys.stderr)

@@ -231,7 +231,8 @@ def multilane_allgather(x: jax.Array, outer: Axes, local: Axes, *,
 # Algorithm 2 — locality-aware Bruck allgather (the paper's contribution).
 # =============================================================================
 def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
-                             tiled: bool = False) -> jax.Array:
+                             tiled: bool = False,
+                             assume_varying: bool = False) -> jax.Array:
     """Paper Algorithm 2 over mesh axes.
 
     1. Local Bruck allgather inside each region (``local`` axes).
@@ -246,19 +247,25 @@ def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
     MPI_Allgatherv for non-power region counts, we run the uniform local
     allgather and statically discard the `pl - active` empty units — identical
     non-local traffic, slightly padded local traffic.
+
+    assume_varying: as for :func:`bruck_allgather` — required when this
+    gather is differentiated inside a ``check_vma=False`` region (the
+    two-tier FSDP param gather of train/step.py).
     """
     outer, local = _tup(outer), _tup(local)
     r, pl = _size(outer), _size(local)
-    x = _varying(x, outer + local)
+    if not assume_varying:
+        x = _varying(x, outer + local)
     if pl == 1:
-        return bruck_allgather(x, outer + local, tiled=tiled)
+        return bruck_allgather(x, outer + local, tiled=tiled,
+                               assume_varying=True)
     R = lax.axis_index(outer)
     l = lax.axis_index(local)
     flat = lambda Rg, lg: Rg * pl + lg
 
     with jax.named_scope(f"loc_bruck_ag_r{r}_pl{pl}"):
         # Step 0 (Alg. 2 line 1): local allgather of initial values.
-        buf = bruck_allgather(x, local)       # [pl, ...] canonical lane order
+        buf = bruck_allgather(x, local, assume_varying=True)
         # Invariant: buf = region chunks [R, R+group) (mod r), chunk = pl blocks.
         group = 1
         step = 0
@@ -273,7 +280,8 @@ def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
             # no new data (their unit is discarded below).
             unit = jnp.where(l == 0, buf, recv)
             with jax.named_scope(f"redistribute_step{step}"):
-                stacked = bruck_allgather(unit, local)  # [pl, group*pl, ...]
+                stacked = bruck_allgather(unit, local,  # [pl, group*pl, ...]
+                                          assume_varying=True)
             stacked = stacked[:active]
             buf = stacked.reshape((active * group * pl,) + x.shape)
             group *= active
@@ -633,6 +641,11 @@ def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
         else:
             part = flat
         if r > 1:
+            if outer_algorithm in ("rhd", "rd") and r & (r - 1):
+                # recursive halving/doubling need a power-of-two region
+                # count; odd pod counts fall back to the XLA primitive on
+                # the outer axis (still per-lane: 1/p_ℓ of the bytes).
+                outer_algorithm = "psum"
             if outer_algorithm == "rhd":
                 npart = part.shape[0]
                 pad2 = (-npart) % r

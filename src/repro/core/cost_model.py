@@ -42,11 +42,35 @@ class ProtocolParams:
 
 @dataclasses.dataclass(frozen=True)
 class MachineParams:
-    """Local + non-local message classes for one machine (paper Eq. 2)."""
+    """Local + non-local message classes for one machine (paper Eq. 2).
+
+    The two tiers ARE the split ICI/DCN postal parameters: on the TPU sets
+    ``local`` holds (α_ℓ, β_ℓ) for intra-pod ICI and ``nonlocal_`` holds
+    (α, β) for the inter-pod DCN. The rendezvous-regime accessors below
+    expose them as plain floats — the (α_local, α_nonlocal, β_local,
+    β_nonlocal) quadruple ``locality_bruck_phase_split`` and
+    ``overlap_model`` price two-tier ('pod','data') schedules with.
+    """
 
     name: str
-    local: ProtocolParams       # α_ℓ, β_ℓ
-    nonlocal_: ProtocolParams   # α, β
+    local: ProtocolParams       # α_ℓ, β_ℓ  (ICI)
+    nonlocal_: ProtocolParams   # α, β      (DCN)
+
+    @property
+    def alpha_local(self) -> float:
+        return self.local.rendezvous.alpha
+
+    @property
+    def beta_local(self) -> float:
+        return self.local.rendezvous.beta
+
+    @property
+    def alpha_nonlocal(self) -> float:
+        return self.nonlocal_.rendezvous.alpha
+
+    @property
+    def beta_nonlocal(self) -> float:
+        return self.nonlocal_.rendezvous.beta
 
     def cost(self, *, n_local: int, s_local: float, n_nonlocal: int,
              s_nonlocal: float) -> float:
@@ -61,6 +85,22 @@ class MachineParams:
 
 def _p(alpha_us: float, bw_gbs: float) -> LinkParams:
     return LinkParams(alpha=alpha_us * 1e-6, beta=1.0 / (bw_gbs * 1e9))
+
+
+def two_tier_machine(name: str, *, alpha_local_us: float, bw_local_gbs: float,
+                     alpha_nonlocal_us: float, bw_nonlocal_gbs: float
+                     ) -> MachineParams:
+    """MachineParams from a bare (α_local, β_local, α_nonlocal, β_nonlocal)
+    quadruple — no eager/rendezvous split (accelerator interconnects have no
+    MPI protocol switch). The constructor operators use to fit measured
+    ICI/DCN ping-pong numbers into the postal layer."""
+    loc = _p(alpha_local_us, bw_local_gbs)
+    nl = _p(alpha_nonlocal_us, bw_nonlocal_gbs)
+    return MachineParams(
+        name=name,
+        local=ProtocolParams(eager=loc, rendezvous=loc),
+        nonlocal_=ProtocolParams(eager=nl, rendezvous=nl),
+    )
 
 
 # ---------------------------------------------------------------------------
@@ -86,13 +126,19 @@ QUARTZ = MachineParams(
     nonlocal_=ProtocolParams(eager=_p(1.5, 4.0), rendezvous=_p(4.1, 10.0)),
 )
 
-TPU_V5E = MachineParams(
-    name="tpu_v5e",
-    local=ProtocolParams(eager=_p(1.0, 50.0), rendezvous=_p(1.0, 50.0)),
-    nonlocal_=ProtocolParams(eager=_p(10.0, 25.0), rendezvous=_p(10.0, 25.0)),
-)
+TPU_V5E = two_tier_machine("tpu_v5e", alpha_local_us=1.0, bw_local_gbs=50.0,
+                           alpha_nonlocal_us=10.0, bw_nonlocal_gbs=25.0)
 
-MACHINES = {m.name: m for m in (LASSEN, QUARTZ, TPU_V5E)}
+# Cross-REGION multi-pod target (the 2×16×16 mesh of launch/mesh.py with
+# pods in different buildings/regions): same ICI tier, but the DCN tier
+# pays WAN-class launch latency and a thinner effective per-chip share.
+# This is the parameter set benchmarks/multipod.py prices the two-tier
+# train gather and serve combine under.
+TPU_MULTIPOD = two_tier_machine("tpu_multipod",
+                                alpha_local_us=1.0, bw_local_gbs=50.0,
+                                alpha_nonlocal_us=80.0, bw_nonlocal_gbs=6.0)
+
+MACHINES = {m.name: m for m in (LASSEN, QUARTZ, TPU_V5E, TPU_MULTIPOD)}
 
 
 # ---------------------------------------------------------------------------

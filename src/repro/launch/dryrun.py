@@ -107,6 +107,9 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             compiled = lowered.compile()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
+            # legacy jax (0.4.x) returns a one-element list of dicts here
+            if isinstance(cost, (list, tuple)):
+                cost = cost[0] if cost else {}
             hlo = compiled.as_text()
         pod_map = device_pod_map(mesh, ("pod",)) if multi else None
         stats = collective_stats(hlo, pod_map)
@@ -131,6 +134,13 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
                 "bytes": dict(stats.bytes_),
                 "permute_edges_local": stats.permute_edges_local,
                 "permute_edges_nonlocal": stats.permute_edges_nonlocal,
+                "permute_bytes_nonlocal": stats.permute_bytes_nonlocal,
+                "group_msgs_nonlocal": stats.group_msgs_nonlocal,
+                "group_bytes_nonlocal": stats.group_bytes_nonlocal,
+                # the DCN ground truth (permute edges exact + ring-modeled
+                # group collectives) benchmarks/multipod.py gates on
+                "nonlocal_msgs": stats.nonlocal_msgs,
+                "nonlocal_bytes": stats.nonlocal_bytes,
             },
             "model_flops": mf,
             "roofline": roof.row(),

@@ -19,5 +19,20 @@ def make_production_mesh(*, multi_pod: bool = False):
     return jax.make_mesh(shape, axes)
 
 
+def make_dp_mesh(pods: int, data: int):
+    """A pure-DP ('pod','data') mesh (no model axis).
+
+    This is the fully-manual-capable multi-pod shape: with no auto axis
+    the paper-mode shard_map is manual over EVERY mesh axis, so the
+    in-body locality collectives (ZeRO-3 gather, prefetch pipeline, grad
+    reduce-scatter) partition even on the legacy 0.4.x SPMD partitioner —
+    the mesh benchmarks/multipod.py proves the train-FSDP byte reduction
+    on. A single pod degenerates to the ('data',) mesh.
+    """
+    if pods > 1:
+        return jax.make_mesh((pods, data), ("pod", "data"))
+    return jax.make_mesh((data,), ("data",))
+
+
 def make_mesh(shape: tuple[int, ...], axes: tuple[str, ...]):
     return jax.make_mesh(shape, axes)

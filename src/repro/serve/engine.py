@@ -2,9 +2,12 @@
 
 Cache placement policy (per leaf):
   * KV caches (…, B, L, KV, D): batch over the DP axes when divisible
-    (decode_32k: 128 rows over 16/32 chips); otherwise the *sequence* dim is
-    sharded over 'data' (long_500k: B=1, 512k context split across the pod)
-    — sequence-parallel decode. KV heads shard over 'model' when divisible.
+    (decode_32k: 128 rows over 16/32 chips); otherwise the *sequence* dim
+    is sharded over the DP axes — ('pod','data') on a multi-pod mesh when
+    the layer's cache length divides the full span (long_500k: B=1, 512k
+    context split across BOTH pods; the decode combine then crosses the
+    DCN), falling back to 'data' alone (pods replicate) otherwise —
+    sequence-parallel decode. KV heads shard over 'model' when divisible.
   * SSM caches: batch over DP, heads over 'model'.
 
 Decode is compiled twice when the tuning policy picks a non-XLA combine for
@@ -41,7 +44,8 @@ from repro.core import collectives as C
 from repro.kernels.decode_stats import ops as stats_ops
 from repro.models import encdec, transformer
 from repro.models.attention import decode_stats_scores
-from repro.train.sharding import dp_axes, make_shard_fn, param_specs
+from repro.train.sharding import (dp_axes, make_shard_fn, normalize_axes,
+                                  param_specs)
 
 
 def _axsize(mesh, name) -> int:
@@ -55,18 +59,52 @@ def cache_specs(cfg, batch: int, cache_len: int):
     return mod.cache_specs(cfg, batch, cache_len)
 
 
-def _cache_layout(mesh, batch: int) -> tuple[bool, str | None]:
-    """(batch_sharded, seq_axis): the one placement decision both the cache
-    shardings and the combine resolution key off — kept in one place so
-    they cannot drift."""
+def _cache_layout(mesh, batch: int,
+                  seq_axes: str | tuple[str, ...] = "auto"
+                  ) -> tuple[bool, tuple[str, ...] | None]:
+    """(batch_sharded, seq_axes_candidates): the one placement decision both
+    the cache shardings and the combine resolution key off — kept in one
+    place so they cannot drift.
+
+    The candidates are the DP axes a sequence-parallel cache may shard
+    over, outer-major: ``('pod','data')`` on a multi-pod mesh (the decode
+    combine then genuinely crosses the DCN boundary) and ``('data',)``
+    otherwise. Per-layer divisibility narrows them via
+    :func:`_seq_axes_for`. ``seq_axes=("data",)`` forces the legacy
+    intra-pod layout (pods replicate the cache — the flat baseline the
+    multipod benchmark compares against)."""
     dp = dp_axes(mesh)
     dp_size = max(1, int(np.prod([_axsize(mesh, a) for a in dp])))
     batch_sharded = bool(dp) and batch % dp_size == 0 and batch >= dp_size
-    seq_ax = "data" if "data" in mesh.axis_names else None
-    return batch_sharded, seq_ax
+    if "data" not in mesh.axis_names:
+        cand = None
+    elif seq_axes == "auto":
+        cand = dp
+    else:
+        cand = tuple(a for a in normalize_axes(seq_axes)
+                     if a in mesh.axis_names) or None
+    return batch_sharded, cand
 
 
-def cache_shardings(cfg, mesh, batch: int, cache_len: int):
+def _seq_axes_for(mesh, L: int, cand: tuple[str, ...] | None
+                  ) -> tuple[str, ...] | None:
+    """The widest span a cache of ``L`` slots actually shards over: the full
+    composite when divisible, the intra-pod ('data',) slice otherwise, None
+    when neither divides (that layer keeps a replicated cache)."""
+    if not cand:
+        return None
+    full = int(np.prod([_axsize(mesh, a) for a in cand]))
+    if full > 1 and L % full == 0:
+        return cand
+    if "data" in cand:
+        d = _axsize(mesh, "data")
+        if d > 1 and L % d == 0:
+            return ("data",)
+    return None
+
+
+def cache_shardings(cfg, mesh, batch: int, cache_len: int,
+                    seq_axes: str | tuple[str, ...] = "auto"):
     """PartitionSpec pytree matching cache_specs."""
     dp = dp_axes(mesh)
     m = _axsize(mesh, "model")
@@ -74,7 +112,7 @@ def cache_shardings(cfg, mesh, batch: int, cache_len: int):
     def on_model(dim: int) -> bool:    # shardable over a real 'model' axis?
         return m > 1 and dim % m == 0
 
-    batch_sharded, seq_ax = _cache_layout(mesh, batch)
+    batch_sharded, seq_cand = _cache_layout(mesh, batch, seq_axes)
 
     def visit(path, leaf):
         keys = tuple(str(getattr(p, "key", getattr(p, "idx", ""))) for p in path)
@@ -98,10 +136,13 @@ def cache_shardings(cfg, mesh, batch: int, cache_len: int):
                 elif on_model(shape[L_dim]):
                     spec[L_dim] = "model"
             else:
-                # B=1 long-context: sequence-parallel cache over 'data',
-                # plus KV-heads/head_dim over 'model' when divisible.
-                if seq_ax and shape[L_dim] % _axsize(mesh, seq_ax) == 0:
-                    spec[L_dim] = seq_ax
+                # B=1 long-context: sequence-parallel cache over the DP
+                # axes (('pod','data') on multi-pod when divisible — the
+                # locality combine's domain), plus KV-heads/head_dim over
+                # 'model' when divisible.
+                ax = _seq_axes_for(mesh, shape[L_dim], seq_cand)
+                if ax:
+                    spec[L_dim] = ax if len(ax) > 1 else ax[0]
                 if on_model(shape[kv_dim]):
                     spec[kv_dim] = "model"
                 elif on_model(shape[d_dim]):
@@ -140,6 +181,7 @@ class ServeArtifacts:
     decode_fn_locality: Callable | None = None  # manual combine path (or None)
     combine_layers: int = 0   # attention layers the manual combine covers
     fused_stats: str = "jnp"  # resolved partial-stat impl ("jnp"/"pallas"/...)
+    seq_axes: Any = None      # sequence-shard candidates (('pod','data')/...)
 
 
 @dataclasses.dataclass(frozen=True)
@@ -162,7 +204,9 @@ class CombineChoice:
 
 
 def resolve_cache_combine(cfg, mesh, batch: int, cache_len: int,
-                          override: str | None = None) -> CombineChoice:
+                          override: str | None = None,
+                          seq_axes: str | tuple[str, ...] = "auto"
+                          ) -> CombineChoice:
     """Resolve the decode cache-combine collective through repro.tuning.
 
     The combine is priced as the two-phase ``logsumexp_combine`` collective
@@ -171,14 +215,19 @@ def resolve_cache_combine(cfg, mesh, batch: int, cache_len: int,
     ``override`` ("xla"/"locality") forces the algorithm, keeping the
     resolved geometry (source becomes "explicit"); the layout still decides
     whether there is anything to combine at all.
+
+    On a multi-pod mesh with the cache sequence-sharded over
+    ``('pod','data')`` the combine spans both tiers: ``p`` is the full
+    shard count and ``p_local`` the intra-pod 'data' slice, so the policy
+    prices the hierarchical (intra-pod, then one inter-pod exchange)
+    structure against GSPMD's flat combine. ``seq_axes=("data",)`` forces
+    the legacy intra-pod domain.
     """
     if override is not None and override not in ("xla", "locality"):
         raise ValueError(f"unknown combine override {override!r}")
-    batch_sharded, seq_ax = _cache_layout(mesh, batch)
-    seq_sharded = (not batch_sharded and seq_ax is not None
-                   and _axsize(mesh, seq_ax) > 1
-                   and cache_len % _axsize(mesh, seq_ax) == 0)
-    if not seq_sharded:
+    batch_sharded, seq_cand = _cache_layout(mesh, batch, seq_axes)
+    ax = None if batch_sharded else _seq_axes_for(mesh, cache_len, seq_cand)
+    if ax is None:
         return CombineChoice("none", "n/a", 0, 1, 1)
     H = getattr(cfg, "n_heads", 1)
     D = getattr(cfg, "head_dim_", getattr(cfg, "d_model", 0) // max(H, 1))
@@ -189,9 +238,8 @@ def resolve_cache_combine(cfg, mesh, batch: int, cache_len: int,
     if m > 1 and getattr(cfg, "n_kv_heads", H) % m == 0:
         H //= m
     nbytes = batch * H * (D + 1) * 4          # fp32 o + logsumexp per step
-    # the cache L dim is sharded over 'data' ONLY (pods hold replicas), so
-    # the combine spans exactly the 'data' ranks — one region, all ICI
-    p = p_local = _axsize(mesh, seq_ax)
+    p = int(np.prod([_axsize(mesh, a) for a in ax]))
+    p_local = _axsize(mesh, "data") if "pod" in ax else p
     if override is not None:
         return CombineChoice(override, "explicit", nbytes, p, p_local)
     from repro.tuning.policy import default_policy
@@ -199,36 +247,34 @@ def resolve_cache_combine(cfg, mesh, batch: int, cache_len: int,
     return CombineChoice(sel.algorithm, sel.source, nbytes, p, p_local)
 
 
-def _combine_layer_count(cfg, mesh, cache_len: int, seq_ax: str | None) -> int:
+def _combine_layer_count(cfg, mesh, cache_len: int,
+                         seq_cand: tuple[str, ...] | None) -> int:
     """Decode-attention layers the locality hook will actually handle —
     mirrors the per-layer fallbacks of ``_make_locality_decode_combine``
     (ring/chunk cache lengths indivisible by the shard count, head_dim
     model-sharded caches), so engine stats account real combine traffic
     and a layout with zero eligible layers never compiles the manual path."""
-    if seq_ax is None:
+    if not seq_cand:
         return 0
-    n = _axsize(mesh, seq_ax)
     m = _axsize(mesh, "model")
-    if n <= 1:
-        return 0
     kv = getattr(cfg, "n_kv_heads", 1)
     kv_sharded = m > 1 and kv % m == 0
     if m > 1 and not kv_sharded and cfg.head_dim_ % m == 0:
         return 0                       # head_dim-sharded caches: xla path
     if cfg.family == "audio":
-        return cfg.n_layers if cache_len % n == 0 else 0
+        return cfg.n_layers if _seq_axes_for(mesh, cache_len, seq_cand) else 0
     count = 0
     for spec in cfg.layer_plan():
         if spec.mixer not in ("attn", "shared_attn"):
             continue
         rl = transformer.ring_cache_len(cfg, spec)
         L = cache_len if rl is None else min(cache_len, rl)
-        if L % n == 0:
+        if _seq_axes_for(mesh, L, seq_cand):
             count += 1
     return count
 
 
-def _make_locality_decode_combine(cfg, mesh, seq_ax: str,
+def _make_locality_decode_combine(cfg, mesh, seq_cand: tuple[str, ...],
                                   stats_impl: str = "jnp"):
     """Build the per-layer ``decode_combine`` hook for sequence-sharded caches.
 
@@ -240,41 +286,58 @@ def _make_locality_decode_combine(cfg, mesh, seq_ax: str,
 
       1. writes the new token's K/V into the owning sequence shard
          (masked device-local dynamic_update_slice — slot ``pos`` lives on
-         shard ``pos // L_loc``; ring caches use slot ``pos % L``);
+         shard ``pos // L_loc`` of the region-major (pod-major) flat rank;
+         ring caches use slot ``pos % L``);
       2. computes the masked scores + running max over the local cache
          slice and IMMEDIATELY issues the combine's max-allreduce
          (``locality_logsumexp_combine_start`` — split halves of
-         core/collectives);
+         core/collectives). On a ``('pod','data')``-sharded cache the max
+         runs HIERARCHICALLY: intra-pod recursive doubling first, then one
+         inter-pod exchange — log2(r) tiny DCN messages instead of GSPMD's
+         flat tree over all shards;
       3. accumulates the flash-style o/l partials (``stats_impl`` picks the
          jnp ops or the fused Pallas kernel of ``kernels/decode_stats``) —
          the real compute the in-flight max-allreduce hides behind;
-      4. finishes the combine (rescale + packed sum-allreduce) and
-         normalizes.
+      4. finishes the combine (rescale + packed sum-allreduce: intra-pod
+         psum-scatter, per-lane inter-pod exchange of 1/p_ℓ of the bytes,
+         local allgather) and normalizes.
 
     Falls back (returns None → the layer keeps the GSPMD path) when the
-    layer's cache length is not divisible by the sequence shard count, or
+    layer's cache length is not divisible by any candidate shard span, or
     when ``cache_shardings`` would put 'model' on the head_dim (the q·k
     contraction would then need a model-axis reduction inside the region).
+    A layer divisible intra-pod but not by the full composite span shards
+    over ('data',) alone — its combine stays all-ICI, pods replicate.
     """
-    n = _axsize(mesh, seq_ax)
     m = _axsize(mesh, "model")
     axis_names = set(mesh.axis_names)        # fully manual region
 
     def combine(q, k_new, v_new, k_cache, v_cache, pos, meta):
         B, L, KV, D = k_cache.shape
-        if L % n != 0 or n == 1:
+        ax = _seq_axes_for(mesh, L, seq_cand)
+        if ax is None:
+            return None
+        sizes = [_axsize(mesh, a) for a in ax]
+        n = int(np.prod(sizes))
+        if n == 1:
             return None
         kv_m = "model" if (m > 1 and KV % m == 0) else None
         if m > 1 and kv_m is None and D % m == 0:
             return None       # head_dim model-sharded cache: xla path
+        outer = tuple(a for a in ax if a == "pod")
+        local = tuple(a for a in ax if a != "pod")
         L_loc = L // n
         ring = meta["ring"]
-        cache_spec = P(None, seq_ax, kv_m, None)
+        cache_spec = P(None, ax if len(ax) > 1 else ax[0], kv_m, None)
         new_spec = P(None, None, kv_m, None)
         q_spec = P(None, None, kv_m, None)   # H sharded iff KV heads are
 
         def region(q_, k_n, v_n, k_c, v_c, pos_):
-            i = lax.axis_index(seq_ax)
+            # flat shard index, region-major over (outer, local) — matches
+            # GSPMD's row-major composite-axis enumeration of cache_spec
+            i = lax.axis_index(ax[0])
+            for a, sz in zip(ax[1:], sizes[1:]):
+                i = i * sz + lax.axis_index(a)
             offset = i * L_loc
             slot_g = pos_ % L if ring else pos_
             slot_l = slot_g - offset
@@ -293,7 +356,7 @@ def _make_locality_decode_combine(cfg, mesh, seq_ax: str,
             mx = jnp.max(s, axis=-1)                 # (B, KV/m, G)
             B_, KV_, G_ = mx.shape
             pend = C.locality_logsumexp_combine_start(
-                mx.reshape(B_, 1, KV_ * G_), (), (seq_ax,))
+                mx.reshape(B_, 1, KV_ * G_), outer, local)
             o, l = stats_ops.accumulate(s, smask, mx, v_c, impl=stats_impl)
             o, l = C.locality_logsumexp_combine_finish(o, l, pend)
             out = (o / l[..., None]).astype(v_c.dtype)
@@ -312,12 +375,16 @@ def _make_locality_decode_combine(cfg, mesh, seq_ax: str,
 def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
                    prefill_len: int | None = None,
                    combine: str = "auto",
-                   fused_stats: str = "auto") -> ServeArtifacts:
+                   fused_stats: str = "auto",
+                   seq_axes: str | tuple[str, ...] = "auto") -> ServeArtifacts:
     """combine: "auto" resolves through repro.tuning; "xla"/"locality" force
     the decode cache-combine algorithm (explicit benchmark/test dispatch).
     fused_stats: partial-stat accumulation inside the locality combine
     region — "auto" (Pallas kernel on TPU, jnp elsewhere), "jnp", "pallas",
-    or "pallas_interpret" (kernel-path testing on CPU)."""
+    or "pallas_interpret" (kernel-path testing on CPU).
+    seq_axes: sequence-parallel cache domain — "auto" spans every DP axis
+    (('pod','data') on multi-pod meshes: the combine crosses the DCN);
+    ("data",) forces the legacy intra-pod layout (pods replicate)."""
     mod = encdec if cfg.family == "audio" else transformer
     a_params = jax.eval_shape(
         lambda k: mod.init_params(k, cfg), jax.random.PRNGKey(0))
@@ -329,7 +396,7 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
         a_params)
     pspecs = param_specs(a_params, mesh, fsdp=False)
     p_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), pspecs)
-    c_specs = cache_shardings(cfg, mesh, batch, cache_len)
+    c_specs = cache_shardings(cfg, mesh, batch, cache_len, seq_axes)
     c_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), c_specs)
     dp = dp_axes(mesh)
     shard = make_shard_fn(mesh)
@@ -352,11 +419,11 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
 
     choice = resolve_cache_combine(
         cfg, mesh, batch, cache_len,
-        override=None if combine == "auto" else combine)
-    _, seq_ax = _cache_layout(mesh, batch)
+        override=None if combine == "auto" else combine, seq_axes=seq_axes)
+    _, seq_cand = _cache_layout(mesh, batch, seq_axes)
     combine_layers = 0
     if choice.algorithm == "locality":
-        combine_layers = _combine_layer_count(cfg, mesh, cache_len, seq_ax)
+        combine_layers = _combine_layer_count(cfg, mesh, cache_len, seq_cand)
         if combine_layers == 0:
             # every layer would take the per-layer fallback — don't compile
             # a manual path that executes nothing
@@ -365,7 +432,7 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
     stats_impl = stats_ops.resolve_impl(fused_stats)
 
     def decode_locality(params, cache, tokens):
-        hook = _make_locality_decode_combine(cfg, mesh, seq_ax,
+        hook = _make_locality_decode_combine(cfg, mesh, seq_cand,
                                              stats_impl=stats_impl)
         logits, _, cache = mod.forward(params, cfg, tokens, cache=cache,
                                        shard=shard, decode_combine=hook)
@@ -402,7 +469,7 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
                           decode_fn_xla=decode_fn_xla,
                           decode_fn_locality=decode_fn_locality,
                           combine_layers=combine_layers,
-                          fused_stats=stats_impl)
+                          fused_stats=stats_impl, seq_axes=seq_cand)
 
 
 class Engine:
@@ -410,10 +477,12 @@ class Engine:
 
     def __init__(self, cfg, mesh, params, *, batch: int, cache_len: int,
                  combine: str = "auto", fused_stats: str = "auto",
+                 seq_axes: str | tuple[str, ...] = "auto",
                  log: Callable[[str], None] | None = None):
         self.cfg = cfg
         self.art = make_serve_fns(cfg, mesh, batch=batch, cache_len=cache_len,
-                                  combine=combine, fused_stats=fused_stats)
+                                  combine=combine, fused_stats=fused_stats,
+                                  seq_axes=seq_axes)
         params = jax.tree.map(
             lambda p: p.astype(cfg.dtype) if p.dtype == jnp.float32 else p,
             params)

@@ -1,15 +1,23 @@
 """Sharding rules: parameter PartitionSpecs + activation constraint hooks.
 
 Parameters are sharded 2-D (Megatron-style TP over ``model`` + optional
-FSDP/ZeRO over ``data``); a dim is sharded only if divisible by the axis
+FSDP/ZeRO over the DP axes); a dim is sharded only if divisible by the axis
 size (otherwise GSPMD padding would silently waste memory — we prefer
-explicit replication and record it). Activation hooks are the ``shard``
-callbacks threaded through the model zoo; in paper-mode (inside the
-``shard_map`` over DP axes) the DP axes are manual and must be dropped from
-every constraint — ``make_shard_fn(..., manual_dp=True)`` does exactly that.
+explicit replication and record it). On a multi-pod mesh the FSDP dim
+shards over the COMPOSITE ``('pod', 'data')`` axes (pod-major, matching the
+region-major rank of ``core/topology.RegionMap``) whenever the dim is
+divisible by the full DP size — so the ZeRO-3 gather genuinely crosses the
+DCN boundary and the locality-aware Bruck schedule has non-local rounds to
+optimize; dims divisible only by the 'data' size fall back to intra-pod
+sharding (pods hold replicas, the grad sync adds a pod allreduce).
+Activation hooks are the ``shard`` callbacks threaded through the model
+zoo; in paper-mode (inside the ``shard_map`` over DP axes) the DP axes are
+manual and must be dropped from every constraint —
+``make_shard_fn(..., manual_dp=True)`` does exactly that.
 """
 from __future__ import annotations
 
+import math
 from typing import Any
 
 import jax
@@ -25,6 +33,13 @@ def dp_axes(mesh) -> tuple[str, ...]:
     return tuple(a for a in DP_AXES if a in mesh.axis_names)
 
 
+def normalize_axes(axes: str | tuple[str, ...]) -> tuple[str, ...]:
+    """A bare axis-name string means ONE axis, not its characters —
+    ``"data"`` → ``("data",)`` (iterating the raw string would silently
+    match no axis and disable the feature it configures)."""
+    return (axes,) if isinstance(axes, str) else tuple(axes)
+
+
 def _axsize(mesh, name) -> int:
     if name not in mesh.axis_names:
         return 1
@@ -36,16 +51,23 @@ def _div(dim: int, n: int) -> bool:
 
 
 def _leaf_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh,
-               fsdp: bool) -> P:
+               fs_axes: tuple[str, ...]) -> P:
     """Heuristic spec from the leaf's key name; leading stacked dims are
-    handled by the caller."""
+    handled by the caller. ``fs_axes`` are the DP axes the FSDP dim may
+    shard over (empty = no FSDP)."""
     name = path[-1]
     m = _axsize(mesh, MODEL_AXIS)
     d = _axsize(mesh, "data")
-    fs = "data" if fsdp else None
+    full = math.prod(_axsize(mesh, a) for a in fs_axes) if fs_axes else 1
 
-    def fdim(dim):      # shard over data iff FSDP on and divisible
-        return fs if (fs and _div(dim, d)) else None
+    def fdim(dim):
+        # FSDP: prefer the full composite ('pod','data') span; dims only
+        # divisible by the 'data' size shard intra-pod (pods replicate).
+        if not fs_axes:
+            return None
+        if len(fs_axes) > 1 and _div(dim, full):
+            return tuple(fs_axes)
+        return "data" if ("data" in fs_axes and _div(dim, d)) else None
 
     def mdim(dim):
         return MODEL_AXIS if _div(dim, m) else None
@@ -84,8 +106,22 @@ def _leaf_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh,
     return P(*spec)
 
 
-def param_specs(abstract_params, mesh, *, fsdp: bool = False):
-    """PartitionSpec pytree for a params tree (use jax.eval_shape output)."""
+def param_specs(abstract_params, mesh, *, fsdp: bool = False,
+                fsdp_axes: str | tuple[str, ...] = "auto"):
+    """PartitionSpec pytree for a params tree (use jax.eval_shape output).
+
+    fsdp_axes: DP axes the FSDP dim shards over — "auto" uses every DP axis
+    on the mesh (('pod','data') on multi-pod, the locality-aware layout);
+    pass ("data",) to force the legacy intra-pod layout (pods replicate
+    params; benchmarks use this as the flat baseline).
+    """
+    if not fsdp:
+        fs_axes: tuple[str, ...] = ()
+    elif fsdp_axes == "auto":
+        fs_axes = dp_axes(mesh)
+    else:
+        fs_axes = tuple(a for a in normalize_axes(fsdp_axes)
+                        if a in mesh.axis_names)
 
     def visit(path, leaf):
         keys = tuple(getattr(p, "key", getattr(p, "idx", None)) for p in path)
@@ -94,7 +130,7 @@ def param_specs(abstract_params, mesh, *, fsdp: bool = False):
         # reps dim; encdec stacks under enc_layers/dec_layers.
         stacked = any(k in ("blocks",) or k.endswith("_layers") for k in keys)
         spec = _leaf_spec(keys, leaf.shape[1:] if stacked else leaf.shape,
-                          mesh, fsdp)
+                          mesh, fs_axes)
         return P(None, *spec) if stacked else spec
 
     return jax.tree_util.tree_map_with_path(visit, abstract_params)
@@ -108,8 +144,10 @@ def batch_spec() -> dict:
 # FSDP gather geometry (shared by the eager gather and the prefetch pipeline)
 # ---------------------------------------------------------------------------
 def fsdp_dim(spec: P) -> int:
-    """Index of the 'data'-sharded dim of a leaf spec (-1 = replicated) —
-    the dim the ZeRO-3 gather (and its reduce-scatter transpose) runs over."""
+    """Index of the DP-sharded dim of a leaf spec (-1 = replicated) —
+    the dim the ZeRO-3 gather (and its reduce-scatter transpose) runs over.
+    Matches both the intra-pod ('data') and the composite ('pod','data')
+    layouts (every FSDP entry contains 'data')."""
     for i, s in enumerate(spec):
         names = (s,) if isinstance(s, str) else tuple(s or ())
         if "data" in names:
@@ -117,9 +155,36 @@ def fsdp_dim(spec: P) -> int:
     return -1
 
 
+def fsdp_leaf_axes(spec: P) -> str:
+    """Comma-joined DP axes of the leaf's FSDP dim, outer-major
+    ("pod,data" / "data" / "" = replicated). A flat string — not a tuple —
+    so a whole-tree ``jax.tree.map`` keeps one leaf per parameter."""
+    k = fsdp_dim(spec)
+    if k < 0:
+        return ""
+    s = spec[k]
+    names = (s,) if isinstance(s, str) else tuple(s or ())
+    return ",".join(a for a in DP_AXES if a in names)
+
+
 def fsdp_param_dims(pspecs):
     """Per-leaf fsdp dim for a whole param-spec pytree."""
     return jax.tree.map(fsdp_dim, pspecs, is_leaf=lambda x: isinstance(x, P))
+
+
+def fsdp_param_axes(pspecs):
+    """Per-leaf comma-joined FSDP axes ("" = replicated) for a spec pytree."""
+    return jax.tree.map(fsdp_leaf_axes, pspecs,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def gather_outer_local(axes: str) -> tuple[tuple[str, ...], tuple[str, ...]]:
+    """(outer, local) split of a comma-joined FSDP axes string: 'pod' is the
+    non-local (DCN) tier, everything else stays local (ICI) — the split the
+    locality-aware Bruck gather and its reduce-scatter transpose run over."""
+    names = tuple(a for a in axes.split(",") if a)
+    return (tuple(a for a in names if a == "pod"),
+            tuple(a for a in names if a != "pod"))
 
 
 def block_slice_dims(block_dims):
@@ -166,6 +231,8 @@ def make_shard_fn(mesh=None, *, manual_dp: bool = False, seq_shard: bool = False
         return lambda x, kind: x
     dp = dp_axes(mesh) if mesh is not None else DP_AXES
     m = _axsize(mesh, MODEL_AXIS) if mesh is not None else 1
+    dp_size = (math.prod(_axsize(mesh, a) for a in dp)
+               if mesh is not None else 1)
 
     def on_model(dim: int) -> bool:
         return m > 1 and dim % m == 0
@@ -177,7 +244,16 @@ def make_shard_fn(mesh=None, *, manual_dp: bool = False, seq_shard: bool = False
         spec = []
         for i, r in enumerate(rule):
             if r == "dp":
-                spec.append(None if manual_dp else (dp or None))
+                # constrain only divisible dims — hinting a batch-1 decode
+                # activation onto 8 DP devices makes GSPMD shard the
+                # upstream projection matmuls over idle ranks and pay a
+                # (pod,data) partial-sum all-reduce to re-replicate at the
+                # manual-region boundary (pure noise traffic)
+                on_dp = (dp and not manual_dp and mesh is not None
+                         and x.shape[i] % max(dp_size, 1) == 0)
+                if mesh is None:
+                    on_dp = not manual_dp and bool(dp)
+                spec.append(dp if on_dp else None)
             elif r == "model":
                 spec.append(MODEL_AXIS if on_model(x.shape[i]) else None)
             else:

@@ -32,7 +32,8 @@ from repro.core import collectives as C
 from repro.models import encdec, transformer
 from repro.optim import AdamW, TrainState
 from .sharding import (DP_AXES, batch_spec, block_slice_dims, dp_axes,
-                       fsdp_param_dims, make_shard_fn, param_specs)
+                       fsdp_param_axes, fsdp_param_dims, gather_outer_local,
+                       make_shard_fn, normalize_axes, param_specs)
 
 
 # ---------------------------------------------------------------------------
@@ -88,21 +89,24 @@ class BlockPrefetch:
     """Per-layer ZeRO-3 gather hook for the scanned transformer pipeline.
 
     ``start`` issues the allgather of ONE super-block slice's shards over
-    'data' (split halves of core/collectives — the wire rounds complete in
-    start); ``finish`` completes the local tail at the consumer. The model
-    scan calls start for layer i + depth before layer i's compute, so the
-    gather rides behind the matmuls instead of serializing in front of
-    them; autodiff transposes each start/finish pair into the matching
-    reduce-scatter, placed with the same lookahead in the backward.
+    its DP axes (split halves of core/collectives — the wire rounds,
+    including every non-local DCN round of a ('pod','data')-sharded leaf,
+    complete in start); ``finish`` completes the local ICI tail at the
+    consumer. The PendingCollective rides the scan carry with the two-tier
+    (outer, local) layout in its meta, so the double buffer hides exactly
+    the DCN rounds. The model scan calls start for layer i + depth before
+    layer i's compute; autodiff transposes each start/finish pair into the
+    matching reduce-scatter, placed with the same lookahead in the
+    backward.
 
     Bitwise-identical to the eager ``_gather`` path: same cast, same
-    moveaxis, same Bruck schedule over 'data' (a single region —
-    ``locality_bruck`` start/finish degenerates to the local Bruck with a
-    deferred reorder).
+    moveaxis, same locality-Bruck schedule per leaf (on a single region it
+    degenerates to the local Bruck with a deferred reorder).
     """
 
-    def __init__(self, slice_dims, dtype, depth: int):
+    def __init__(self, slice_dims, slice_axes, dtype, depth: int):
         self.dims = slice_dims        # fsdp dim per slice leaf (-1 = repl.)
+        self.axes = slice_axes        # comma-joined DP axes per leaf ("")
         self.dtype = dtype
         self.depth = depth
 
@@ -110,14 +114,15 @@ class BlockPrefetch:
         return leaf.astype(self.dtype) if leaf.dtype == jnp.float32 else leaf
 
     def start(self, slice_shards):
-        def go(leaf, k):
+        def go(leaf, k, ax):
             if k < 0:
                 return self._cast(leaf)
             x = jnp.moveaxis(self._cast(leaf), k, 0)
-            return C.allgather_start(x, (), ("data",),
+            outer, local = gather_outer_local(ax)
+            return C.allgather_start(x, outer, local,
                                      algorithm="locality_bruck", tiled=True,
                                      assume_varying=True)
-        return jax.tree.map(go, slice_shards, self.dims)
+        return jax.tree.map(go, slice_shards, self.dims, self.axes)
 
     def finish(self, pending):
         def done(p, k):
@@ -181,7 +186,8 @@ class StepArtifacts:
     grad_algorithm: str = ""          # collective algorithm behind it
     grad_sync_source: str = ""        # "table" | "model" | "explicit"
     prefetch_depth: int = 0           # resolved FSDP gather lookahead (0=eager)
-    prefetch_source: str = ""         # "table" | "model" | "explicit" | "n/a"
+    prefetch_source: str = ""         # "table"|"model"|"dispatch"|"explicit"|"n/a"
+    fsdp_axes: tuple = ()             # resolved FSDP sharding domain
 
 
 def abstract_batch(cfg, shape) -> dict:
@@ -207,6 +213,7 @@ def custom_batch_specs(cfg, global_batch: int, seq_len: int) -> dict:
 
 def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                     grad_sync: str = "xla", fsdp: bool = False,
+                    fsdp_axes: str | tuple[str, ...] = "auto",
                     seq_shard: bool = False, remat: bool = True,
                     bucket_mb: float = 64.0, compress: bool = False,
                     donate: bool = True, shape="train_4k",
@@ -221,13 +228,23 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
     (core/autotune.py) using the model's gradient size and the mesh
     topology — the paper's Eq. 2-4 promoted into a runtime policy.
 
+    fsdp_axes: the DP axes FSDP shards params over — "auto" spans every DP
+    axis on the mesh (('pod','data') on multi-pod: the ZeRO-3 gather runs
+    the locality-aware Bruck with outer=('pod',), local=('data',) and its
+    transpose reduce-scatters the grads over the SAME two-tier schedule,
+    so only the log_{p_ℓ}(r) non-local rounds cross the DCN); ("data",)
+    forces the legacy intra-pod layout (pods replicate params and the
+    grad sync adds a pod allreduce per bucket).
+
     prefetch_depth: lookahead of the double-buffered FSDP gather pipeline
     (DESIGN.md §5): 0 = eager (whole stacked gather in front of the
     forward), d >= 1 = layer i + d's gather issued before layer i's
     compute inside the scan. "auto" asks the tuning policy's overlap term
-    (per-layer gather bytes × layer flops on this topology). Applies to
-    paper-mode FSDP on the transformer family; degrades to eager where the
-    in-scan gather cannot run (legacy partial-auto split, encdec)."""
+    (per-layer gather bytes × layer flops on this topology), guarded by
+    the measured per-dispatch overhead of the live backend — a host-CPU
+    harness with no real wire resolves to 0. Applies to paper-mode FSDP
+    on the transformer family; degrades to eager where the in-scan gather
+    cannot run (legacy partial-auto split, encdec)."""
     optimizer = optimizer or AdamW()
     model = encdec if cfg.family == "audio" else transformer
     loss_fn = make_loss_fn(cfg, remat=remat)
@@ -256,7 +273,11 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
     # --- abstract state + shardings ------------------------------------------
     a_params = jax.eval_shape(
         lambda k: model.init_params(k, cfg), jax.random.PRNGKey(0))
-    pspecs = param_specs(a_params, mesh, fsdp=fsdp)
+    pspecs = param_specs(a_params, mesh, fsdp=fsdp, fsdp_axes=fsdp_axes)
+    resolved_fsdp_axes = (() if not fsdp else
+                          dp_axes(mesh) if fsdp_axes == "auto" else
+                          tuple(a for a in normalize_axes(fsdp_axes)
+                                if a in mesh.axis_names))
     a_state = jax.eval_shape(TrainState.create, a_params)
     state_specs = TrainState(params=pspecs, mu=pspecs, nu=pspecs, step=P())
     state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
@@ -285,22 +306,34 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
         resolved_depth = 0
         if can_prefetch:
             # per-layer overlap term: per-rank gather bytes of one scanned
-            # super-block slice vs that slice's forward matmul window
+            # super-block slice vs that slice's forward matmul window. The
+            # gather span is per-leaf: ('pod','data')-sharded leaves split
+            # over the full DP size, data-only leaves over the pod-local
+            # slice — and the topology handed to the policy is the widest
+            # span so the DCN rounds are priced when any leaf crosses pods.
             blk_dims = fsdp_param_dims(pspecs)["blocks"]
+            blk_axes = fsdp_param_axes(pspecs)["blocks"]
             blk_leaves = jax.tree.leaves(a_params["blocks"])
             dim_leaves = jax.tree.leaves(blk_dims)
+            axes_leaves = jax.tree.leaves(blk_axes)
             itemsize = jnp.dtype(cfg.dtype).itemsize
             slice_elems = sum(int(np.prod(l.shape[1:])) for l in blk_leaves)
-            sharded_elems = sum(int(np.prod(l.shape[1:]))
-                                for l, k in zip(blk_leaves, dim_leaves)
-                                if k >= 0)
-            gather_bytes = sharded_elems * itemsize / d_size
+            gather_bytes = sum(
+                int(np.prod(l.shape[1:])) * itemsize
+                / (dp_size if "pod" in a else d_size)
+                for l, k, a in zip(blk_leaves, dim_leaves, axes_leaves)
+                if k >= 0)
+            crosses_pods = any("pod" in a for k, a in
+                               zip(dim_leaves, axes_leaves) if k >= 0)
+            p_gather = dp_size if crosses_pods else d_size
             tokens_per_dev = int(np.prod(b_abstract["tokens"].shape)) \
                 // max(dp_size, 1)
             layer_flops = 2.0 * slice_elems * tokens_per_dev
+            from repro.tuning.measure import dispatch_overhead_s
             from repro.tuning.policy import default_policy
-            sel = default_policy().select_overlap(d_size, d_size,
-                                                  gather_bytes, layer_flops)
+            sel = default_policy().select_overlap(
+                p_gather, d_size, gather_bytes, layer_flops,
+                dispatch_overhead_s=dispatch_overhead_s())
             resolved_depth = (C.PREFETCH_DEPTH_DEFAULT
                               if sel.algorithm == "prefetch" else 0)
             prefetch_source = sel.source
@@ -346,27 +379,38 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                "locality_rd": ("locality", "rd"),
                "flat_psum": ("xla", "rhd")}[grad_sync]
 
-        # fsdp dim per leaf (-1 = replicated over 'data'). In paper mode the
-        # 'data' axis is *manual*: ZeRO-3-style shards enter the shard_map,
-        # are gathered with the (locality-aware) Bruck allgather before use,
-        # and autodiff transposes the gather into the matching
-        # reduce-scatter of the gradients — paper Algorithm 2 as the literal
-        # FSDP communication path. Only the per-shard all-reduce over 'pod'
-        # crosses the DCN boundary (1/16 of the bytes).
+        # fsdp dim + DP axes per leaf (-1/"" = replicated). In paper mode
+        # the DP axes are *manual*: ZeRO-3-style shards enter the
+        # shard_map, are gathered with the (locality-aware) Bruck
+        # allgather before use, and autodiff transposes the gather into
+        # the matching reduce-scatter of the gradients — paper Algorithm 2
+        # as the literal FSDP communication path. A ('pod','data')-sharded
+        # leaf runs the two-tier schedule with outer=('pod',): its
+        # non-local rounds are the ONLY DCN traffic of that leaf's whole
+        # gather+sync cycle (the transpose reduce-scatters over both tiers
+        # at once, no separate pod allreduce). Leaves sharded over 'data'
+        # alone keep the per-shard pod allreduce (1/p_ℓ of the bytes).
         fsdp_dims = fsdp_param_dims(pspecs)
+        fsdp_axs = fsdp_param_axes(pspecs)
         param_in_specs = jax.tree.map(
-            lambda sp, k: P(*[("data" if i == k else None)
+            lambda sp, k: P(*[(sp[i] if i == k else None)
                               for i in range(len(sp))]),
             pspecs, fsdp_dims, is_leaf=lambda x: isinstance(x, P))
 
-        def _gather(shard_leaf, k):
+        def _gather(shard_leaf, k, ax=""):
             if k < 0:
                 return shard_leaf.astype(cfg.dtype) \
                     if shard_leaf.dtype == jnp.float32 else shard_leaf
             x = shard_leaf.astype(cfg.dtype)       # gather the bf16 copy
             x = jnp.moveaxis(x, k, 0)
-            full = C.bruck_allgather(x, ("data",), tiled=True,
-                                     assume_varying=True)
+            g_outer, g_local = gather_outer_local(ax)
+            if g_outer:
+                full = C.locality_bruck_allgather(x, g_outer, g_local,
+                                                  tiled=True,
+                                                  assume_varying=True)
+            else:
+                full = C.bruck_allgather(x, g_local or ("data",), tiled=True,
+                                         assume_varying=True)
             return jnp.moveaxis(full, 0, k)
 
         def sync_pod(t):
@@ -384,7 +428,8 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
         hook = None
         if resolved_depth > 0 and can_prefetch:
             hook = BlockPrefetch(block_slice_dims(fsdp_dims["blocks"]),
-                                 cfg.dtype, resolved_depth)
+                                 fsdp_axs["blocks"], cfg.dtype,
+                                 resolved_depth)
 
         def body(params, batch):
             shard = make_shard_fn(mesh, manual_dp=True, seq_shard=seq_shard)
@@ -396,10 +441,12 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                                 if k != "blocks"}
                         rdims = {k: v for k, v in fsdp_dims.items()
                                  if k != "blocks"}
-                        full = jax.tree.map(_gather, rest, rdims)
+                        raxes = {k: v for k, v in fsdp_axs.items()
+                                 if k != "blocks"}
+                        full = jax.tree.map(_gather, rest, rdims, raxes)
                         full["blocks"] = shards["blocks"]
                         return loss_fn(full, mb, shard, prefetch=hook)
-                    full = jax.tree.map(_gather, shards, fsdp_dims)
+                    full = jax.tree.map(_gather, shards, fsdp_dims, fsdp_axs)
                     return loss_fn(full, mb, shard)
                 return jax.value_and_grad(sharded_loss, has_aux=True)(params)
 
@@ -407,14 +454,24 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
             # sync below runs ONCE on the accumulated grads.
             (_, metrics), grads = _accumulated(one, batch)
 
-            # sync: fsdp leaves are already reduce-scattered over 'data' by
-            # the gather transpose; finish with the pod allreduce. Leaves
-            # replicated over 'data' need the full locality allreduce.
+            # sync, by per-leaf FSDP geometry:
+            #   ('pod','data')-sharded: the gather transpose already
+            #     reduce-scattered over BOTH tiers — scale to the mean,
+            #     zero extra collectives;
+            #   'data'-sharded: reduce-scattered intra-pod — finish with
+            #     the pod allreduce;
+            #   replicated: full locality allreduce over (pod, data).
             leaves, treedef = jax.tree.flatten(grads)
             dims = jax.tree.leaves(fsdp_dims)
-            idx_rs = [i for i, k in enumerate(dims) if k >= 0]
+            axs = jax.tree.leaves(fsdp_axs)
+            idx_done = [i for i, (k, a) in enumerate(zip(dims, axs))
+                        if k >= 0 and "pod" in a]
+            idx_rs = [i for i, (k, a) in enumerate(zip(dims, axs))
+                      if k >= 0 and "pod" not in a]
             idx_full = [i for i, k in enumerate(dims) if k < 0]
 
+            for i in idx_done:
+                leaves[i] = leaves[i] / dp_size
             if idx_rs and fsdp:
                 sub = bucketed_sync([leaves[i] for i in idx_rs], sync_pod,
                                     bucket_mb=bucket_mb, compress=compress)
@@ -451,16 +508,20 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
             resolved_depth, prefetch_source = 0, "n/a"
             nogather_dims = jax.tree.map(lambda _: -1, fsdp_dims)
 
-            def _strip_data(sp: P) -> P:
+            def _strip_dp(sp: P) -> P:
+                # drop every DP axis ('data' AND 'pod' of the composite
+                # FSDP entries) — the sync shard_map re-stacks the grads on
+                # a fresh leading dp axis, so an inner pod/data entry would
+                # name a manual axis twice.
                 ent = []
                 for s in sp:
                     names = (s,) if isinstance(s, str) else tuple(s or ())
-                    names = tuple(n for n in names if n != "data")
+                    names = tuple(n for n in names if n not in dp)
                     ent.append(names[0] if len(names) == 1
                                else (names or None))
                 return P(*ent)
 
-            sync_pspecs = jax.tree.map(_strip_data, pspecs,
+            sync_pspecs = jax.tree.map(_strip_dp, pspecs,
                                        is_leaf=lambda x: isinstance(x, P))
 
             def compute_body(params, batch):
@@ -529,7 +590,8 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                          grad_algorithm=grad_algorithm,
                          grad_sync_source=grad_sync_source,
                          prefetch_depth=resolved_depth,
-                         prefetch_source=prefetch_source)
+                         prefetch_source=prefetch_source,
+                         fsdp_axes=resolved_fsdp_axes)
 
 
 def init_state(cfg, mesh, artifacts: StepArtifacts, seed: int = 0) -> TrainState:

@@ -208,6 +208,42 @@ def simulate(collective: str, algorithm: str, p: int, p_local: int,
 
 
 # ---------------------------------------------------------------------------
+# measured dispatch overhead (the overlap policy's reality check)
+# ---------------------------------------------------------------------------
+_DISPATCH_OVERHEAD: float | None = None
+
+
+def dispatch_overhead_s(*, iters: int = 20, refresh: bool = False) -> float:
+    """Measured (not modeled) per-dispatch overhead of the live backend.
+
+    Times a cached trivial jitted computation end to end (dispatch + sync)
+    and returns the median — the floor cost every extra issued collective /
+    unrolled pipeline stage pays on this host. ``Policy.select_overlap``
+    compares this MEASURED quantity against the MODELED hidden
+    communication of the prefetch schedule: on a host-CPU harness there is
+    no real wire, the modeled hidden time is fiction, and the dispatch
+    overhead is what the double-buffered pipeline actually adds per layer
+    (the BENCH_overlap wall-clock regression: prefetched slower than eager
+    on CPU). Cached per process.
+    """
+    global _DISPATCH_OVERHEAD
+    if _DISPATCH_OVERHEAD is not None and not refresh:
+        return _DISPATCH_OVERHEAD
+    import jax
+    import jax.numpy as jnp
+    f = jax.jit(lambda x: x + 1.0)
+    x = jnp.zeros((8,), jnp.float32)
+    jax.block_until_ready(f(x))                 # compile outside the timing
+    samples = []
+    for _ in range(iters):
+        t0 = time.perf_counter()
+        jax.block_until_ready(f(x))
+        samples.append(time.perf_counter() - t0)
+    _DISPATCH_OVERHEAD = statistics.median(samples)
+    return _DISPATCH_OVERHEAD
+
+
+# ---------------------------------------------------------------------------
 # real executor
 # ---------------------------------------------------------------------------
 def _measure_real(collective: str, algorithm: str, p: int, p_local: int,

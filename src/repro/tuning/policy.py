@@ -146,7 +146,8 @@ class Policy:
 
     # ------------------------------------------------------------------
     def select_overlap(self, p: int, p_local: int, nbytes: float,
-                       flops: float, dtype: str = "float32") -> Selection:
+                       flops: float, dtype: str = "float32", *,
+                       dispatch_overhead_s: float | None = None) -> Selection:
         """Eager vs prefetched gather schedule for one layer.
 
         The (topology, bytes, flops) domain maps onto the 2-D table by
@@ -154,18 +155,37 @@ class Policy:
         ("overlap:i<k>", octave resolution). With a table entry the
         crossover machinery (buckets + hysteresis) decides; otherwise the
         model fallback prices the layer with its *exact* flops.
+
+        dispatch_overhead_s: the MEASURED per-dispatch overhead of the live
+        backend (``measure.dispatch_overhead_s()``). Overlap cells are only
+        ever simulated (there is no wall-clock overlap executor), so both
+        the table and the model can promise hidden communication that a
+        host-CPU harness — where there is no real wire to hide — can never
+        deliver while still paying the pipeline's extra dispatches. When
+        the measured overhead meets or exceeds the MODELED hidden time per
+        layer, the selection falls back to eager (source "dispatch"): the
+        fix for the BENCH_overlap prefetched-slower-than-eager regression.
         """
         if p <= 1:
             return Selection("eager", "model", 0.0)
         coll = overlap_collective(flops / max(nbytes, 1.0))
         table = self.crossover_table(coll, p, p_local, dtype)
         if table:
-            return self._table_lookup(table, nbytes)
-        costs = {a: simulate_overlap(a, p, p_local, nbytes, self.machine,
-                                     flops=flops)
-                 for a in OVERLAP_ALGORITHMS}
-        best = min(costs, key=costs.get)
-        return Selection(best, "model", costs[best])
+            sel = self._table_lookup(table, nbytes)
+        else:
+            costs = {a: simulate_overlap(a, p, p_local, nbytes, self.machine,
+                                         flops=flops)
+                     for a in OVERLAP_ALGORITHMS}
+            best = min(costs, key=costs.get)
+            sel = Selection(best, "model", costs[best])
+        if sel.algorithm == "prefetch" and dispatch_overhead_s:
+            hidden = (simulate_overlap("eager", p, p_local, nbytes,
+                                       self.machine, flops=flops)
+                      - simulate_overlap("prefetch", p, p_local, nbytes,
+                                         self.machine, flops=flops))
+            if dispatch_overhead_s >= hidden:
+                return Selection("eager", "dispatch", sel.cost)
+        return sel
 
     # ------------------------------------------------------------------
     def stale_buckets(self, max_age: int) -> list[str]:

@@ -147,10 +147,14 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
     }
     agree = [c["measured_winner"] == c["modeled_winner"] for c in cells
              if not c["self_comparison"]]
+    from .measure import dispatch_overhead_s
     report = {
         "fingerprint": fp.key(),
         "mode": eff_mode,
         "machine_model": machine,
+        # the live backend's measured per-dispatch cost — the floor the
+        # overlap policy's dispatch guard compares modeled hidden comm to
+        "dispatch_overhead_s": dispatch_overhead_s(),
         "topology": {"p": p, "p_local": p_local, "n_regions": p // p_local},
         "hysteresis": hysteresis,
         "generation": generation,

@@ -32,3 +32,25 @@ def run_subprocess(code: str, devices: int = 8, timeout: int = 900):
 @pytest.fixture(scope="session")
 def subproc():
     return run_subprocess
+
+
+class FakeDev:
+    """Stand-in for a jax Device: the topology helpers only read ``.id``."""
+
+    def __init__(self, id_):
+        self.id = id_
+
+
+def fake_mesh(shape, names):
+    """Mesh stand-in (``axis_names`` + object ndarray of FakeDevs) for
+    topology/sharding unit tests that never touch real devices."""
+    import numpy as np
+    n = int(np.prod(shape))
+    devs = np.array([FakeDev(i) for i in range(n)],
+                    dtype=object).reshape(shape)
+
+    class _M:
+        axis_names = names
+        devices = devs
+
+    return _M()

@@ -35,6 +35,74 @@ def test_permute_locality_classification():
     # {0,1},{1,0} local; {2,3},{3,2} local; {0,2},{2,0} non-local
     assert st.permute_edges_local == 4
     assert st.permute_edges_nonlocal == 2
+    # per-EDGE payload accounting: each edge moves the op's bytes (the
+    # async -start op's tuple type counts its send+recv buffers, 64 B)
+    assert st.permute_bytes_local == 4 * 64 * 64 * 4
+    assert st.permute_bytes_nonlocal == 2 * 64
+
+
+GROUP_HLO = """
+HloModule groups
+  %arl = f32[64]{0} all-reduce(f32[64]{0} %a), replica_groups={{0,1},{2,3}}, to_apply=%add
+  %arx = f32[64]{0} all-reduce(f32[64]{0} %b), replica_groups={{0,2},{1,3}}, to_apply=%add
+  %ag = f32[128]{0} all-gather(f32[32]{0} %c), replica_groups={{0,1,2,3}}, dimensions={0}
+  %rs = f32[16]{0} reduce-scatter(f32[64]{0} %d), replica_groups={{0,1},{2,3}}, dimensions={0}
+  %a2a = f32[64]{0} all-to-all(f32[64]{0} %e), replica_groups={{0,1,2,3}}, dimensions={0}
+"""
+
+
+def test_group_collective_classification():
+    pod = {0: 0, 1: 0, 2: 1, 3: 1}
+    st = collective_stats(GROUP_HLO, pod)
+    # %arl: both groups intra-pod -> ring msgs 2*(2-1)=2 per link, 2 links
+    # per group, all local. %arx: both groups cross pods -> all nonlocal.
+    # %ag over {0,1,2,3}: ring links (0,1)(1,2)(2,3)(3,0): 2 cross; each
+    # link carries (n-1)=3 msgs of b/n.
+    # %rs per-group n=2: 1 msg per link of the scattered shard (b=64B).
+    # %a2a: ordered cross-pod pairs 8 of 12, b/n = 64B each.
+    assert st.group_msgs_nonlocal == (2 * 2 * 2      # arx
+                                      + 2 * 3        # ag crossing links
+                                      + 8)           # a2a
+    assert st.group_msgs_local == (2 * 2 * 2         # arl
+                                   + 2 * 3           # ag local links
+                                   + 2 * 2 * 1      # rs (2 groups, 2 links)
+                                   + 4)              # a2a intra-pod pairs
+    b_ag = 128 * 4
+    assert st.group_bytes_nonlocal == (2 * 2 * 2 * (64 * 4 / 2)
+                                       + 2 * 3 * (b_ag / 4)
+                                       + 8 * (64 * 4 / 4))
+    assert st.nonlocal_msgs == st.group_msgs_nonlocal   # no permutes here
+    assert st.nonlocal_bytes == st.group_bytes_nonlocal
+
+
+def test_group_classification_non_power_of_two_pods():
+    # 3 pods of 2 ranks; one all-reduce spanning everything (iota form) and
+    # one per-pod reduce-scatter (explicit)
+    hlo = """
+  %ar = f32[96]{0} all-reduce(f32[96]{0} %a), replica_groups=[1,6]<=[6], to_apply=%add
+  %rs = f32[8]{0} reduce-scatter(f32[48]{0} %b), replica_groups={{0,1},{2,3},{4,5}}, dimensions={0}
+"""
+    pod = {i: i // 2 for i in range(6)}
+    st = collective_stats(hlo, pod)
+    # ring over [0..5]: links (1,2),(3,4),(5,0) cross pods -> 3 of 6;
+    # all-reduce: 2*(6-1)=10 msgs per link of b/6
+    assert st.group_msgs_nonlocal == 3 * 10
+    assert st.group_msgs_local == 3 * 10 + 3 * 2 * 1   # + rs per-pod
+    assert abs(st.group_bytes_nonlocal - 3 * 10 * (96 * 4 / 6)) < 1e-9
+
+
+def test_iota_replica_group_parsing():
+    from repro.core.hlo_analysis import _replica_groups
+    pod = {i: 0 for i in range(8)}
+    line = "x = f32[8] all-reduce(f32[8] %a), replica_groups=[2,4]<=[8]"
+    assert _replica_groups(line, pod) == [[0, 1, 2, 3], [4, 5, 6, 7]]
+    line = "x = f32[8] all-reduce(f32[8] %a), replica_groups=[2,4]<=[4,2]T(1,0)"
+    assert _replica_groups(line, pod) == [[0, 2, 4, 6], [1, 3, 5, 7]]
+    # empty groups attribute = one group of every known device
+    line = "x = f32[8] all-reduce(f32[8] %a), replica_groups={}"
+    assert _replica_groups(line, pod) == [sorted(pod)]
+    # no attribute at all
+    assert _replica_groups("x = f32[8] add(f32[8] %a)", pod) is None
 
 
 def test_roofline_terms():

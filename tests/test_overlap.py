@@ -259,8 +259,12 @@ data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=8,
 art = make_train_step(cfg, mesh, grad_sync="locality", fsdp=True,
                       shape=custom_batch_specs(cfg, 8, 32), donate=False,
                       prefetch_depth="auto")
-assert art.prefetch_source in ("model", "table"), art
+assert art.prefetch_source in ("model", "table", "dispatch"), art
 assert art.prefetch_depth in (0, 1), art
+# on the host-CPU harness there is no wire to hide: the measured-dispatch
+# guard must resolve "auto" to the eager schedule (depth 0)
+if jax.default_backend() == "cpu":
+    assert art.prefetch_depth == 0, art
 print("TRAIN_EXACT_OK")
 """
 
