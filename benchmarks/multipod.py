@@ -19,6 +19,14 @@ Paper Fig. 7/8 analogue on the compiled artifact, two halves:
      over ('pod','data')) vs GSPMD's implicit flat combine
      (combine="xla").
 
+   * BOTH halves again on THREE-pod meshes (3×8 ('pod','data')) — the
+     non-power region count that exercises Algorithm 2's allgatherv
+     adaptation (partial final-round payloads; Bruck-transpose grad
+     reduce-scatter; fold/unfold max phase — DESIGN.md §7). Before this
+     adaptation the locality paths silently fell back to flat psum on
+     q = 3, so this cell is the CI gate that the locality claim holds on
+     the mesh shapes real fleets actually have.
+
 2. **Numerics** — on a 2×4 ('pod','data') mesh (8 host devices), the
    pod-aware layouts must agree with the legacy 'data'-only layouts on the
    same device count: train loss bitwise-identical and params equal to
@@ -27,7 +35,9 @@ Paper Fig. 7/8 analogue on the compiled artifact, two halves:
    pattern differs while every forward value is bitwise-identical; the
    recorded ``params_bitwise`` flag shows what this host produced), and
    greedy decode tokens exactly equal across pod-aware locality, pod-aware
-   XLA, and data-only layouts.
+   XLA, and data-only layouts. The same equivalences re-run on a 3×2 mesh
+   (6 host devices) where the wrapped final Bruck round carries a genuine
+   partial payload.
 
 Writes ``BENCH_multipod.json``; any violated inequality fails the run.
 """
@@ -111,6 +121,149 @@ for name, fn in (("locality", art.decode_fn_locality),
         "nonlocal_msgs": st.nonlocal_msgs,
         "nonlocal_bytes": st.nonlocal_bytes,
     }
+print("JSON" + json.dumps(out))
+"""
+
+THREEPOD_HLO_CODE = r"""
+import json, dataclasses
+import jax, numpy as np
+from repro import configs
+from repro.core.hlo_analysis import collective_stats, op_payloads
+from repro.core.topology import device_pod_map
+from repro.serve.engine import cache_specs, make_serve_fns
+from repro.train.step import custom_batch_specs, make_train_step
+
+mesh = jax.make_mesh((3, 8), ("pod", "data"))
+jax.set_mesh(mesh)
+# dims divisible by the 3x8 composite span (24) so every FSDP leaf genuinely
+# shards across all three pods — the allgatherv adaptation's domain
+cfg = dataclasses.replace(configs.get_smoke("llama3.2-3b"), n_layers=2,
+                          d_model=96, d_ff=192, vocab_size=384)
+pod_map = device_pod_map(mesh, ("pod",))
+out = {"mesh": "3x8 (pod,data)", "n_devices": 24}
+
+# --- train FSDP: locality Algorithm-2 gather vs flat GSPMD ----------------
+bspec = custom_batch_specs(cfg, 24, 64)
+train = {}
+for name, kw in (("locality", dict(grad_sync="locality")),
+                 ("flat_xla", dict(grad_sync="xla"))):
+    art = make_train_step(cfg, mesh, fsdp=True, shape=bspec, donate=False,
+                          **kw)
+    assert art.fsdp_axes == ("pod", "data"), art.fsdp_axes
+    hlo = art.step_fn.lower(art.abstract_state, bspec).compile().as_text()
+    st = collective_stats(hlo, pod_map)
+    train[name] = {
+        "counts": dict(st.counts),
+        "permute_edges_nonlocal": st.permute_edges_nonlocal,
+        "permute_bytes_nonlocal": st.permute_bytes_nonlocal,
+        "group_msgs_nonlocal": st.group_msgs_nonlocal,
+        "group_bytes_nonlocal": st.group_bytes_nonlocal,
+        "nonlocal_msgs": st.nonlocal_msgs,
+        "nonlocal_bytes": st.nonlocal_bytes,
+    }
+out["train_fsdp_3pod"] = train
+
+# --- serve decode: hierarchical combine over q=3 pods vs flat GSPMD -------
+B, L = 1, 48                                  # seq-sharded over 24
+art = make_serve_fns(cfg, mesh, batch=B, cache_len=L, combine="locality")
+assert art.combine.algorithm == "locality", art.combine
+assert art.combine.p == 24 and art.combine.p_local == 8, art.combine
+assert art.seq_axes == ("pod", "data"), art.seq_axes
+c_specs = cache_specs(cfg, B, L)
+tok = jax.ShapeDtypeStruct((B, 1), np.int32)
+serve = {"combine_layers": art.combine_layers}
+for name, fn in (("locality", art.decode_fn_locality),
+                 ("flat_xla", art.decode_fn_xla)):
+    hlo = fn.lower(art.abstract_params, c_specs, tok).compile().as_text()
+    st = collective_stats(hlo, pod_map)
+    serve[name] = {
+        "counts": dict(st.counts),
+        "permute_edges_nonlocal": st.permute_edges_nonlocal,
+        "permute_bytes_nonlocal": st.permute_bytes_nonlocal,
+        "group_msgs_nonlocal": st.group_msgs_nonlocal,
+        "group_bytes_nonlocal": st.group_bytes_nonlocal,
+        "nonlocal_msgs": st.nonlocal_msgs,
+        "nonlocal_bytes": st.nonlocal_bytes,
+    }
+    if name == "locality":
+        # the non-power outer tiers must run Algorithm 2, not a psum
+        # fallback: no add- or max-combiner all-reduce may survive in the
+        # locality decode HLO (the flat path keeps GSPMD's implicit ones)
+        assert not op_payloads(hlo, "all-reduce"), "psum fallback resurfaced"
+out["serve_combine_3pod"] = serve
+print("JSON" + json.dumps(out))
+"""
+
+NUMERICS3_CODE = r"""
+import json, dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.data import SyntheticLM
+from repro.optim import AdamW
+from repro.serve.engine import Engine
+from repro.train.step import custom_batch_specs, init_state, make_train_step
+
+mesh = jax.make_mesh((3, 2), ("pod", "data"))
+jax.set_mesh(mesh)
+out = {"mesh": "3x2 (pod,data)", "n_devices": 6}
+cfg = dataclasses.replace(configs.get_smoke("llama3.2-3b"), n_layers=2,
+                          d_model=96, d_ff=192, vocab_size=384)
+data = SyntheticLM(vocab_size=cfg.vocab_size, seq_len=32, global_batch=6,
+                   seed=0)
+bspec = custom_batch_specs(cfg, 6, 32)
+# With q=3 the two layouts' grad reductions associate a THREE-term sum
+# differently (two-tier Bruck-transpose RS vs intra-pod RS + pod
+# allreduce), so grads agree only to fp32 ulp — and Adam's g/sqrt(g^2)
+# normalization amplifies an ulp-level sign flip of a near-zero gradient
+# into an lr-scale param difference (q=2 dodges this: a+b has one
+# association). eps=1e-2 keeps the optimizer in its linear regime so the
+# strict rtol below measures the gradient-sync equivalence itself.
+opt = AdamW(eps=1e-2)
+runs = {}
+for name, axes in (("pod_data", "auto"), ("data_only", ("data",))):
+    art = make_train_step(cfg, mesh, grad_sync="locality", fsdp=True,
+                          fsdp_axes=axes, shape=bspec, donate=False,
+                          optimizer=opt)
+    state = init_state(cfg, mesh, art)
+    batch = {k: jax.device_put(v, art.batch_shardings[k])
+             for k, v in data.batch(0).items()}
+    state2, metrics = art.step_fn(state, batch)
+    runs[name] = (art, float(metrics["loss"]), state2)
+assert runs["pod_data"][0].fsdp_axes == ("pod", "data")
+loss_pod, loss_dat = runs["pod_data"][1], runs["data_only"][1]
+assert loss_pod == loss_dat, (loss_pod, loss_dat)
+max_rel, bitwise = 0.0, True
+for x, y in zip(jax.tree.leaves(runs["pod_data"][2].params),
+                jax.tree.leaves(runs["data_only"][2].params)):
+    x, y = np.asarray(x, np.float64), np.asarray(y, np.float64)
+    # grads differ at fp32 ulp (three-term association), so params land a
+    # few ulp apart after clip/sqrt — measured max ~3e-7 abs on this cell
+    np.testing.assert_allclose(x, y, rtol=5e-4, atol=1e-6)
+    if not np.array_equal(x, y):
+        bitwise = False
+        denom = np.maximum(np.abs(y), 1e-30)
+        max_rel = max(max_rel, float(np.max(np.abs(x - y) / denom)))
+out["train"] = {"loss_bitwise_equal": True, "loss": loss_pod,
+                "params_bitwise": bitwise, "params_max_rel_diff": max_rel}
+
+from repro.models import transformer
+params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+prompts = np.array([[3, 5, 7, 2, 9, 4]], dtype=np.int32)
+NEW = 6
+toks = {}
+for name, kw in (("pod_loc", dict(combine="locality")),
+                 ("pod_xla", dict(combine="xla")),
+                 ("data_loc", dict(combine="locality", seq_axes=("data",)))):
+    eng = Engine(cfg, mesh, params, batch=1, cache_len=48, **kw)
+    if name == "pod_loc":
+        assert eng.combine.algorithm == "locality", eng.combine
+        assert eng.combine.p == 6 and eng.combine.p_local == 2, eng.combine
+        assert eng.art.combine_layers == cfg.n_layers, eng.art.combine_layers
+    toks[name] = eng.generate(prompts, NEW)
+for a in ("pod_xla", "data_loc"):
+    assert np.array_equal(toks["pod_loc"], toks[a]), (a, toks)
+out["decode"] = {"tokens_exact_equal": True, "steps": NEW,
+                 "tokens": toks["pod_loc"].tolist()}
 print("JSON" + json.dumps(out))
 """
 
@@ -198,13 +351,23 @@ def main() -> list[tuple]:
     results = {}
     for key, code, devices in (("train_fsdp", TRAIN_HLO_CODE, 32),
                                ("serve_combine", SERVE_HLO_CODE, 512),
-                               ("numerics", NUMERICS_CODE, 8)):
+                               ("threepod", THREEPOD_HLO_CODE, 24),
+                               ("numerics", NUMERICS_CODE, 8),
+                               ("numerics_3pod", NUMERICS3_CODE, 6)):
         stdout = run_multidevice(code, devices=devices, timeout=3000)
         line = [l for l in stdout.splitlines() if l.startswith("JSON")][0]
         results[key] = json.loads(line[4:])
 
+    # the 3-pod subprocess emits both halves in one JSON — promote each to a
+    # top-level cell so the gate below (and the trend plots) see four cells
+    three = results.pop("threepod")
+    for key in ("train_fsdp_3pod", "serve_combine_3pod"):
+        results[key] = {"mesh": three["mesh"], "n_devices": three["n_devices"],
+                        **three[key]}
+
     rows = []
-    for key in ("train_fsdp", "serve_combine"):
+    for key in ("train_fsdp", "serve_combine",
+                "train_fsdp_3pod", "serve_combine_3pod"):
         cell = results[key]
         loc, flat = cell["locality"], cell["flat_xla"]
         red = _reduction(cell)
@@ -228,15 +391,17 @@ def main() -> list[tuple]:
             f"locality={loc['nonlocal_msgs']:.0f} "
             f"flat={flat['nonlocal_msgs']:.0f} "
             f"ratio={red['nonlocal_msgs_ratio']:.4f}"))
-    num = results["numerics"]
-    assert num["train"]["loss_bitwise_equal"], num
-    assert num["decode"]["tokens_exact_equal"], num
-    rows.append(("multipod/numerics/train", None,
-                 f"loss_bitwise=True params_bitwise="
-                 f"{num['train']['params_bitwise']} "
-                 f"params_max_rel_diff={num['train']['params_max_rel_diff']:.2e}"))
-    rows.append(("multipod/numerics/decode", None,
-                 f"tokens_exact=True steps={num['decode']['steps']}"))
+    for nkey in ("numerics", "numerics_3pod"):
+        num = results[nkey]
+        assert num["train"]["loss_bitwise_equal"], num
+        assert num["decode"]["tokens_exact_equal"], num
+        rows.append((f"multipod/{nkey}/train", None,
+                     f"loss_bitwise=True params_bitwise="
+                     f"{num['train']['params_bitwise']} "
+                     f"params_max_rel_diff="
+                     f"{num['train']['params_max_rel_diff']:.2e}"))
+        rows.append((f"multipod/{nkey}/decode", None,
+                     f"tokens_exact=True steps={num['decode']['steps']}"))
 
     write_bench_json(OUT, results, devices=512)
     return emit(rows)

@@ -26,6 +26,14 @@ Metric direction is keyed by name: ``*_us``/``us_per_step`` and the modeled
 metrics on shared CI runners are noisy, so they take
 ``max(threshold, --wall-threshold)`` (default 0.30) while deterministic
 modeled/simulated metrics use the strict threshold.
+
+``--plot DIR`` additionally renders the per-metric HISTORY the K-run fetch
+already downloads: for every tracked metric of every artifact, a
+small-multiples SVG sparkline panel (baseline runs oldest→newest plus the
+current value, dependency-free hand-rolled SVG) in ``DIR/<artifact>.svg``
+and a markdown table in ``DIR/history.md`` — appended to
+``$GITHUB_STEP_SUMMARY`` when set, so the trend is readable from the run
+page without downloading the ``bench-history`` artifact.
 """
 from __future__ import annotations
 
@@ -46,6 +54,11 @@ METRICS: dict[str, tuple[str, bool]] = {
     "exposed_comm_fraction": ("lower", False),
     "modeled_step_s": ("lower", False),
     "hidden_s_per_layer": ("higher", False),
+    # multipod HLO ground truth: locality/flat inter-pod traffic ratios —
+    # deterministic compile artifacts; a ratio drifting UP means the
+    # locality schedule is losing its DCN edge
+    "nonlocal_bytes_ratio": ("lower", False),
+    "nonlocal_msgs_ratio": ("lower", False),
 }
 
 
@@ -110,6 +123,142 @@ def compare_file(name: str, prevs: list[dict], cur: dict, threshold: float,
     return regressions
 
 
+# ---------------------------------------------------------------------------
+# --plot: per-metric history sparklines (SVG) + markdown table
+# ---------------------------------------------------------------------------
+# Single-series panels on a light surface; values from the documented
+# data-viz palette (categorical slot 1 for the series, text/grid tokens for
+# everything else — text never wears the data color).
+_SERIES = "#2a78d6"
+_SURFACE = "#fcfcfb"
+_TEXT = "#0b0b0b"
+_TEXT_2 = "#52514e"
+_GRID = "#e8e7e4"
+_PANEL_W, _PANEL_H, _COLS = 340, 130, 2
+_MAX_PANELS = 24            # per artifact; overflow is logged, never silent
+
+
+def _fmt(v: float) -> str:
+    return f"{v:,.4g}"
+
+
+def _panel(x0: float, y0: float, title: str, series: list[float],
+           labels: list[str]) -> str:
+    """One metric's sparkline panel at (x0, y0): hairline grid, 2px line,
+    surface-ringed markers, direct labels on the endpoints only (the
+    markdown table carries every value), <title> tooltips per point.
+    ``labels`` names each point's run (a baseline run that lacks this
+    metric contributes no point, so attribution comes from the caller)."""
+    pad_l, pad_r, pad_t, pad_b = 12, 64, 26, 12
+    w = _PANEL_W - pad_l - pad_r
+    h = _PANEL_H - pad_t - pad_b
+    lo, hi = min(series), max(series)
+    span = (hi - lo) or max(abs(hi), 1e-12)
+    lo, hi = lo - 0.08 * span, hi + 0.08 * span
+    n = len(series)
+    xs = [x0 + pad_l + (w / 2 if n == 1 else i * w / (n - 1))
+          for i in range(n)]
+    ys = [y0 + pad_t + h - (v - lo) / (hi - lo) * h for v in series]
+    out = [f'<text x="{x0 + pad_l}" y="{y0 + 15}" class="t1">'
+           f'{title}</text>']
+    for frac in (0.0, 0.5, 1.0):                      # recessive grid
+        gy = y0 + pad_t + h * frac
+        out.append(f'<line x1="{x0 + pad_l}" y1="{gy:.1f}" '
+                   f'x2="{x0 + pad_l + w}" y2="{gy:.1f}" class="grid"/>')
+    if n > 1:
+        pts = " ".join(f"{x:.1f},{y:.1f}" for x, y in zip(xs, ys))
+        out.append(f'<polyline points="{pts}" class="line"/>')
+    for i, (x, y, v) in enumerate(zip(xs, ys, series)):
+        r = 4.5 if i == n - 1 else 3.0
+        out.append(f'<circle cx="{x:.1f}" cy="{y:.1f}" r="{r}" class="pt">'
+                   f'<title>{labels[i]}: {_fmt(v)}</title></circle>')
+    # direct labels: first and last only, value text in ink (never clipped —
+    # the reserved right pad is sized for them)
+    if n > 1:
+        out.append(f'<text x="{xs[0] + 6:.1f}" y="{ys[0] - 7:.1f}" '
+                   f'class="t2">{_fmt(series[0])}</text>')
+    out.append(f'<text x="{xs[-1] + 8:.1f}" y="{ys[-1] + 4:.1f}" '
+               f'class="t1">{_fmt(series[-1])}</text>')
+    return "\n".join(out)
+
+
+def render_history_svg(path: str, name: str,
+                       metrics: list[tuple[str, list[float], list[str]]],
+                       n_runs: int) -> None:
+    """Small-multiples SVG: one single-series panel per tracked metric."""
+    shown = metrics[:_MAX_PANELS]
+    if len(metrics) > len(shown):
+        print(f"{name}: plotting first {_MAX_PANELS} of {len(metrics)} "
+              f"metrics (rest in the markdown table)")
+    cols = min(_COLS, max(len(shown), 1))
+    rows = -(-max(len(shown), 1) // cols)
+    W, H = cols * _PANEL_W + 16, rows * _PANEL_H + 40
+    body = [f'<text x="12" y="22" class="hdr">{name} — last '
+            f'{n_runs} baseline run(s) + current</text>']
+    for i, (tag, series, labels) in enumerate(shown):
+        x0 = 8 + (i % cols) * _PANEL_W
+        y0 = 32 + (i // cols) * _PANEL_H
+        body.append(_panel(x0, y0, tag, series, labels))
+    svg = (
+        f'<svg xmlns="http://www.w3.org/2000/svg" width="{W}" height="{H}" '
+        f'viewBox="0 0 {W} {H}" role="img">\n'
+        f'<style>text{{font-family:system-ui,sans-serif}}'
+        f'.hdr{{font-size:13px;font-weight:600;fill:{_TEXT}}}'
+        f'.t1{{font-size:11px;font-weight:600;fill:{_TEXT}}}'
+        f'.t2{{font-size:10px;fill:{_TEXT_2}}}'
+        f'.grid{{stroke:{_GRID};stroke-width:1}}'
+        f'.line{{fill:none;stroke:{_SERIES};stroke-width:2;'
+        f'stroke-linejoin:round;stroke-linecap:round}}'
+        f'.pt{{fill:{_SERIES};stroke:{_SURFACE};stroke-width:2}}</style>\n'
+        f'<rect width="{W}" height="{H}" fill="{_SURFACE}"/>\n'
+        + "\n".join(body) + "\n</svg>\n")
+    with open(path, "w") as f:
+        f.write(svg)
+
+
+def write_history(plot_dir: str, name: str, prevs_old_first: list[dict],
+                  cur: dict) -> list[str]:
+    """Render one artifact's history (SVG + markdown rows). ``prevs``
+    oldest-first and already meta-matched; the current run is the last
+    point of every series. A baseline run missing a metric (e.g. the
+    metric was added between nightlies) contributes no point, and the
+    surviving points keep their true run attribution."""
+    n_runs = len(prevs_old_first)
+    prev_series: dict[tuple, list[tuple[int, float]]] = {}
+    for i, p in enumerate(prevs_old_first):
+        for path, v in _walk(p):
+            prev_series.setdefault(path, []).append((i, v))
+    metrics: list[tuple[str, list[float], list[str]]] = []
+    md: list[str] = []
+    for path, cur_v in sorted(_walk(cur)):
+        spec = METRICS.get(path[-1])
+        if spec is None:
+            continue
+        pts = prev_series.get(path, [])
+        series = [v for _, v in pts] + [cur_v]
+        labels = [f"baseline {i + 1}/{n_runs}" for i, _ in pts] + ["current"]
+        tag = ".".join(path)
+        metrics.append((tag, series, labels))
+        base = series[:-1]
+        med = statistics.median(base) if base else None
+        delta = ("" if not med else
+                 f"{(cur_v - med) / med * 100:+.1f}%")
+        hist = " → ".join(_fmt(v) for v in base) or "—"
+        md.append(f"| `{tag}` | {spec[0]} | {hist} | "
+                  f"{_fmt(med) if med is not None else '—'} | "
+                  f"**{_fmt(cur_v)}** | {delta} |")
+    if not metrics:
+        return []
+    stem = os.path.splitext(name)[0]
+    render_history_svg(os.path.join(plot_dir, f"{stem}.svg"), name, metrics,
+                       n_runs)
+    header = [f"### {name}", "",
+              "| metric | better | history (oldest → newest) | median | "
+              "current | Δ vs median |",
+              "|---|---|---|---|---|---|"]
+    return header + md + [""]
+
+
 def baseline_dirs(prev_root: str, pattern: str, k: int) -> list[str]:
     """Baseline run directories under ``prev_root``, newest run first,
     capped at K: the root itself when it directly holds artifacts
@@ -149,27 +298,37 @@ def main(argv=None) -> int:
     ap.add_argument("--k", type=int, default=5,
                     help="max previous runs forming the median baseline")
     ap.add_argument("--pattern", default="BENCH_*.json")
+    ap.add_argument("--plot", metavar="DIR", default=None,
+                    help="render per-metric history (SVG + markdown) into "
+                         "DIR; appended to $GITHUB_STEP_SUMMARY when set")
     args = ap.parse_args(argv)
 
-    if not os.path.isdir(args.prev):
-        print(f"no previous artifacts at {args.prev!r} — first run, "
-              "nothing to diff")
-        return 0
     cur_files = sorted(glob.glob(os.path.join(args.cur, args.pattern)))
     if not cur_files:
         print(f"FAIL: no {args.pattern} in {args.cur!r} — the bench step "
               "produced nothing to track")
         return 1
-    run_dirs = baseline_dirs(args.prev, args.pattern, args.k)
-    if not run_dirs:
+    run_dirs = (baseline_dirs(args.prev, args.pattern, args.k)
+                if os.path.isdir(args.prev) else [])
+    if run_dirs:
+        print(f"baseline: {len(run_dirs)} run(s): "
+              + ", ".join(os.path.relpath(d, args.prev) or "."
+                          for d in run_dirs))
+    else:
         print(f"no previous artifacts under {args.prev!r} — first run, "
               "nothing to diff")
-        return 0
-    print(f"baseline: {len(run_dirs)} run(s): "
-          + ", ".join(os.path.relpath(d, args.prev) or "." for d in run_dirs))
+    if args.plot:
+        os.makedirs(args.plot, exist_ok=True)
     regressions: list[str] = []
+    plot_md: list[str] = []
     for cur_path in cur_files:
         name = os.path.basename(cur_path)
+        try:
+            with open(cur_path) as f:
+                cur = json.load(f)
+        except (OSError, ValueError) as e:
+            print(f"{name}: SKIP — unreadable ({e})")
+            continue
         prevs = []
         for d in run_dirs:
             prev_path = os.path.join(d, name)
@@ -181,17 +340,26 @@ def main(argv=None) -> int:
             except (OSError, ValueError) as e:
                 print(f"{name}: skipping unreadable baseline "
                       f"{prev_path!r} ({e})")
+        if args.plot:
+            matched_old_first = [p for p in prevs
+                                 if p.get("meta") == cur.get("meta")][::-1]
+            plot_md += write_history(args.plot, name, matched_old_first, cur)
         if not prevs:
             print(f"{name}: SKIP — no previous artifact (new benchmark)")
             continue
-        try:
-            with open(cur_path) as f:
-                cur = json.load(f)
-        except (OSError, ValueError) as e:
-            print(f"{name}: SKIP — unreadable ({e})")
-            continue
         regressions += compare_file(name, prevs, cur, args.threshold,
                                     args.wall_threshold)
+    if args.plot and plot_md:
+        doc = "\n".join(["## Benchmark history (median-of-K gate inputs)", ""]
+                        + plot_md)
+        with open(os.path.join(args.plot, "history.md"), "w") as f:
+            f.write(doc + "\n")
+        summary = os.environ.get("GITHUB_STEP_SUMMARY")
+        if summary:
+            with open(summary, "a") as f:
+                f.write(doc + "\n")
+        print(f"history: {len(plot_md)} markdown row(s) + SVG panels "
+              f"in {args.plot!r}")
     for r in regressions:
         print("REGRESSION:", r, file=sys.stderr)
     return 1 if regressions else 0

@@ -167,22 +167,29 @@ def hierarchical_allgather(x: jax.Array, outer: Axes, local: Axes, *,
 
     with jax.named_scope(f"hier_ag_r{r}_pl{pl}"):
         # --- Phase 1: binomial gather to lane-0 master --------------------------
-        # B[k] = block of lane k of own region (zeros where unknown).
+        # B[k] = block of lane k of own region (zeros where unknown). Slots
+        # are padded to the next power of two so a sender's subtree slice
+        # [l, l+d) and a receiver's write at l+d are always in bounds — the
+        # min() clamps never bind (for a non-power p_ℓ the old pl-sized
+        # buffer made the clamp grab the wrong subtree and the final
+        # partial sender overwrite slots it didn't own).
+        pl2 = 1 << (pl - 1).bit_length()
         B = lax.dynamic_update_slice(
-            zeros((pl,) + x.shape), x[None], (l,) + (0,) * x.ndim)
+            zeros((pl2,) + x.shape), x[None], (l,) + (0,) * x.ndim)
         d = 1
         while d < pl:
             # lanes with l % 2d == d send their subtree slots [l, l+d) to lane l-d
             pairs = [(flat(Rg, lg), flat(Rg, lg - d))
                      for Rg in range(r) for lg in range(d, pl, 2 * d)]
             payload = lax.dynamic_slice(
-                B, (jnp.minimum(l, pl - d),) + (0,) * x.ndim, (d,) + x.shape)
+                B, (jnp.minimum(l, pl2 - d),) + (0,) * x.ndim, (d,) + x.shape)
             recv = lax.ppermute(payload, outer + local, pairs)
             is_recv = (l % (2 * d) == 0) & (l + d < pl)
             upd = lax.dynamic_update_slice(
-                B, recv, (jnp.minimum(l + d, pl - d),) + (0,) * x.ndim)
+                B, recv, (jnp.minimum(l + d, pl2 - d),) + (0,) * x.ndim)
             B = jnp.where(is_recv, upd, B)
             d *= 2
+        B = B[:pl]                      # drop the power-of-two padding
 
         # --- Phase 2: Bruck allgather among masters (lane 0) over regions -------
         buf = B[None]                       # [chunks, pl, ...]; chunk k = region R+k
@@ -230,23 +237,81 @@ def multilane_allgather(x: jax.Array, outer: Axes, local: Axes, *,
 # =============================================================================
 # Algorithm 2 — locality-aware Bruck allgather (the paper's contribution).
 # =============================================================================
+def _nonlocal_round_geometry(r: int, pl: int, group: int
+                             ) -> tuple[int, int, int]:
+    """Static geometry of one Algorithm-2 non-local round.
+
+    With ``group`` region chunks held per rank, returns ``(active, span,
+    rem)``: the lanes that exchange this round (offsets 0..active-1 name
+    distinct peer regions), the chunks held after the round (``span =
+    min(active·group, r)``), and the chunk count the LAST active lane's peer
+    is actually missing (``rem ∈ (0, group]``; ``rem < group`` only on the
+    wrapped final round of a non-power region count — the allgatherv case).
+    """
+    n_groups = -(-r // group)                 # distinct groups remaining
+    active = min(pl, n_groups)
+    span = min(active * group, r)
+    rem = span - (active - 1) * group
+    return active, span, rem
+
+
+def _nonlocal_exchange(buf: jax.Array, axes: tuple[str, ...], r: int, pl: int,
+                       group: int, active: int, rem: int, l: jax.Array,
+                       step: int) -> jax.Array:
+    """One Algorithm-2 non-local round, allgatherv-adapted (paper §3).
+
+    Lane ℓ ∈ [1, active) sends to region R - ℓ·group (same lane) and
+    receives from R + ℓ·group. Lanes 1..active-2 need their peer's full
+    ``group``-chunk buffer; the last active lane's peer is missing only
+    ``rem`` chunks, so on a wrapped final round (``rem < group``) that lane
+    sends exactly the ``rem``-chunk prefix — the partial final-round payload
+    that replaces the paper's MPI_Allgatherv for non-power region counts
+    (previously the full buffer went over the DCN and the duplicate chunks
+    were discarded after the fact). The partial receive is zero-padded back
+    to ``group`` chunks so the local redistribution stays one uniform Bruck
+    allgather; the caller's ``span`` trim drops the padding statically.
+    Message count is unchanged: the two ppermutes carry disjoint edge sets,
+    one send per active lane per round.
+    """
+    flat = lambda Rg, lg: Rg * pl + lg
+    last = active - 1
+    full_pairs = [(flat(Rg, lg), flat((Rg - lg * group) % r, lg))
+                  for Rg in range(r) for lg in range(1, last)]
+    last_pairs = [(flat(Rg, last), flat((Rg - last * group) % r, last))
+                  for Rg in range(r)]
+    with jax.named_scope(f"nonlocal_step{step}"):
+        if rem == group:                      # uniform round: one ppermute
+            return lax.ppermute(buf, axes, full_pairs + last_pairs)
+        part = lax.ppermute(buf[: rem * pl], axes, last_pairs)
+        pad = [(0, (group - rem) * pl)] + [(0, 0)] * (buf.ndim - 1)
+        part = jnp.pad(part, pad)
+        if not full_pairs:                    # active == 2: only the partial
+            return part
+        recv = lax.ppermute(buf, axes, full_pairs)
+        return jnp.where(l == last, part, recv)
+
+
 def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
                              tiled: bool = False,
                              assume_varying: bool = False) -> jax.Array:
-    """Paper Algorithm 2 over mesh axes.
+    """Paper Algorithm 2 over mesh axes — ANY outer region count.
 
     1. Local Bruck allgather inside each region (``local`` axes).
     2. ceil(log_{p_ℓ}(r)) non-local rounds: with ``group`` regions' data held,
-       lane ℓ ∈ [1, active) sends its ENTIRE buffer to region R - ℓ·group
-       (same lane) and receives from R + ℓ·group — one non-local message per
-       rank per round, each pair of regions exchanging disjoint data. Lane 0
+       lane ℓ ∈ [1, active) sends its buffer to region R - ℓ·group (same
+       lane) and receives from R + ℓ·group — one non-local message per rank
+       per round, each pair of regions exchanging disjoint data. Lane 0
        stays idle (paper §3) and re-contributes its own buffer.
     3. A local allgather of the received buffers redistributes them in-region.
 
-    SPMD adaptation (recorded in DESIGN.md): where the paper uses
-    MPI_Allgatherv for non-power region counts, we run the uniform local
-    allgather and statically discard the `pl - active` empty units — identical
-    non-local traffic, slightly padded local traffic.
+    Allgatherv adaptation (DESIGN.md §7): where the paper uses
+    MPI_Allgatherv for non-power region counts, the wrapped final round
+    sends only the partial payload its peer is missing
+    (:func:`_nonlocal_exchange`), the uniform local allgather runs on
+    zero-padded units, and the ``pl - active`` empty units plus the padding
+    are discarded statically — strictly fewer non-local bytes than the
+    full-buffer exchange, identical message count, slightly padded local
+    traffic.
 
     assume_varying: as for :func:`bruck_allgather` — required when this
     gather is differentiated inside a ``check_vma=False`` region (the
@@ -261,7 +326,6 @@ def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
                                assume_varying=True)
     R = lax.axis_index(outer)
     l = lax.axis_index(local)
-    flat = lambda Rg, lg: Rg * pl + lg
 
     with jax.named_scope(f"loc_bruck_ag_r{r}_pl{pl}"):
         # Step 0 (Alg. 2 line 1): local allgather of initial values.
@@ -270,12 +334,9 @@ def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
         group = 1
         step = 0
         while group < r:
-            n_groups = -(-r // group)         # distinct groups remaining
-            active = min(pl, n_groups)
-            pairs = [(flat(Rg, lg), flat((Rg - lg * group) % r, lg))
-                     for Rg in range(r) for lg in range(1, active)]
-            with jax.named_scope(f"nonlocal_step{step}"):
-                recv = lax.ppermute(buf, outer + local, pairs)
+            active, span, rem = _nonlocal_round_geometry(r, pl, group)
+            recv = _nonlocal_exchange(buf, outer + local, r, pl, group,
+                                      active, rem, l, step)
             # Lane 0 re-contributes its current buffer; lanes >= active carry
             # no new data (their unit is discarded below).
             unit = jnp.where(l == 0, buf, recv)
@@ -284,11 +345,10 @@ def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
                                           assume_varying=True)
             stacked = stacked[:active]
             buf = stacked.reshape((active * group * pl,) + x.shape)
-            group *= active
+            buf = buf[: span * pl]             # drop final-round padding
+            group = span
             step += 1
 
-        if group > r:                          # non-power wrap: drop duplicates
-            buf = buf[: r * pl]
         chunks = buf.reshape((r, pl) + x.shape)
         chunks = jnp.roll(chunks, R, axis=0)   # canonical region order
         buf = chunks.reshape((r * pl,) + x.shape)
@@ -372,6 +432,11 @@ class _SplitMeta:
     x_shape: tuple[int, ...] = ()
     group: int = 1                 # locality_bruck: chunks held pre-finish
     active: int = 1                # locality_bruck: lanes live in last round
+    rem: int = 0                   # chunks the last active lane really
+                                   # carried in the final round — always
+                                   # set on "pending" metas (rem < group on
+                                   # the allgatherv wrapped round); unused
+                                   # by the other kinds
 
 
 @jax.tree_util.register_pytree_node_class
@@ -403,7 +468,12 @@ def locality_bruck_allgather_start(x: jax.Array, outer: Axes, local: Axes, *,
     Intermediate rounds keep their local redistribution (the next non-local
     round consumes it), so only the final local allgather + canonical
     reordering — pure ICI traffic — is deferred to ``finish``. All DCN bytes
-    are on the wire when start returns.
+    are on the wire when start returns. On a wrapped final round (non-power
+    region counts) the partial payload is already zero-padded back to
+    ``group`` chunks here, so the PendingCollective's arrays stay the
+    uniform ``(buf, recv)`` pair and the meta's ``(group, active, rem)``
+    record the uneven geometry — the prefetch pipeline and the FSDP
+    transpose carry it without caring about the region count.
     """
     outer, local = _tup(outer), _tup(local)
     r, pl = _size(outer), _size(local)
@@ -414,7 +484,6 @@ def locality_bruck_allgather_start(x: jax.Array, outer: Axes, local: Axes, *,
                                assume_varying=True)
         return PendingCollective((full,), _SplitMeta("allgather", "done"))
     l = lax.axis_index(local)
-    flat = lambda Rg, lg: Rg * pl + lg
 
     with jax.named_scope(f"loc_bruck_ag_start_r{r}_pl{pl}"):
         buf = bruck_allgather(x, local, assume_varying=True)
@@ -425,23 +494,21 @@ def locality_bruck_allgather_start(x: jax.Array, outer: Axes, local: Axes, *,
         group = 1
         step = 0
         while True:
-            n_groups = -(-r // group)
-            active = min(pl, n_groups)
-            pairs = [(flat(Rg, lg), flat((Rg - lg * group) % r, lg))
-                     for Rg in range(r) for lg in range(1, active)]
-            with jax.named_scope(f"nonlocal_step{step}"):
-                recv = lax.ppermute(buf, outer + local, pairs)
-            if group * active >= r:        # last round: defer redistribution
+            active, span, rem = _nonlocal_round_geometry(r, pl, group)
+            recv = _nonlocal_exchange(buf, outer + local, r, pl, group,
+                                      active, rem, l, step)
+            if span >= r:                  # last round: defer redistribution
                 return PendingCollective(
                     (buf, recv), _SplitMeta("allgather", "pending", outer,
                                             local, tiled, x.shape,
-                                            group=group, active=active))
+                                            group=group, active=active,
+                                            rem=rem))
             unit = jnp.where(l == 0, buf, recv)
             with jax.named_scope(f"redistribute_step{step}"):
                 stacked = bruck_allgather(unit, local, assume_varying=True)
             stacked = stacked[:active]
             buf = stacked.reshape((active * group * pl,) + x.shape)
-            group *= active
+            group = span
             step += 1
 
 
@@ -456,7 +523,6 @@ def locality_bruck_allgather_finish(pending: PendingCollective) -> jax.Array:
     with jax.named_scope(f"loc_bruck_ag_finish_r{r}_pl{pl}"):
         if meta.kind == "local_done":
             (buf,) = pending.arrays
-            group = meta.group
         else:
             buf, recv = pending.arrays
             l = lax.axis_index(local)
@@ -465,9 +531,12 @@ def locality_bruck_allgather_finish(pending: PendingCollective) -> jax.Array:
                 stacked = bruck_allgather(unit, local, assume_varying=True)
             stacked = stacked[:meta.active]
             buf = stacked.reshape((meta.active * meta.group * pl,) + x_shape)
-            group = meta.group * meta.active
-        if group > r:                      # non-power wrap: drop duplicates
-            buf = buf[: r * pl]
+            # the uneven geometry recorded at start: the last lane carried
+            # only `rem` real chunks — drop its zero padding (and with it
+            # any wrap past region r)
+            valid = (meta.active - 1) * meta.group + meta.rem
+            assert valid == r, (meta, r)
+            buf = buf[: valid * pl]
         chunks = buf.reshape((r, pl) + x_shape)
         if outer:                          # canonical region order
             chunks = jnp.roll(chunks, lax.axis_index(outer), axis=0)
@@ -583,17 +652,46 @@ def _rhd_reduce_scatter(x: jax.Array, axes: tuple[str, ...],
 
 def _rd_allreduce(x: jax.Array, axes: tuple[str, ...],
                   op: str = "sum") -> jax.Array:
-    """Recursive-doubling allreduce: log2(p) full-buffer exchanges (latency-opt)."""
+    """Recursive-doubling allreduce over ``axes`` — ANY axis size.
+
+    Powers of two run the classic log2(p) XOR-partner full-buffer exchange
+    (latency-optimal). Other sizes take the standard fold/unfold adaptation
+    (Rabenseifner; the allreduce generalization of the padded-Bruck /
+    allgatherv machinery in Jocksch et al.): the p - m surplus ranks
+    (m = largest power of two <= p) first fold their value into a core
+    partner, the power-of-two core runs recursive doubling, and one unfold
+    round sends the result back — log2(m) + 2 full-buffer messages, still
+    logarithmic. ppermute delivers zeros to ranks outside a round's pair
+    set, so every fold/core combine is masked to the ranks that really
+    received (an unmasked ``max`` with an implicit zero would corrupt
+    negative operands).
+    """
     combine = _binop(op)
     p = _size(axes)
-    assert p & (p - 1) == 0, "recursive doubling needs power-of-two size"
+    if p == 1:
+        return x
     buf = x
+    m = 1 << (p.bit_length() - 1)      # largest power of two <= p
+    surplus = p - m
+    idx = lax.axis_index(axes) if surplus else None
+    if surplus:
+        pairs = [(s, s - m) for s in range(m, p)]
+        recv = lax.ppermute(buf, axes, pairs)
+        buf = jnp.where(idx < surplus, combine(buf, recv), buf)
     d = 1
-    while d < p:
-        pairs = [(s, s ^ d) for s in range(p)]
-        buf = combine(buf, lax.ppermute(buf, axes, pairs))
+    while d < m:
+        pairs = [(s, s ^ d) for s in range(m)]
+        recv = lax.ppermute(buf, axes, pairs)
+        nxt = combine(buf, recv)
+        buf = nxt if not surplus else jnp.where(idx < m, nxt, buf)
         d *= 2
+    if surplus:
+        pairs = [(s, s + m) for s in range(surplus)]
+        recv = lax.ppermute(buf, axes, pairs)
+        buf = jnp.where(idx >= m, recv, buf)
     return buf
+
+
 
 
 def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
@@ -602,16 +700,24 @@ def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
     """Locality-aware allreduce (paper's structure applied to reductions).
 
     local reduce-scatter → per-lane allreduce across regions → local
-    allgather (Bruck). Non-local traffic per rank: 2·log2(r) messages of
-    b/p_ℓ bytes ("rhd"), or log2(r) messages ("rd", latency-optimal), or
-    XLA's choice ("psum") — vs ~2·b bytes for a flat ring allreduce.
+    allgather (Bruck). Non-local traffic per rank: 2·ceil(log2 r) messages
+    of b/p_ℓ bytes ("rhd"), or ~log2(r) messages ("rd", latency-optimal),
+    or XLA's choice ("psum", explicit opt-in only) — vs ~2·b bytes for a
+    flat ring allreduce.
+
+    Every structure runs on ARBITRARY region counts (no silent psum
+    fallback): "rhd" on a non-power r swaps the recursive-halving
+    reduce-scatter for the Bruck-transpose reduce-scatter
+    (:func:`reduce_scatter` with ``algorithm="bruck"`` — the allgatherv
+    adaptation's reversed schedule, same ceil(log2 r) rounds and partial
+    payloads), and "rd" uses the fold/unfold generalization of
+    :func:`_rd_allreduce` (log2(m) + 2 rounds).
 
     ``op`` selects the reduction ("sum"/"max"/"min"). Non-sum reductions
     skip the scatter structure (there is no pmax_scatter, and their use
     case — running softmax maxima — is latency-bound): local
-    recursive-doubling then per-lane outer recursive-doubling, log2(p_ℓ)
-    local + log2(r) non-local full-buffer messages. Non-power-of-two axis
-    sizes fall back to the XLA primitive on that axis set.
+    recursive-doubling then per-lane outer recursive-doubling, any axis
+    size via the same fold/unfold rounds.
 
     Works on arbitrary-shaped ``x`` (flattens + pads internally).
     """
@@ -622,11 +728,9 @@ def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
         _binop(op)                           # validate
         with jax.named_scope(f"loc_allreduce_{op}_r{r}_pl{pl}"):
             if pl > 1:
-                x = (_rd_allreduce(x, local, op=op) if pl & (pl - 1) == 0
-                     else _XLA_REDUCERS[op](x, local))
+                x = _rd_allreduce(x, local, op=op)
             if r > 1:
-                x = (_rd_allreduce(x, outer, op=op) if r & (r - 1) == 0
-                     else _XLA_REDUCERS[op](x, outer))
+                x = _rd_allreduce(x, outer, op=op)
         return x
     shape = x.shape
     flat = x.reshape(-1)
@@ -641,17 +745,19 @@ def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
         else:
             part = flat
         if r > 1:
-            if outer_algorithm in ("rhd", "rd") and r & (r - 1):
-                # recursive halving/doubling need a power-of-two region
-                # count; odd pod counts fall back to the XLA primitive on
-                # the outer axis (still per-lane: 1/p_ℓ of the bytes).
-                outer_algorithm = "psum"
             if outer_algorithm == "rhd":
                 npart = part.shape[0]
                 pad2 = (-npart) % r
                 if pad2:
                     part = jnp.pad(part, (0, pad2))
-                rs = _rhd_reduce_scatter(part, outer)
+                if r & (r - 1):
+                    # non-power region count: the Bruck-TRANSPOSE RS (the
+                    # allgatherv adaptation's reversed schedule — same
+                    # ceil(log2 r) rounds and partial payloads as the
+                    # forward gather)
+                    rs = reduce_scatter(part, outer, algorithm="bruck")
+                else:
+                    rs = _rhd_reduce_scatter(part, outer)
                 part = bruck_allgather(rs, outer, tiled=True)
                 if pad2:
                     part = part[:npart]

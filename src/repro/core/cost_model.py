@@ -13,7 +13,7 @@ from __future__ import annotations
 import dataclasses
 import math
 
-from .topology import RegionMap, ceil_log
+from .topology import RegionMap, ceil_log, rd_rounds
 
 
 @dataclasses.dataclass(frozen=True)
@@ -169,8 +169,10 @@ def locality_bruck_model(p: int, p_local: int, block_bytes: float,
 
     # Simulate the (group, active) round sequence exactly — for r a power of
     # p_ℓ this reduces to the paper's closed form (non-local bytes ≈ b/p_ℓ,
-    # local bytes = b − 1); for other region counts the final round has only
-    # ``active`` distinct peer groups, which the closed form over-counts.
+    # local bytes = b − 1). For other region counts the allgatherv
+    # adaptation applies: the worst rank (lane 1) sends min(group, r−group)
+    # chunks per round — the wrapped final round carries only the partial
+    # payload its peer is missing, not the entire buffer.
     n_nl = 0
     s_nl = 0.0
     s_l = block_bytes * (p_local - 1)            # initial local allgather
@@ -180,11 +182,12 @@ def locality_bruck_model(p: int, p_local: int, block_bytes: float,
         n_groups = -(-r // group)
         active = min(p_local, n_groups)
         n_nl += 1
-        s_nl += block_bytes * group * p_local            # entire buffer
+        s_nl += block_bytes * min(group, r - group) * p_local
         # redistribution: (active-1) new chunks of group·p_ℓ blocks each
+        # (partial units are zero-padded back to group chunks — DESIGN.md §7)
         s_l += block_bytes * (active - 1) * group * p_local
         n_l += ceil_log(2, p_local)
-        group *= active
+        group = min(group * active, r)
 
     return m.cost(n_local=n_l, s_local=s_l, n_nonlocal=n_nl, s_nonlocal=s_nl)
 
@@ -237,9 +240,10 @@ def max_allreduce_model(p: int, p_local: int, nbytes: float, m: MachineParams,
     """Recursive-doubling max-allreduce (the first phase of the serve decode
     logsumexp combine — no scatter structure exists for non-sum ops).
 
-    structure="locality": log2(p_ℓ) local rounds then log2(r) non-local
-    rounds, each moving the full (tiny) buffer — matches
-    ``collectives.locality_allreduce(op="max")``.
+    structure="locality": rd_rounds(p_ℓ) local rounds then rd_rounds(r)
+    non-local rounds, each moving the full (tiny) buffer — matches
+    ``collectives.locality_allreduce(op="max")`` including the fold/unfold
+    rounds a non-power tier size adds (log2(m) + 2 instead of log2(n)).
     structure="flat": log2(p) rounds over the flat rank; partners at
     distance ≥ p_ℓ cross the region boundary, so only the first
     log2(p_ℓ) rounds stay local.
@@ -249,7 +253,7 @@ def max_allreduce_model(p: int, p_local: int, nbytes: float, m: MachineParams,
     if p <= 1:
         return 0.0
     if structure == "locality":
-        n_l, n_nl = ceil_log(2, p_local), ceil_log(2, r)
+        n_l, n_nl = rd_rounds(p_local), rd_rounds(r)
     elif structure == "flat":
         n = ceil_log(2, p)
         n_l = min(ceil_log(2, p_local), n)
@@ -303,7 +307,9 @@ def locality_bruck_phase_split(p: int, p_local: int, block_bytes: float,
         n_groups = -(-r // group)
         active = min(pl, n_groups)
         n_nl += 1
-        s_nl += b * group * pl
+        # allgatherv adaptation: the worst lane sends min(group, r−group)
+        # chunks (partial on the wrapped final round of non-power counts)
+        s_nl += b * min(group, r - group) * pl
         redist_n = ceil_log(2, pl)
         redist_s = b * (active - 1) * group * pl
         if group * active >= r:            # last round: redistribute in finish
@@ -311,7 +317,7 @@ def locality_bruck_phase_split(p: int, p_local: int, block_bytes: float,
         else:
             n_sl += redist_n
             s_sl += redist_s
-        group *= active
+        group = min(group * active, r)
 
     t_sl = m.cost(n_local=n_sl, s_local=s_sl, n_nonlocal=0, s_nonlocal=0.0)
     t_nl = m.cost(n_local=0, s_local=0.0, n_nonlocal=n_nl, s_nonlocal=s_nl)

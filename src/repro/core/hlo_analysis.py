@@ -118,7 +118,14 @@ def _replica_groups(line: str, device_pod: dict[int, int]
     """Parse an op line's replica groups (explicit braces or iota form).
 
     Returns None when the line carries no replica_groups attribute; an
-    empty/``{}`` attribute means "one group of every device"."""
+    empty/``{}`` attribute means "one group of every device". Explicit
+    brace groups may be UNEVEN (different sizes per group — what GSPMD
+    emits when a non-power pod count shards a dim its size doesn't divide
+    evenly); each group is classified with its own length. An iota list
+    whose dims cover only a prefix of the device grid (prod(dims) <
+    prod(bounds): a subgroup collective on a subset of the mesh) takes the
+    prefix of the transposed enumeration instead of failing the reshape.
+    """
     m = _GROUPS_IOTA_RE.search(line)
     if m:
         dims = [int(x) for x in m.group(1).split(",")]
@@ -126,7 +133,8 @@ def _replica_groups(line: str, device_pod: dict[int, int]
         perm = ([int(x) for x in m.group(3).split(",")]
                 if m.group(3) else list(range(len(bounds))))
         flat = np.arange(math.prod(bounds)).reshape(bounds)
-        return flat.transpose(perm).reshape(dims).tolist()
+        flat = flat.transpose(perm).reshape(-1)
+        return flat[: math.prod(dims)].reshape(dims).tolist()
     m = _GROUPS_RE.search(line)
     if m is None:
         return None

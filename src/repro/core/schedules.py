@@ -285,16 +285,28 @@ def _local_unit_bruck(bufs, region: RegionMap, units: dict[int, tuple[int, ...]]
 
 
 def locality_bruck(p: int, p_local: int) -> Schedule:
-    """Paper Algorithm 2, generalized to any region count.
+    """Paper Algorithm 2, generalized to any region count (allgatherv form).
 
     Round i (regions covered so far: ``group``): local rank ℓ exchanges its
-    entire buffer with the region ℓ·group away (global distance ℓ·group·p_ℓ,
+    buffer with the region ℓ·group away (global distance ℓ·group·p_ℓ,
     matching Alg. 2's dist = id_ℓ · p_ℓ^{i+1} when r is a power of p_ℓ).
     Local rank 0 is idle non-locally (paper §3). A local allgather then
     redistributes the received group buffers inside each region.
+
+    Allgatherv adaptation: lane ℓ sends only the ``min(group, r - ℓ·group)``
+    region chunks its peer is actually missing — on the wrapped final round
+    of a non-power region count this is a PARTIAL payload (the paper's
+    MPI_Allgatherv case), so non-local blocks stay below the full-buffer
+    exchange for every region count, not just powers of p_ℓ. Matches the
+    executable ``core/collectives.locality_bruck_allgather``.
     """
     region = RegionMap(p=p, p_local=p_local)
     pl, r = p_local, region.n_regions
+    if pl == 1:
+        # single-rank regions: no lanes to spread over — degenerate to the
+        # standard Bruck (matches collectives.locality_bruck_allgather)
+        sched = bruck(p, region)
+        return dataclasses.replace(sched, algorithm="locality_bruck")
     bufs = [[rank] for rank in range(p)]
     rounds: list[Round] = []
 
@@ -308,16 +320,21 @@ def locality_bruck(p: int, p_local: int) -> Schedule:
         n_groups = -(-r // group)                  # ceil: groups still distinct
         active = min(pl, n_groups)                 # offsets 0..active-1 exist
         # Non-local exchange: one message per rank with local id 1..active-1.
-        # Each sends its ENTIRE buffer (Alg. 2: size = n * p_ℓ^{i+1}).
+        # Lane ℓ holds chunks [R, R+group) and its peer (region R - ℓ·group)
+        # is missing only the first min(group, r - ℓ·group) of them.
         sends = []
         received: dict[int, tuple[int, ...]] = {}
         for rank in range(p):
             R, l = region.region_of(rank), region.local_rank_of(rank)
             if l == 0 or l >= active:
                 continue  # idle (paper: first process per region idle)
+            need = min(group, r - l * group)
             dst = region.rank_of((R - l * group) % r, l)
-            sends.append(Send(src=rank, dst=dst, blocks=tuple(bufs[rank])))
-            received[dst] = tuple(bufs[rank])
+            blocks = tuple(region.rank_of(R + j, lr)
+                           for j in range(need) for lr in range(pl))
+            assert set(blocks) <= set(bufs[rank]), (rank, i, need)
+            sends.append(Send(src=rank, dst=dst, blocks=blocks))
+            received[dst] = blocks
         _exchange(bufs, sends)
         rounds.append(Round(sends=tuple(sends), phase=f"loc-nonlocal-step{i}"))
         # Local redistribution: contributors' units are the chunks just
@@ -331,7 +348,7 @@ def locality_bruck(p: int, p_local: int) -> Schedule:
                 units[rank] = received[rank]
         _local_unit_bruck(bufs, region, units, f"loc-redist{i}", rounds,
                           contributors=active)
-        group *= active
+        group = min(group * active, r)
         i += 1
 
     bufs = [sorted(buf) for buf in bufs]

@@ -52,6 +52,17 @@ def ceil_log(base: int, x: int) -> int:
     return steps
 
 
+def rd_rounds(n: int) -> int:
+    """Message rounds of the non-power-capable recursive-doubling allreduce
+    (``collectives._rd_allreduce``): log2(n) for powers of two, otherwise
+    log2(m) + 2 for the fold/unfold adaptation (m = largest power of two
+    below n: one fold round, the power-of-two core, one unfold round)."""
+    if n <= 1:
+        return 0
+    lg = ceil_log(2, n)
+    return lg if n & (n - 1) == 0 else (lg - 1) + 2
+
+
 def is_power_of(base: int, x: int) -> bool:
     if x < 1:
         return False

@@ -1,9 +1,12 @@
 """Production mesh builders.
 
 Single pod: (16, 16) = 256 chips, axes ("data", "model").
-Multi-pod:  (2, 16, 16) = 512 chips, axes ("pod", "data", "model") — the
+Multi-pod:  (pods, 16, 16) chips, axes ("pod", "data", "model") — the
 "pod" axis crosses the DCN boundary (the paper's non-local region boundary);
-"data"/"model" stay on ICI.
+"data"/"model" stay on ICI. ``pods`` defaults to 2 and need NOT be a power
+of two: the locality collectives run Algorithm 2's allgatherv adaptation on
+any region count (DESIGN.md §7), so 3-, 5- and 6-pod fleets are first-class
+mesh shapes.
 
 Functions, not module-level constants: importing this module never touches
 jax device state (jax fixes the device count at first backend init).
@@ -13,8 +16,8 @@ from __future__ import annotations
 import jax
 
 
-def make_production_mesh(*, multi_pod: bool = False):
-    shape = (2, 16, 16) if multi_pod else (16, 16)
+def make_production_mesh(*, multi_pod: bool = False, pods: int = 2):
+    shape = (pods, 16, 16) if multi_pod else (16, 16)
     axes = ("pod", "data", "model") if multi_pod else ("data", "model")
     return jax.make_mesh(shape, axes)
 

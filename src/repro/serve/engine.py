@@ -219,9 +219,11 @@ def resolve_cache_combine(cfg, mesh, batch: int, cache_len: int,
     On a multi-pod mesh with the cache sequence-sharded over
     ``('pod','data')`` the combine spans both tiers: ``p`` is the full
     shard count and ``p_local`` the intra-pod 'data' slice, so the policy
-    prices the hierarchical (intra-pod, then one inter-pod exchange)
-    structure against GSPMD's flat combine. ``seq_axes=("data",)`` forces
-    the legacy intra-pod domain.
+    prices the hierarchical (intra-pod, then inter-pod) structure against
+    GSPMD's flat combine. The pod count q = p/p_local may be ANY integer —
+    non-power counts price (and execute) the fold/unfold max phase and the
+    Bruck-transpose sum phase of DESIGN.md §7 rather than falling back to
+    a flat psum. ``seq_axes=("data",)`` forces the legacy intra-pod domain.
     """
     if override is not None and override not in ("xla", "locality"):
         raise ValueError(f"unknown combine override {override!r}")
@@ -292,14 +294,17 @@ def _make_locality_decode_combine(cfg, mesh, seq_cand: tuple[str, ...],
          slice and IMMEDIATELY issues the combine's max-allreduce
          (``locality_logsumexp_combine_start`` — split halves of
          core/collectives). On a ``('pod','data')``-sharded cache the max
-         runs HIERARCHICALLY: intra-pod recursive doubling first, then one
-         inter-pod exchange — log2(r) tiny DCN messages instead of GSPMD's
-         flat tree over all shards;
+         runs HIERARCHICALLY: intra-pod recursive doubling first, then the
+         inter-pod exchange — rd_rounds(q) tiny DCN messages for ANY pod
+         count q (non-power counts fold/unfold, DESIGN.md §7) instead of
+         GSPMD's flat tree over all shards;
       3. accumulates the flash-style o/l partials (``stats_impl`` picks the
          jnp ops or the fused Pallas kernel of ``kernels/decode_stats``) —
          the real compute the in-flight max-allreduce hides behind;
       4. finishes the combine (rescale + packed sum-allreduce: intra-pod
-         psum-scatter, per-lane inter-pod exchange of 1/p_ℓ of the bytes,
+         psum-scatter, per-lane inter-pod exchange of 1/p_ℓ of the bytes —
+         each of the p_ℓ lanes reduce-scatters + allgathers its slice
+         across all q pods, Bruck-transpose schedule on non-power q —
          local allgather) and normalizes.
 
     Falls back (returns None → the layer keeps the GSPMD path) when the

@@ -8,8 +8,11 @@ shards over the COMPOSITE ``('pod', 'data')`` axes (pod-major, matching the
 region-major rank of ``core/topology.RegionMap``) whenever the dim is
 divisible by the full DP size — so the ZeRO-3 gather genuinely crosses the
 DCN boundary and the locality-aware Bruck schedule has non-local rounds to
-optimize; dims divisible only by the 'data' size fall back to intra-pod
-sharding (pods hold replicas, the grad sync adds a pod allreduce).
+optimize. This holds for ANY pod count q (3, 5, 6 — Algorithm 2's
+allgatherv adaptation, DESIGN.md §7): the divisibility test is against
+q·p_data, so when q ∤ dim (but p_data | dim) the leaf falls back to
+intra-pod 'data' sharding (pods hold replicas, the grad sync adds a pod
+allreduce) — per-leaf geometry, never an all-or-nothing layout switch.
 Activation hooks are the ``shard`` callbacks threaded through the model
 zoo; in paper-mode (inside the ``shard_map`` over DP axes) the DP axes are
 manual and must be dropped from every constraint —

@@ -232,9 +232,13 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
     axis on the mesh (('pod','data') on multi-pod: the ZeRO-3 gather runs
     the locality-aware Bruck with outer=('pod',), local=('data',) and its
     transpose reduce-scatters the grads over the SAME two-tier schedule,
-    so only the log_{p_ℓ}(r) non-local rounds cross the DCN); ("data",)
-    forces the legacy intra-pod layout (pods replicate params and the
-    grad sync adds a pod allreduce per bucket).
+    so only the ceil(log_{p_ℓ}(r)) non-local rounds cross the DCN — for
+    ANY pod count r, power of two or not: non-power counts take
+    Algorithm 2's allgatherv adaptation with partial final-round payloads
+    and the grad sync's outer tier runs the Bruck-transpose
+    reduce-scatter instead of silently degrading to psum, DESIGN.md §7);
+    ("data",) forces the legacy intra-pod layout (pods replicate params
+    and the grad sync adds a pod allreduce per bucket).
 
     prefetch_depth: lookahead of the double-buffered FSDP gather pipeline
     (DESIGN.md §5): 0 = eager (whole stacked gather in front of the

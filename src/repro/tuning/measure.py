@@ -107,8 +107,11 @@ def simulate_allreduce(algorithm: str, p: int, p_local: int,
 
     "xla": flat ring reduce-scatter + ring allgather — 2(p-1) neighbor
     messages of nbytes/p, of which 2·r cross a region boundary.
-    "locality": core/collectives.locality_allreduce — local ring RS,
-    recursive-halving allreduce across regions per lane, local Bruck AG.
+    "locality": core/collectives.locality_allreduce — local ring RS, per
+    lane across regions a recursive-halving RS + Bruck AG (power-of-two
+    region counts) or the Bruck-transpose RS + Bruck AG of the allgatherv
+    adaptation (any other count) — both 2·ceil(log2 r) non-local messages
+    moving 2·(r-1)/r of the per-lane shard, so one formula prices both.
     """
     if isinstance(machine, str):
         machine = cost_model.MACHINES[machine]

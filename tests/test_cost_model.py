@@ -41,6 +41,66 @@ def test_schedule_cost_matches_closed_form_order():
     assert costs["locality_bruck"] < costs["bruck"]
 
 
+def test_locality_model_matches_oracle_nonpower():
+    """The postal model's per-round non-local accounting must equal the
+    oracle schedule's worst-rank blocks for non-power region counts — the
+    allgatherv partial payload is priced, not the old full buffer."""
+    for q, pl in ((3, 2), (5, 2), (6, 2), (3, 4), (5, 3), (6, 4), (4, 4)):
+        p = q * pl
+        region = RegionMap(p, pl)
+        sched = S.ALGORITHMS["locality_bruck"](p, pl)
+        blocks = 0
+        group = 1
+        while group < q:
+            active = min(pl, -(-q // group))
+            blocks += min(group, q - group) * pl
+            group = min(group * active, q)
+        assert sched.max_nonlocal_blocks(region) == blocks, (q, pl)
+
+
+def test_nonpower_locality_cheaper_than_full_buffer():
+    """For a wrapped region count the adapted model must price below an
+    equivalent full-buffer accounting (recomputed inline) — the pre-PR
+    cost, which over-charged the final DCN round."""
+    m = CM.TPU_MULTIPOD
+    b = 1 << 16
+    # cases where the WORST lane's final round wraps (q − group < group);
+    # layouts like (10, 4) keep a full-payload lane 1, so worst-rank cost
+    # is unchanged there and only lane 2's bytes shrink
+    for q, pl in ((5, 2), (6, 4), (3, 2)):
+        p = q * pl
+        new = CM.locality_bruck_model(p, pl, b, m)
+        # full-buffer variant: s_nl uses group (not min(group, q-group))
+        n_nl, s_nl = 0, 0.0
+        from repro.core.topology import ceil_log
+        s_l = b * (pl - 1)
+        n_l = ceil_log(2, pl)
+        group = 1
+        while group < q:
+            active = min(pl, -(-q // group))
+            n_nl += 1
+            s_nl += b * group * pl
+            s_l += b * (active - 1) * group * pl
+            n_l += ceil_log(2, pl)
+            group = min(group * active, q)
+        old = m.cost(n_local=n_l, s_local=s_l, n_nonlocal=n_nl,
+                     s_nonlocal=s_nl)
+        assert new < old, (q, pl, new, old)
+
+
+def test_max_allreduce_model_nonpower_rounds():
+    """Non-power tier sizes pay the fold/unfold rounds (log2(m) + 2), and
+    the locality structure matches collectives._rd_allreduce's count."""
+    from repro.core.topology import rd_rounds
+    assert [rd_rounds(n) for n in (1, 2, 3, 4, 5, 6, 7, 8)] == \
+        [0, 1, 3, 2, 4, 4, 4, 3]
+    m = CM.TPU_MULTIPOD
+    t3 = CM.max_allreduce_model(12, 4, 256.0, m, structure="locality")
+    t4 = CM.max_allreduce_model(16, 4, 256.0, m, structure="locality")
+    # 3 regions cost MORE rounds than 4 (fold/unfold): 3 nonlocal vs 2
+    assert t3 > t4
+
+
 def test_eager_rendezvous_split():
     pp = CM.LASSEN.nonlocal_
     small, big = pp.msg_cost(1000), pp.msg_cost(10000)

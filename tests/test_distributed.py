@@ -49,6 +49,80 @@ for alg in ["locality_bruck", "xla"]:
 print("COLLECTIVES_OK")
 """
 
+NONPOWER_COLLECTIVES_CODE = r"""
+import jax, jax.numpy as jnp
+import numpy as np
+from jax.sharding import PartitionSpec as P
+from repro.core import collectives as C
+from repro.core.hlo_analysis import op_payloads
+
+# q in {3, 5, 6} outer regions — Algorithm 2's allgatherv adaptation
+# (partial final-round payloads) plus the non-power allreduce structures
+# (Bruck-transpose RS for "rhd", fold/unfold for "rd" and max/min).
+for r, pl in [(3, 2), (3, 4), (5, 2), (5, 3), (6, 2), (6, 4)]:
+    p = r * pl
+    devs = np.asarray(jax.devices()[:p]).reshape(r, pl)
+    mesh = jax.sharding.Mesh(devs, ("pod", "local"))
+    x = jnp.arange(p * 3, dtype=jnp.float32).reshape(p, 3) * 0.37 - 4.2
+
+    def run(fn, arr=None):
+        arr = x if arr is None else arr
+        f = jax.shard_map(fn, mesh=mesh, in_specs=P(("pod", "local")),
+                          out_specs=P(("pod", "local")), check_vma=False)
+        return jax.jit(f)(arr)
+
+    truth = run(lambda s: jax.lax.all_gather(s, ("pod", "local"), tiled=True))
+    for name in ["bruck", "ring", "hierarchical", "multilane",
+                 "locality_bruck", "xla"]:
+        out = run(lambda s, n=name: C.allgather(s, "pod", "local",
+                                                algorithm=n, tiled=True))
+        assert np.allclose(out, truth), (name, r, pl)
+
+    truthr = run(lambda s: jax.lax.psum(s, ("pod", "local")))
+    for oa in ("rhd", "rd", "psum"):
+        out = run(lambda s, a=oa: C.allreduce(s, "pod", "local",
+                                              algorithm="locality",
+                                              outer_algorithm=a))
+        assert np.allclose(out, truthr, atol=1e-4), (oa, r, pl)
+    for op, lref in (("max", jax.lax.pmax), ("min", jax.lax.pmin)):
+        t = run(lambda s, f=lref: f(s, ("pod", "local")))
+        o = run(lambda s, o_=op: C.allreduce(s, "pod", "local",
+                                             algorithm="locality", op=o_))
+        assert np.array_equal(np.asarray(o), np.asarray(t)), (op, r, pl)
+
+    xx = jnp.arange(p * p * 2, dtype=jnp.float32).reshape(p * p, 2)
+    t2 = run(lambda s: jax.lax.psum_scatter(s, ("pod", "local"),
+                                            scatter_dimension=0, tiled=True),
+             xx)
+    out = run(lambda s: C.reduce_scatter(s, "pod", "local",
+                                         algorithm="locality_bruck"), xx)
+    assert np.allclose(out, t2, atol=1e-4), ("rs", r, pl)
+
+    def loss(s):
+        g = C.allgather(s, "pod", "local", algorithm="locality_bruck",
+                        tiled=True)
+        return (g ** 2).sum()
+    g = run(jax.grad(loss))
+    assert np.allclose(np.asarray(g), 2 * p * np.asarray(x)), (r, pl)
+
+# the psum fallback is GONE: a non-power locality allreduce lowers to
+# ppermutes/psum-scatters only — zero all-reduce ops in the compiled HLO
+devs = np.asarray(jax.devices()[:6]).reshape(3, 2)
+mesh = jax.sharding.Mesh(devs, ("pod", "local"))
+x = jnp.zeros((24, 2), jnp.float32)
+for kw in (dict(op="sum"), dict(op="max"), dict(op="sum",
+                                                outer_algorithm="rd")):
+    f = jax.jit(jax.shard_map(
+        lambda s, k=kw: C.allreduce(s, "pod", "local", algorithm="locality",
+                                    **k),
+        mesh=mesh, in_specs=P(("pod", "local")),
+        out_specs=P(("pod", "local")), check_vma=False))
+    hlo = f.lower(x).compile().as_text()
+    assert not op_payloads(hlo, "all-reduce"), (kw, "psum fallback resurfaced")
+print("NONPOWER_OK")
+"""
+
+
 GRAD_SYNC_CODE = r"""
 import jax, jax.numpy as jnp
 import numpy as np, dataclasses
@@ -128,6 +202,14 @@ print("FSDP_OK")
 
 def test_collectives_vs_ground_truth(subproc):
     assert "COLLECTIVES_OK" in subproc(COLLECTIVES_CODE, devices=16)
+
+
+def test_collectives_nonpower_regions(subproc):
+    """q ∈ {3, 5, 6} outer regions: every collective matches the lax ground
+    truth and the non-power locality allreduce compiles without any
+    all-reduce (the old silent psum fallback)."""
+    assert "NONPOWER_OK" in subproc(NONPOWER_COLLECTIVES_CODE, devices=24,
+                                    timeout=1800)
 
 
 def test_grad_sync_modes_agree(subproc):

@@ -91,6 +91,32 @@ def test_group_classification_non_power_of_two_pods():
     assert abs(st.group_bytes_nonlocal - 3 * 10 * (96 * 4 / 6)) < 1e-9
 
 
+def test_uneven_replica_group_classification():
+    """Groups of DIFFERENT sizes in one op (what GSPMD emits when a
+    non-power pod count shards a dim its size doesn't divide evenly): each
+    group is ring-decomposed with its own length."""
+    hlo = """
+  %ar = f32[96]{0} all-reduce(f32[96]{0} %a), replica_groups={{0,1,2,3},{4,5}}, to_apply=%add
+"""
+    pod = {0: 0, 1: 0, 2: 1, 3: 1, 4: 2, 5: 2}
+    st = collective_stats(hlo, pod)
+    # group {0,1,2,3}: ring links (0,1)L (1,2)N (2,3)L (3,0)N, 2*(4-1)=6
+    # msgs/link of b/4; group {4,5}: both links local, 2*(2-1)=2 msgs/link
+    assert st.group_msgs_nonlocal == 2 * 6
+    assert st.group_msgs_local == 2 * 6 + 2 * 2
+    assert abs(st.group_bytes_nonlocal - 2 * 6 * (96 * 4 / 4)) < 1e-9
+
+
+def test_iota_prefix_subgroup():
+    """An iota list covering only a prefix of the device grid (a subgroup
+    collective on a mesh subset) parses to the prefix instead of failing
+    the reshape."""
+    from repro.core.hlo_analysis import _replica_groups
+    pod = {i: i // 2 for i in range(8)}
+    line = "x = f32[8] all-gather(f32[2] %a), replica_groups=[2,3]<=[8]"
+    assert _replica_groups(line, pod) == [[0, 1, 2], [3, 4, 5]]
+
+
 def test_iota_replica_group_parsing():
     from repro.core.hlo_analysis import _replica_groups
     pod = {i: 0 for i in range(8)}

@@ -30,10 +30,18 @@ from repro.core import collectives as C
 CASES = [((4, 4), ("pod", "local")),    # dense power-of-two regions
          ((2, 4), ("pod", "local")),
          ((8, 2), ("pod", "local")),    # many regions, small locality
+         ((3, 4), ("pod", "local")),    # non-power regions: one partial-free
+                                        # round (active = 3)
+         ((5, 3), ("pod", "local")),    # wrapped final round, partial payload
+         ((6, 2), ("pod", "local")),    # three rounds, final one partial
          ((2, 2, 4), ("pod", "data", "model"))]   # TP-mixed (gather on 2 axes)
 
 for shape, names in CASES:
-    mesh = jax.make_mesh(shape, names)
+    n = 1
+    for s in shape:
+        n *= s
+    devs = np.asarray(jax.devices()[:n]).reshape(shape)
+    mesh = jax.sharding.Mesh(devs, names)
     ag_axes = names[:2] if len(names) > 2 else names
     p = 1
     for n, s in zip(names, shape):
@@ -111,7 +119,8 @@ from repro.core import collectives as C
 
 r, pl, rows, cols = %d, %d, %d, %d
 p = r * pl
-mesh = jax.make_mesh((r, pl), ("pod", "local"))
+mesh = jax.sharding.Mesh(np.asarray(jax.devices()[:p]).reshape(r, pl),
+                         ("pod", "local"))
 x = (jnp.arange(p * rows * p * cols, dtype=jnp.float32)
      .reshape(p * rows * p, cols) * 0.173 - 7.0)
 
@@ -138,11 +147,13 @@ print("PROP_OK")
 @pytest.mark.slow
 @pytest.mark.hypothesis
 @settings(max_examples=5, deadline=None)
-@given(st.sampled_from([(2, 4), (4, 2), (2, 8), (4, 4), (8, 2)]),
+@given(st.sampled_from([(2, 4), (4, 2), (2, 8), (4, 4), (8, 2),
+                        (3, 2), (5, 2), (6, 2), (3, 4), (5, 3)]),
        st.integers(1, 3), st.integers(1, 4))
 def test_split_transpose_property(subproc, layout, rows, cols):
     """Transposed split schedule == eager transpose for arbitrary payloads
-    (non-power region counts included via the layout pool)."""
+    (non-power region counts q ∈ {3, 5, 6} included via the layout pool —
+    the allgatherv adaptation's partial rounds transpose exactly)."""
     r, pl = layout
     code = PROPERTY_CODE_TMPL % (r, pl, rows, cols)
     assert "PROP_OK" in subproc(code, devices=16)
@@ -321,7 +332,8 @@ def test_serve_fused_stats_matches_jnp(subproc):
 def test_overlap_cost_model_properties():
     from repro.core import cost_model as cm
     m = cm.MACHINES["lassen"]
-    for p, pl in ((16, 4), (8, 2), (12, 4), (16, 1), (4, 4)):
+    for p, pl in ((16, 4), (8, 2), (12, 4), (16, 1), (4, 4),
+                  (6, 2), (10, 2), (15, 3), (24, 4)):
         for nbytes in (64, 4096, 1 << 20):
             t_sl, t_nl, t_fl = cm.locality_bruck_phase_split(p, pl, nbytes, m)
             assert t_sl >= 0 and t_nl >= 0 and t_fl >= 0

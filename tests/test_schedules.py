@@ -55,11 +55,10 @@ def test_paper_eq4_locality_counts(pl, k):
 @settings(max_examples=20, deadline=None)
 @given(region_cases())
 def test_locality_beats_bruck_nonlocal(case):
-    """The paper's core claim: fewer non-local messages; fewer non-local
-    blocks too when the region count is a power of p_ℓ (for other counts
-    the wrapped final exchange can duplicate data — paper §3 notes a
-    fraction of lanes idles / Allgatherv territory)."""
-    from repro.core.topology import is_power_of
+    """The paper's core claim: fewer non-local messages AND blocks — for
+    EVERY region count. The allgatherv adaptation (partial final-round
+    payloads) removed the power-of-p_ℓ caveat: the wrapped final exchange
+    no longer re-sends data the peer already holds."""
     p, pl = case
     if pl < 2 or p <= pl:
         return
@@ -67,8 +66,32 @@ def test_locality_beats_bruck_nonlocal(case):
     loc = S.ALGORITHMS["locality_bruck"](p, pl)
     std = S.ALGORITHMS["bruck"](p, pl)
     assert loc.max_nonlocal_msgs(region) <= std.max_nonlocal_msgs(region)
-    if is_power_of(pl, p // pl):
-        assert loc.max_nonlocal_blocks(region) <= std.max_nonlocal_blocks(region)
+    assert loc.max_nonlocal_blocks(region) <= std.max_nonlocal_blocks(region)
+
+
+def test_allgatherv_partial_final_round():
+    """Non-power region counts q ∈ {3, 5, 6}: round count is
+    ceil(log_pl(q)) and the worst rank's non-local blocks follow the
+    partial-payload recurrence Σ min(group, q−group)·p_ℓ — strictly below
+    the full-buffer exchange wherever the final round wraps."""
+    for q, pl in ((3, 2), (3, 4), (5, 2), (5, 3), (5, 4), (6, 2), (6, 4),
+                  (10, 4), (7, 3)):
+        p = q * pl
+        region = RegionMap(p, pl)
+        sched = S.ALGORITHMS["locality_bruck"](p, pl)
+        sched.validate()
+        assert sched.max_nonlocal_msgs(region) == ceil_log(pl, q), (q, pl)
+        expect = full = 0
+        group = 1
+        while group < q:
+            active = min(pl, -(-q // group))
+            expect += min(group, q - group) * pl
+            full += group * pl                  # the pre-adaptation payload
+            group = min(group * active, q)
+        assert sched.max_nonlocal_blocks(region) == expect, (q, pl)
+        wraps = expect != full
+        if wraps:
+            assert sched.max_nonlocal_blocks(region) < full, (q, pl)
 
 
 def test_example_2_1():

@@ -29,6 +29,13 @@ def test_is_power_of():
     assert is_power_of(3, 27) and not is_power_of(3, 28)
 
 
+def test_rd_rounds():
+    from repro.core.topology import rd_rounds
+    # powers: log2(n); non-powers: fold + log2(m) core + unfold
+    assert [rd_rounds(n) for n in range(1, 9)] == [0, 1, 3, 2, 4, 4, 4, 3]
+    assert rd_rounds(16) == 4 and rd_rounds(17) == 6
+
+
 def test_indivisible_raises():
     with pytest.raises(ValueError):
         RegionMap(p=10, p_local=4)
