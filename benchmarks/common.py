@@ -61,6 +61,26 @@ def run_multidevice(code: str, devices: int, timeout: int = 1200) -> str:
 
 
 def emit(rows: list[tuple]) -> list[tuple]:
+    """Print the CSV rows AND publish them into the metrics registry
+    (``bench/<name>_us`` gauges), so ``results/metrics.json`` carries the
+    same numbers the BENCH_*.json artifacts do."""
+    from repro import telemetry
+    reg = telemetry.get_registry()
     for name, us, derived in rows:
         print(f"{name},{us if us is not None else ''},{derived}")
+        if us is not None:
+            reg.gauge(f"bench/{name}_us").set(float(us))
     return rows
+
+
+def telemetry_artifacts(name: str, *, devices: int | None = None) -> None:
+    """Persist this process's telemetry: the global tracer's span buffer to
+    ``results/trace_<name>.json`` (Chrome/Perfetto trace-event JSON) and the
+    global registry snapshot merged into ``results/metrics.json`` (stamped
+    with the same metadata BENCH_*.json carries, so the trend job matches
+    like with like)."""
+    from repro import telemetry
+    os.makedirs(RESULTS, exist_ok=True)
+    telemetry.dump_trace(os.path.join(RESULTS, f"trace_{name}.json"))
+    telemetry.get_registry().dump(os.path.join(RESULTS, "metrics.json"),
+                                  meta=bench_metadata(devices))

@@ -381,6 +381,20 @@ def main() -> list[tuple]:
         assert loc["nonlocal_bytes"] < flat["nonlocal_bytes"], cell
         assert loc["nonlocal_msgs"] < flat["nonlocal_msgs"], cell
         assert loc["permute_edges_nonlocal"] > 0, cell
+        # mirror the per-cell DCN ground truth into the metrics registry so
+        # results/metrics.json carries it alongside the step telemetry
+        from repro import telemetry
+        reg = telemetry.get_registry()
+        for path_, v in ((f"multipod/{key}/locality_nonlocal_bytes",
+                          loc["nonlocal_bytes"]),
+                         (f"multipod/{key}/flat_nonlocal_bytes",
+                          flat["nonlocal_bytes"]),
+                         (f"multipod/{key}/bytes_ratio",
+                          red["nonlocal_bytes_ratio"]),
+                         (f"multipod/{key}/msgs_ratio",
+                          red["nonlocal_msgs_ratio"])):
+            if v is not None:
+                reg.gauge(path_).set(v)
         rows.append((
             f"multipod/{key}/nonlocal_bytes", None,
             f"locality={loc['nonlocal_bytes']:.0f} "

@@ -56,15 +56,19 @@ BENCHES = {
 
 
 def run_benches(only: str | None) -> None:
+    from repro import telemetry
+    from .common import telemetry_artifacts
     names = only.split(",") if only else list(BENCHES)
     print("name,us_per_call,derived")
     failed = []
     for name in names:
         try:
-            BENCHES[name].main()
+            with telemetry.span(f"bench/{name}"):
+                BENCHES[name].main()
         except Exception:
             failed.append(name)
             traceback.print_exc()
+    telemetry_artifacts("bench")
     if failed:
         print(f"FAILED benchmarks: {failed}", file=sys.stderr)
         sys.exit(1)
@@ -87,13 +91,25 @@ def main() -> None:
         sweep.main(argv[1:])
         return
     if argv[:1] == ["overlap"]:
+        from repro import telemetry
+        from .common import telemetry_artifacts
         print("name,us_per_call,derived")
-        overlap.main()
+        try:
+            with telemetry.span("bench/overlap"):
+                overlap.main()
+        finally:                   # keep artifacts from failed gate runs
+            telemetry_artifacts("overlap")
         return
     if argv[:1] == ["multipod"]:
+        from repro import telemetry
         from . import multipod
+        from .common import telemetry_artifacts
         print("name,us_per_call,derived")
-        multipod.main()
+        try:
+            with telemetry.span("bench/multipod"):
+                multipod.main()
+        finally:                   # keep artifacts from failed gate runs
+            telemetry_artifacts("multipod")
         return
     if argv[:1] != ["bench"] and any(a.startswith("--only") for a in argv):
         argv = ["bench"] + argv

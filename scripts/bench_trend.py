@@ -59,7 +59,21 @@ METRICS: dict[str, tuple[str, bool]] = {
     # locality schedule is losing its DCN edge
     "nonlocal_bytes_ratio": ("lower", False),
     "nonlocal_msgs_ratio": ("lower", False),
+    # results/metrics.json (repro.telemetry registry snapshot): gauge names
+    # are slash-qualified ("train/step_time_s_mean") — matching is on the
+    # name's last segment, see the rsplit in compare_file/write_history
+    "step_time_s_mean": ("lower", True),
+    "decode_step_s_mean": ("lower", True),
+    "compile_time_s": ("lower", True),
+    # per-step DCN prediction from the compiled step's CommReport —
+    # deterministic compile artifact, strict threshold
+    "comm_nonlocal_bytes_per_step": ("lower", False),
+    "comm_nonlocal_msgs_per_step": ("lower", False),
 }
+
+#: extra artifacts tracked alongside the BENCH_*.json pattern (relative to
+#: --cur; same relative path looked up in every baseline run)
+EXTRA_ARTIFACTS = ("results/metrics.json",)
 
 
 def _walk(node, path=()):
@@ -95,7 +109,9 @@ def compare_file(name: str, prevs: list[dict], cur: dict, threshold: float,
     regressions = []
     compared = 0
     for path, cur_v in _walk(cur):
-        metric = path[-1]
+        # registry gauges are slash-qualified ("train/step_time_s_mean"):
+        # the metric name is the last segment
+        metric = path[-1].rsplit("/", 1)[-1]
         spec = METRICS.get(metric)
         series = prev_series.get(path)
         if spec is None or not series:
@@ -231,7 +247,7 @@ def write_history(plot_dir: str, name: str, prevs_old_first: list[dict],
     metrics: list[tuple[str, list[float], list[str]]] = []
     md: list[str] = []
     for path, cur_v in sorted(_walk(cur)):
-        spec = METRICS.get(path[-1])
+        spec = METRICS.get(path[-1].rsplit("/", 1)[-1])
         if spec is None:
             continue
         pts = prev_series.get(path, [])
@@ -249,7 +265,7 @@ def write_history(plot_dir: str, name: str, prevs_old_first: list[dict],
                   f"**{_fmt(cur_v)}** | {delta} |")
     if not metrics:
         return []
-    stem = os.path.splitext(name)[0]
+    stem = os.path.splitext(name)[0].replace(os.sep, "_").replace("/", "_")
     render_history_svg(os.path.join(plot_dir, f"{stem}.svg"), name, metrics,
                        n_runs)
     header = [f"### {name}", "",
@@ -304,6 +320,10 @@ def main(argv=None) -> int:
     args = ap.parse_args(argv)
 
     cur_files = sorted(glob.glob(os.path.join(args.cur, args.pattern)))
+    for rel in EXTRA_ARTIFACTS:
+        p = os.path.join(args.cur, rel)
+        if os.path.exists(p):
+            cur_files.append(p)
     if not cur_files:
         print(f"FAIL: no {args.pattern} in {args.cur!r} — the bench step "
               "produced nothing to track")
@@ -322,7 +342,9 @@ def main(argv=None) -> int:
     regressions: list[str] = []
     plot_md: list[str] = []
     for cur_path in cur_files:
-        name = os.path.basename(cur_path)
+        # relative path, not basename: results/metrics.json must look up
+        # the same relative location inside each baseline run's artifact
+        name = os.path.relpath(cur_path, args.cur)
         try:
             with open(cur_path) as f:
                 cur = json.load(f)

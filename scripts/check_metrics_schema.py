@@ -1,0 +1,153 @@
+#!/usr/bin/env python
+"""Validate telemetry artifacts (CI schema + reconciliation gate).
+
+``python scripts/check_metrics_schema.py results/metrics.json results/trace_*.json``
+
+Two artifact kinds, auto-detected by shape:
+
+* **metrics snapshots** (``repro.telemetry.MetricsRegistry.dump``): the
+  ``counters`` / ``gauges`` / ``histograms`` / ``comm`` sections must hold
+  finite numbers (counters non-negative, histogram count/total/min/max/mean
+  coherent) — and, the actual gate, every ``comm`` entry's runtime
+  accumulation must reconcile against its compile-time CommReport
+  prediction (``match: true``). A step path that executed without being
+  accounted, or accounted against a stale report, fails CI here.
+* **trace dumps** (``repro.telemetry.dump_trace``): a Chrome trace-event
+  container whose ``traceEvents`` pass
+  :func:`repro.telemetry.validate_trace_events` (known phases, numeric
+  monotonic ``ts`` per lane, LIFO-matched B/E span pairs) and hold at least
+  one span.
+
+Exits non-zero with a per-file diagnostic on the first violation.
+"""
+from __future__ import annotations
+
+import json
+import math
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(os.path.abspath(__file__)),
+                                os.pardir, "src"))
+
+from repro.telemetry import validate_trace_events           # noqa: E402
+
+METRIC_SECTIONS = ("counters", "gauges", "histograms", "comm")
+
+
+def _finite(v) -> bool:
+    return isinstance(v, (int, float)) and not isinstance(v, bool) \
+        and math.isfinite(v)
+
+
+def check_metrics(path: str, doc: dict) -> int:
+    for section in METRIC_SECTIONS:
+        if not isinstance(doc.get(section, {}), dict):
+            print(f"{path}: FAIL — section {section!r} is not a mapping")
+            return 1
+    for name, v in doc.get("counters", {}).items():
+        if not _finite(v) or v < 0:
+            print(f"{path}: FAIL — counter {name!r} = {v!r} "
+                  f"(must be a finite number >= 0)")
+            return 1
+    for name, v in doc.get("gauges", {}).items():
+        if v is not None and not _finite(v):
+            print(f"{path}: FAIL — gauge {name!r} = {v!r} (must be finite)")
+            return 1
+    for name, h in doc.get("histograms", {}).items():
+        ctx = f"{path}: histogram {name!r}"
+        if not isinstance(h, dict) or not _finite(h.get("count")) \
+                or h["count"] < 0:
+            print(f"{ctx}: FAIL — bad count {h!r}")
+            return 1
+        if h["count"] > 0:
+            for k in ("total", "mean", "min", "max"):
+                if not _finite(h.get(k)):
+                    print(f"{ctx}: FAIL — non-finite {k} {h.get(k)!r}")
+                    return 1
+            if not (h["min"] <= h["mean"] <= h["max"]):
+                print(f"{ctx}: FAIL — mean {h['mean']} outside "
+                      f"[min {h['min']}, max {h['max']}]")
+                return 1
+    n_comm = 0
+    for label, c in doc.get("comm", {}).items():
+        ctx = f"{path}: comm {label!r}"
+        for k in ("invocations", "predicted_nonlocal_bytes",
+                  "predicted_nonlocal_msgs", "actual_nonlocal_bytes",
+                  "actual_nonlocal_msgs"):
+            if not _finite(c.get(k)):
+                print(f"{ctx}: FAIL — non-finite {k} {c.get(k)!r}")
+                return 1
+        if not isinstance(c.get("report"), dict):
+            print(f"{ctx}: FAIL — missing compile-time report")
+            return 1
+        # THE gate: runtime accumulation == invocations × compile-time
+        # prediction. False means a step executed outside the telemetry
+        # accounting, or against a stale report.
+        if c.get("match") is not True:
+            print(f"{ctx}: FAIL — predicted vs actual comm mismatch: "
+                  f"predicted {c['predicted_nonlocal_bytes']:.0f} B / "
+                  f"{c['predicted_nonlocal_msgs']:.0f} msgs, actual "
+                  f"{c['actual_nonlocal_bytes']:.0f} B / "
+                  f"{c['actual_nonlocal_msgs']:.0f} msgs over "
+                  f"{c['invocations']} invocation(s)")
+            return 1
+        n_comm += 1
+    print(f"{path}: OK (metrics snapshot: "
+          f"{len(doc.get('counters', {}))} counters, "
+          f"{len(doc.get('gauges', {}))} gauges, "
+          f"{len(doc.get('histograms', {}))} histograms, "
+          f"{n_comm} reconciled comm label(s))")
+    return 0
+
+
+def check_trace(path: str, doc: dict) -> int:
+    events = doc.get("traceEvents")
+    if not isinstance(events, list):
+        print(f"{path}: FAIL — no traceEvents list")
+        return 1
+    problems = validate_trace_events(events)
+    if problems:
+        for p in problems[:10]:
+            print(f"{path}: FAIL — {p}")
+        return 1
+    spans = sum(1 for e in events if e.get("ph") == "B")
+    if spans == 0:
+        print(f"{path}: FAIL — trace holds no spans (instrumentation "
+              f"produced nothing)")
+        return 1
+    print(f"{path}: OK (trace: {len(events)} events, {spans} spans)")
+    return 0
+
+
+def check_file(path: str) -> int:
+    try:
+        with open(path) as f:
+            doc = json.load(f)
+    except (OSError, ValueError) as e:
+        print(f"{path}: FAIL — unreadable ({e})")
+        return 1
+    if not isinstance(doc, dict):
+        print(f"{path}: FAIL — top level is not an object")
+        return 1
+    if "traceEvents" in doc:
+        return check_trace(path, doc)
+    if any(s in doc for s in METRIC_SECTIONS):
+        return check_metrics(path, doc)
+    print(f"{path}: FAIL — neither a trace dump nor a metrics snapshot")
+    return 1
+
+
+def main(argv: list[str]) -> int:
+    paths = argv or [os.path.join("results", "metrics.json")]
+    rc = 0
+    for path in paths:
+        if not os.path.exists(path):
+            print(f"{path}: FAIL — file does not exist")
+            return 1
+        rc |= check_file(path)
+    return rc
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

@@ -25,6 +25,8 @@ import threading
 import jax
 import numpy as np
 
+from repro import telemetry
+
 
 def _leaf_paths(tree):
     leaves, treedef = jax.tree.flatten(tree)
@@ -133,14 +135,19 @@ class CheckpointManager:
              blocking: bool = False) -> None:
         # snapshot to host synchronously (cheap on CPU; on TPU this is the
         # device->host DMA) so the train loop may donate/overwrite buffers.
-        leaves, treedef = jax.tree.flatten(tree)
-        host = [np.asarray(jax.device_get(l)) for l in leaves]
-        snapshot = jax.tree.unflatten(treedef, host)
+        tracer = telemetry.get_tracer()
+        with tracer.span("checkpoint/save", step=step):
+            leaves, treedef = jax.tree.flatten(tree)
+            host = [np.asarray(jax.device_get(l)) for l in leaves]
+            snapshot = jax.tree.unflatten(treedef, host)
 
         def work():
             try:
-                save_checkpoint(self.ckpt_dir, step, snapshot,
-                                extra=extra, keep_last=self.keep_last)
+                # the writer thread's spans land in their own trace lane
+                with tracer.span("checkpoint/write", step=step):
+                    save_checkpoint(self.ckpt_dir, step, snapshot,
+                                    extra=extra, keep_last=self.keep_last)
+                telemetry.get_registry().count("checkpoint/saves")
             except BaseException as e:       # surfaced on next wait()
                 self._error = e
 
@@ -159,4 +166,6 @@ class CheckpointManager:
             raise err
 
     def restore(self, like, *, shardings=None):
-        return restore_checkpoint(self.ckpt_dir, like, shardings=shardings)
+        with telemetry.get_tracer().span("checkpoint/restore"):
+            return restore_checkpoint(self.ckpt_dir, like,
+                                      shardings=shardings)

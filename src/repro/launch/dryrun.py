@@ -113,6 +113,20 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
             hlo = compiled.as_text()
         pod_map = device_pod_map(mesh, ("pod",)) if multi else None
         stats = collective_stats(hlo, pod_map)
+        from repro.telemetry import comm_report
+        rep = comm_report(hlo, mesh,
+                          label=f"{arch}/{shape_name}/{mesh_kind}")
+        res["comm"] = rep.asdict()
+        res["locality_schedule"] = rep.has_locality_schedule
+        if (multi and shape.kind == "train" and grad_sync == "locality"
+                and not rep.has_locality_schedule):
+            # the paper's schedule lowers to pod-crossing collective
+            # permutes; a locality-configured train cell compiling to HLO
+            # with NONE has silently regressed to flat XLA collectives
+            raise AssertionError(
+                "locality regression: grad_sync='locality' on a multi-pod "
+                "mesh compiled to zero pod-crossing collective-permute "
+                "edges (flat XLA collectives took over)")
         mf = model_flops(cfg, shape)
         roof = Roofline(flops=float(cost.get("flops", 0.0)),
                         hbm_bytes=float(cost.get("bytes accessed", 0.0)),

@@ -11,6 +11,8 @@ from __future__ import annotations
 
 import dataclasses
 
+from repro.telemetry import TelemetryEvent
+
 
 class SimulatedFault(RuntimeError):
     """Raised by FaultInjector to emulate a chip/host loss mid-run."""
@@ -48,24 +50,42 @@ class StepMonitor:
     _n: int = 0
     _last_algorithm: str | None = None
 
-    def record(self, dt: float, algorithm: str | None = None) -> list[str]:
+    def record(self, dt: float,
+               algorithm: str | None = None) -> list[TelemetryEvent]:
         """Record one step time; ``algorithm`` is the collective algorithm
         the step ran with (from the tuning policy / grad_sync resolution).
         An event is emitted on the first step and whenever it changes —
         e.g. after an elastic restart onto a different topology re-resolves
-        ``grad_sync="auto"`` to a different schedule."""
-        events = []
+        ``grad_sync="auto"`` to a different schedule (the change event is
+        deduplicated: repeats of the current algorithm stay silent).
+
+        Returns structured :class:`TelemetryEvent`s (str subclasses — every
+        legacy substring consumer keeps working)."""
+        events: list[TelemetryEvent] = []
         if algorithm is not None and algorithm != self._last_algorithm:
-            events.append(f"collective: {algorithm}")
+            events.append(TelemetryEvent(
+                f"collective: {algorithm}", kind="collective",
+                attrs={"algorithm": algorithm,
+                       "previous": self._last_algorithm}))
             self._last_algorithm = algorithm
         self._n += 1
         if self._n <= self.warmup:          # ignore compile-dominated steps
             self._ewma = dt if self._ewma == 0 else (
                 self.alpha * dt + (1 - self.alpha) * self._ewma)
             return events
+        if self._ewma == 0:
+            # warmup=0 (or all-zero warmup samples): seed the EWMA from the
+            # first measured step instead of blending against 0 — an
+            # α-scaled seed would flag every subsequent NORMAL step as a
+            # straggler (dt > k·α·dt for the default k=3, α=0.1).
+            self._ewma = dt
+            return events
         if dt > self.k * self._ewma:
-            events.append(f"straggler: step took {dt:.3f}s "
-                          f"(ewma {self._ewma:.3f}s, k={self.k})")
+            events.append(TelemetryEvent(
+                f"straggler: step took {dt:.3f}s "
+                f"(ewma {self._ewma:.3f}s, k={self.k})",
+                kind="straggler",
+                attrs={"dt": dt, "ewma": self._ewma, "k": self.k}))
         self._ewma = self.alpha * dt + (1 - self.alpha) * self._ewma
         return events
 

@@ -182,6 +182,8 @@ class ServeArtifacts:
     combine_layers: int = 0   # attention layers the manual combine covers
     fused_stats: str = "jnp"  # resolved partial-stat impl ("jnp"/"pallas"/...)
     seq_axes: Any = None      # sequence-shard candidates (('pod','data')/...)
+    tok_sharding: Any = None  # decode-token sharding (AOT calls don't reshard)
+    abstract_cache: Any = None  # ShapeDtypeStruct pytree for decode lowering
 
 
 @dataclasses.dataclass(frozen=True)
@@ -474,32 +476,86 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
                           decode_fn_xla=decode_fn_xla,
                           decode_fn_locality=decode_fn_locality,
                           combine_layers=combine_layers,
-                          fused_stats=stats_impl, seq_axes=seq_cand)
+                          fused_stats=stats_impl, seq_axes=seq_cand,
+                          tok_sharding=tok_sh,
+                          abstract_cache=cache_specs(cfg, batch, cache_len))
 
 
 class Engine:
-    """Minimal batched greedy-decoding engine over the jitted steps."""
+    """Minimal batched greedy-decoding engine over the jitted steps.
+
+    Telemetry (DESIGN.md §8): when the decode path has a cache combine at
+    all (``comm_telemetry="auto"``), the active decode fn is AOT-compiled at
+    construction — the compiled executable serves the decode loop (same
+    compile the first decode call would have paid) and its HLO yields the
+    :class:`~repro.telemetry.CommReport` stamped under ``"serve/decode"``:
+    per-step combine traffic in ``stats()`` is read off the compiled
+    artifact's DP-crossing bytes, not a hand-maintained layer count, and
+    each executed step is accounted against the prediction
+    (``registry.reconcile(engine.comm_label)``). The label is qualified by
+    the combine algorithm (``serve/decode:locality`` / ``serve/decode:xla``)
+    so side-by-side A/B engines in one process keep separate ledgers."""
 
     def __init__(self, cfg, mesh, params, *, batch: int, cache_len: int,
                  combine: str = "auto", fused_stats: str = "auto",
                  seq_axes: str | tuple[str, ...] = "auto",
-                 log: Callable[[str], None] | None = None):
+                 log: Callable[[str], None] | None = None,
+                 comm_telemetry: bool | str = "auto",
+                 tracer=None, registry=None):
+        from repro import telemetry
         self.cfg = cfg
-        self.art = make_serve_fns(cfg, mesh, batch=batch, cache_len=cache_len,
-                                  combine=combine, fused_stats=fused_stats,
-                                  seq_axes=seq_axes)
+        self.mesh = mesh
+        self.tracer = tracer or telemetry.get_tracer()
+        self.registry = registry or telemetry.get_registry()
+        with self.tracer.span("serve/build"):
+            self.art = make_serve_fns(cfg, mesh, batch=batch,
+                                      cache_len=cache_len, combine=combine,
+                                      fused_stats=fused_stats,
+                                      seq_axes=seq_axes)
         params = jax.tree.map(
             lambda p: p.astype(cfg.dtype) if p.dtype == jnp.float32 else p,
             params)
         self.params = jax.device_put(params, self.art.param_shardings)
+        self.batch = batch
         self.cache_len = cache_len
         self.combine = self.art.combine
         self._stats = {"decode_steps": 0, "combine_steps": 0,
-                       "combine_bytes": 0}
+                       "combine_bytes": 0.0, "nonlocal_bytes": 0.0,
+                       "nonlocal_msgs": 0.0}
+        self._decode_callable = self.art.decode_fn
+        self.comm_report = None
+        self.comm_label = f"serve/decode:{self.combine.algorithm}"
+        if comm_telemetry == "auto":
+            comm_telemetry = self.combine.algorithm != "none"
+        if comm_telemetry:
+            self._stamp_comm(log)
         if log and self.combine.algorithm != "none":
             log(f"[engine] cache-combine: {self.combine.algorithm} "
                 f"({self.combine.source}, {self.combine.nbytes} B/step, "
                 f"p={self.combine.p} p_local={self.combine.p_local})")
+
+    def _stamp_comm(self, log=None) -> None:
+        """AOT-compile the active decode fn; stamp its CommReport."""
+        from repro import telemetry
+        import time as _time
+        try:
+            with self.tracer.span("serve/compile"):
+                t0 = _time.perf_counter()
+                a_tok = jax.ShapeDtypeStruct((self.batch, 1), jnp.int32)
+                lowered = self.art.decode_fn.lower(
+                    self.art.abstract_params, self.art.abstract_cache, a_tok)
+                compiled = lowered.compile()
+                compile_s = _time.perf_counter() - t0
+            report = telemetry.comm_report(compiled.as_text(), self.mesh,
+                                           label=self.comm_label)
+            self._decode_callable = compiled
+            self.comm_report = report
+            self.registry.gauge("serve/compile_time_s").set(compile_s)
+            self.registry.attach_comm_report(self.comm_label, report)
+        except Exception as e:            # pragma: no cover - backend quirks
+            if log:
+                log(f"[engine] comm telemetry unavailable: "
+                    f"{type(e).__name__}: {e}")
 
     def _next_token(self, logits) -> jax.Array:
         """Greedy sampling rule, shared by prefill and decode so it cannot
@@ -510,28 +566,54 @@ class Engine:
         return jnp.minimum(tok, self.cfg.vocab_size - 1)
 
     def stats(self) -> dict:
-        """Cumulative serving counters: decode steps and the explicit
-        cache-combine traffic they generated (bytes = per-rank stat payload
-        × eligible attention layers × steps; zero when the combine runs on
-        the implicit XLA path or no layer qualifies for the manual one)."""
-        return dict(self._stats)
+        """Cumulative serving counters: decode steps and the per-step
+        combine traffic they generated. ``combine_bytes`` is sourced from
+        the compiled artifact's CommReport (DP-domain-crossing bytes of the
+        decode HLO × steps) when comm telemetry is on — the ground truth,
+        not an analytic layer count — falling back to the analytic estimate
+        (stat payload × eligible layers) without it. ``nonlocal_*`` are the
+        inter-pod (DCN) accumulations; a ``comm`` entry carries the
+        per-step report and its runtime reconciliation when stamped."""
+        out = dict(self._stats)
+        if self.comm_report is not None:
+            out["comm"] = {
+                "per_step": self.comm_report.asdict(),
+                "reconcile": self.registry.reconcile(self.comm_label),
+            }
+        return out
 
     def generate(self, prompts: np.ndarray, max_new: int,
                  extra: dict | None = None) -> np.ndarray:
         """prompts: (B, S) int32. Returns (B, max_new) greedy tokens."""
+        import time as _time
         batch_in = {"tokens": jnp.asarray(prompts)}
         batch_in.update(extra or {})
-        logits, cache = self.art.prefill_fn(self.params, batch_in)
+        with self.tracer.span("serve/prefill", prompt_len=int(prompts.shape[-1])):
+            logits, cache = self.art.prefill_fn(self.params, batch_in)
         out = []
         tok = self._next_token(logits)
         combining = self.combine.algorithm == "locality"
+        rep = self.comm_report
+        reg = self.registry
         for _ in range(max_new):
             out.append(np.asarray(tok))
-            logits, cache = self.art.decode_fn(self.params, cache, tok)
-            tok = self._next_token(logits)
+            if rep is not None:
+                # the AOT-compiled executable does not reshard inputs
+                tok = jax.device_put(tok, self.art.tok_sharding)
+            with self.tracer.span("serve/decode_step"):
+                t0 = _time.perf_counter()
+                logits, cache = self._decode_callable(self.params, cache, tok)
+                tok = self._next_token(logits)
+            reg.observe("serve/decode_step_s", _time.perf_counter() - t0)
             self._stats["decode_steps"] += 1
+            if rep is not None:
+                self._stats["nonlocal_bytes"] += rep.nonlocal_bytes
+                self._stats["nonlocal_msgs"] += rep.nonlocal_msgs
+                reg.record_comm(self.comm_label)
             if combining:
                 self._stats["combine_steps"] += 1
                 self._stats["combine_bytes"] += (
-                    self.combine.nbytes * self.art.combine_layers)
+                    rep.dp_bytes if rep is not None
+                    else self.combine.nbytes * self.art.combine_layers)
+        reg.count("serve/tokens", max_new * prompts.shape[0])
         return np.concatenate(out, axis=1)

@@ -1,0 +1,34 @@
+"""repro.telemetry — structured tracing + a comm-metrics registry.
+
+The runtime half of the paper's cost accounting (DESIGN.md §8). Two parts:
+
+* ``trace`` — a zero-dependency span tracer (context-manager API, nested via
+  contextvars) exporting Chrome/Perfetto trace-event JSON. Spans mirror onto
+  ``jax.profiler`` annotations when available, so XLA profiles carry the
+  paper's phase names (prefetch / gather / compute / grad-sync / combine).
+* ``metrics`` — a counter/gauge/histogram registry whose communication
+  counters are stamped *at lowering time*: every compiled step runs through
+  ``core.hlo_analysis.collective_stats`` and attaches a :class:`CommReport`
+  (expected inter-pod bytes/msgs per invocation), so the registry reports
+  predicted-vs-actual comm per step and ``reconcile`` catches any path whose
+  runtime accounting drifts from the HLO ground truth.
+
+Module-level ``get_tracer()`` / ``get_registry()`` return process-global
+instances (the Trainer, serve Engine and benchmarks publish into them by
+default); tests construct private ones.
+"""
+from .comm import CommReport, comm_report, dp_group_map
+from .events import TelemetryEvent
+from .metrics import (Counter, Gauge, Histogram, MetricsRegistry,
+                      get_registry, set_registry)
+from .trace import (Tracer, dump_trace, get_tracer, set_tracer, span,
+                    validate_trace_events)
+
+__all__ = [
+    "CommReport", "comm_report", "dp_group_map",
+    "TelemetryEvent",
+    "Counter", "Gauge", "Histogram", "MetricsRegistry",
+    "get_registry", "set_registry",
+    "Tracer", "dump_trace", "get_tracer", "set_tracer", "span",
+    "validate_trace_events",
+]

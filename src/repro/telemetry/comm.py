@@ -1,0 +1,104 @@
+"""CommReport: the compile-time communication ground truth per invocation.
+
+One report summarizes what ONE invocation of a compiled step moves over the
+wire, derived from the compiled HLO via ``core.hlo_analysis.collective_stats``
+under two device groupings:
+
+* **pod grouping** (``device_pod_map(mesh, ("pod",))``) — the paper's axis:
+  traffic crossing a pod boundary is DCN (``nonlocal_bytes``/
+  ``nonlocal_msgs``). Meshes without a 'pod' axis report zeros here.
+* **DP grouping** (``dp_group_map``) — devices sharing their data-parallel
+  coordinates (same 'pod' AND 'data' position, any 'model' position) form
+  one group, so an edge is "nonlocal" under this map exactly when it crosses
+  the DP sharding domain. That isolates the *data-parallel* collectives (the
+  FSDP gather + grad sync in train, the decode cache-combine in serve) from
+  tensor-parallel traffic without any hand-maintained layer counts:
+  ``dp_bytes``/``dp_msgs`` ARE the per-step combine/sync traffic, read off
+  the artifact.
+
+``permute_edges_nonlocal > 0`` on a multi-pod mesh is the signature of the
+explicit locality schedule (the Bruck rounds lower to collective-permutes);
+a locality-configured path whose report shows none has silently regressed
+to flat XLA — the dryrun assert and ``Engine``/``Trainer`` telemetry both
+key off this.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass(frozen=True)
+class CommReport:
+    """Per-invocation expected communication of one compiled step."""
+
+    label: str
+    # inter-pod (DCN) tier — zeros on single-pod meshes
+    nonlocal_bytes: float = 0.0
+    nonlocal_msgs: float = 0.0
+    local_bytes: float = 0.0
+    local_msgs: float = 0.0
+    permute_edges_nonlocal: int = 0
+    # traffic crossing the DP sharding domain (gather/sync/combine),
+    # regardless of pod structure
+    dp_bytes: float = 0.0
+    dp_msgs: float = 0.0
+    # raw inventory
+    total_bytes: int = 0
+    op_counts: dict = dataclasses.field(default_factory=dict)
+
+    @property
+    def has_locality_schedule(self) -> bool:
+        """True iff the compiled artifact carries explicit pod-crossing
+        permute edges — the locality collectives' lowering signature."""
+        return self.permute_edges_nonlocal > 0
+
+    def asdict(self) -> dict:
+        d = dataclasses.asdict(self)
+        d["has_locality_schedule"] = self.has_locality_schedule
+        return d
+
+
+def dp_group_map(mesh, dp_axes: tuple[str, ...]) -> dict[int, int] | None:
+    """device.id -> flat DP coordinate: devices sharing every DP-axis
+    position (i.e. tensor-parallel peers) share a group, so collective
+    traffic classified "nonlocal" under this map is exactly the traffic
+    crossing the data-parallel domain. None when the mesh has no DP axis
+    wider than one device (nothing to cross)."""
+    import numpy as np
+    from repro.core.topology import device_pod_map
+    axes = tuple(a for a in dp_axes if a in mesh.axis_names)
+    if not axes:
+        return None
+    names = list(mesh.axis_names)
+    if all(np.asarray(mesh.devices).shape[names.index(a)] <= 1
+           for a in axes):
+        return None
+    return device_pod_map(mesh, axes)
+
+
+def comm_report(hlo_text: str, mesh, *, label: str = "") -> CommReport:
+    """Build the report for one compiled step's HLO on ``mesh``."""
+    from repro.core.hlo_analysis import collective_stats
+    from repro.core.topology import device_pod_map
+    from repro.train.sharding import dp_axes
+
+    pod_map = (device_pod_map(mesh, ("pod",))
+               if "pod" in mesh.axis_names else None)
+    st = collective_stats(hlo_text, pod_map)
+    dp_map = dp_group_map(mesh, dp_axes(mesh))
+    dp_bytes = dp_msgs = 0.0
+    if dp_map is not None:
+        dp_st = collective_stats(hlo_text, dp_map)
+        dp_bytes, dp_msgs = dp_st.nonlocal_bytes, dp_st.nonlocal_msgs
+    return CommReport(
+        label=label,
+        nonlocal_bytes=float(st.nonlocal_bytes),
+        nonlocal_msgs=float(st.nonlocal_msgs),
+        local_bytes=float(st.permute_bytes_local + st.group_bytes_local),
+        local_msgs=float(st.permute_edges_local + st.group_msgs_local),
+        permute_edges_nonlocal=st.permute_edges_nonlocal,
+        dp_bytes=float(dp_bytes),
+        dp_msgs=float(dp_msgs),
+        total_bytes=st.total_bytes,
+        op_counts=dict(st.counts),
+    )

@@ -1,0 +1,50 @@
+"""Structured runtime events with a string back-compat view.
+
+``Trainer.events`` and ``StepMonitor.record`` historically produced raw
+strings; every consumer (tests, log scrapers) matches on substrings. The
+structured event is therefore a ``str`` *subclass*: the message IS the
+string value (``in``, ``startswith``, ``==`` and json-as-string all keep
+working), while ``kind`` / ``step`` / ``t`` / ``attrs`` carry the machine-
+readable half that the telemetry registry and the trace export consume.
+"""
+from __future__ import annotations
+
+import time
+
+
+class TelemetryEvent(str):
+    """One structured event: a message string + typed metadata.
+
+    kind:  event taxonomy — "straggler" | "collective" | "fault" |
+           "restore" | "checkpoint" | "comm" | "warning" | "info".
+    step:  the trainer/engine step the event belongs to (None if n/a).
+    t:     wall-clock epoch seconds when the event was created.
+    attrs: free-form structured payload (e.g. {"dt": 0.41, "ewma": 0.12}).
+    """
+
+    kind: str
+    step: int | None
+    t: float
+    attrs: dict
+
+    def __new__(cls, message: str, *, kind: str = "info",
+                step: int | None = None, t: float | None = None,
+                attrs: dict | None = None):
+        self = super().__new__(cls, message)
+        self.kind = kind
+        self.step = step
+        self.t = time.time() if t is None else t
+        self.attrs = dict(attrs or {})
+        return self
+
+    @property
+    def message(self) -> str:
+        return str(self)
+
+    def asdict(self) -> dict:
+        return {"message": str(self), "kind": self.kind, "step": self.step,
+                "t": self.t, "attrs": dict(self.attrs)}
+
+    def __repr__(self) -> str:  # distinguishable from a bare str in dumps
+        return (f"TelemetryEvent({str(self)!r}, kind={self.kind!r}, "
+                f"step={self.step!r})")

@@ -1,0 +1,264 @@
+"""Counter/gauge/histogram registry + the comm predicted-vs-actual ledger.
+
+The registry is deliberately small (no label vectors, no exposition
+formats): names are flat strings ("train/step_time_s"), values are numbers,
+``snapshot()`` is a JSON-ready dict and ``dump(path)`` persists it — the
+``results/metrics.json`` artifact CI uploads and ``scripts/bench_trend.py``
+ingests alongside the BENCH_*.json files.
+
+The communication half implements the reconciliation contract of
+DESIGN.md §8: a compiled step attaches its :class:`~repro.telemetry.comm.
+CommReport` (HLO ground truth, per invocation) under a label; the runtime
+path calls ``record_comm(label)`` once per executed invocation; and
+``reconcile(label)`` checks that the bytes/msgs accumulated at runtime
+equal ``invocations × report`` exactly. A path that executes steps without
+publishing, publishes against a stale report after a rebuild, or serves
+traffic from a different compiled fn than the one that was stamped, shows
+up as a mismatch — the runtime analogue of the multipod HLO gate.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import math
+import os
+import threading
+from typing import Any
+
+from .comm import CommReport
+
+_P_KEEP = 512          # bounded reservoir for histogram percentiles
+
+
+class Counter:
+    """Monotonic accumulator."""
+
+    def __init__(self) -> None:
+        self.value: float = 0
+
+    def inc(self, n: float = 1) -> None:
+        if n < 0:
+            raise ValueError(f"counter increment must be >= 0, got {n}")
+        self.value += n
+
+
+class Gauge:
+    """Last-write-wins scalar."""
+
+    def __init__(self) -> None:
+        self.value: float | None = None
+
+    def set(self, v: float) -> None:
+        self.value = float(v)
+
+
+class Histogram:
+    """Running count/total/min/max plus a bounded sample for percentiles."""
+
+    def __init__(self) -> None:
+        self.count = 0
+        self.total = 0.0
+        self.min: float | None = None
+        self.max: float | None = None
+        self._sample: list[float] = []
+
+    def record(self, v: float) -> None:
+        v = float(v)
+        self.count += 1
+        self.total += v
+        self.min = v if self.min is None else min(self.min, v)
+        self.max = v if self.max is None else max(self.max, v)
+        if len(self._sample) < _P_KEEP:
+            self._sample.append(v)
+        else:                       # keep a deterministic striding reservoir
+            idx = self.count % _P_KEEP
+            self._sample[idx] = v
+
+    def percentile(self, q: float) -> float | None:
+        if not self._sample:
+            return None
+        s = sorted(self._sample)
+        k = min(len(s) - 1, max(0, int(round(q * (len(s) - 1)))))
+        return s[k]
+
+    def snapshot(self) -> dict:
+        mean = self.total / self.count if self.count else None
+        return {"count": self.count, "total": self.total, "mean": mean,
+                "min": self.min, "max": self.max,
+                "p50": self.percentile(0.50), "p95": self.percentile(0.95)}
+
+
+@dataclasses.dataclass
+class _CommEpoch:
+    """One build's ledger: the stamped report + runtime accumulation."""
+
+    report: CommReport
+    invocations: int = 0
+    actual_nonlocal_bytes: float = 0.0
+    actual_nonlocal_msgs: float = 0.0
+    actual_dp_bytes: float = 0.0
+
+    def record(self, n: int = 1) -> None:
+        self.invocations += n
+        self.actual_nonlocal_bytes += n * self.report.nonlocal_bytes
+        self.actual_nonlocal_msgs += n * self.report.nonlocal_msgs
+        self.actual_dp_bytes += n * self.report.dp_bytes
+
+    def reconcile(self) -> dict:
+        pred_b = self.invocations * self.report.nonlocal_bytes
+        pred_m = self.invocations * self.report.nonlocal_msgs
+        return {
+            "label": self.report.label,
+            "invocations": self.invocations,
+            "predicted_nonlocal_bytes": pred_b,
+            "predicted_nonlocal_msgs": pred_m,
+            "actual_nonlocal_bytes": self.actual_nonlocal_bytes,
+            "actual_nonlocal_msgs": self.actual_nonlocal_msgs,
+            "actual_dp_bytes": self.actual_dp_bytes,
+            "match": (math.isclose(pred_b, self.actual_nonlocal_bytes,
+                                   rel_tol=0, abs_tol=1e-6)
+                      and math.isclose(pred_m, self.actual_nonlocal_msgs,
+                                       rel_tol=0, abs_tol=1e-6)),
+        }
+
+    def snapshot(self) -> dict:
+        out = self.reconcile()
+        out["report"] = self.report.asdict()
+        # trend-tracked leaves (scripts/bench_trend.py keys on these names):
+        out["comm_nonlocal_bytes_per_step"] = self.report.nonlocal_bytes
+        out["comm_nonlocal_msgs_per_step"] = self.report.nonlocal_msgs
+        return out
+
+
+class MetricsRegistry:
+    """Thread-safe named metrics + the per-label comm ledger."""
+
+    def __init__(self) -> None:
+        self._lock = threading.Lock()
+        self._counters: dict[str, Counter] = {}
+        self._gauges: dict[str, Gauge] = {}
+        self._histograms: dict[str, Histogram] = {}
+        self._comm: dict[str, _CommEpoch] = {}
+        self._comm_archive: dict[str, list[dict]] = {}
+
+    # -- plain metrics -------------------------------------------------------
+    def counter(self, name: str) -> Counter:
+        with self._lock:
+            return self._counters.setdefault(name, Counter())
+
+    def gauge(self, name: str) -> Gauge:
+        with self._lock:
+            return self._gauges.setdefault(name, Gauge())
+
+    def histogram(self, name: str) -> Histogram:
+        with self._lock:
+            return self._histograms.setdefault(name, Histogram())
+
+    def count(self, name: str, n: float = 1) -> None:
+        self.counter(name).inc(n)
+
+    def observe(self, name: str, v: float) -> None:
+        self.histogram(name).record(v)
+
+    # -- comm ledger ---------------------------------------------------------
+    def attach_comm_report(self, label: str, report: CommReport) -> None:
+        """Stamp a label with a freshly-compiled step's report. An earlier
+        epoch under the same label (elastic restart, re-resolved layout) is
+        archived with its final reconciliation, so a rebuild never mixes two
+        builds' accounting in one ledger."""
+        with self._lock:
+            old = self._comm.get(label)
+            if old is not None:
+                self._comm_archive.setdefault(label, []).append(
+                    old.snapshot())
+            self._comm[label] = _CommEpoch(report=report)
+
+    def comm_report(self, label: str) -> CommReport | None:
+        epoch = self._comm.get(label)
+        return epoch.report if epoch else None
+
+    def record_comm(self, label: str, n: int = 1) -> None:
+        """Account ``n`` executed invocations of the compiled step stamped
+        under ``label``. Raises if nothing was stamped — running a step the
+        telemetry layer never saw compiled is exactly the bug this catches."""
+        epoch = self._comm.get(label)
+        if epoch is None:
+            raise KeyError(f"no CommReport attached under {label!r} — "
+                           f"stamp the compiled step before recording runs")
+        epoch.record(n)
+
+    def reconcile(self, label: str) -> dict:
+        epoch = self._comm.get(label)
+        if epoch is None:
+            raise KeyError(f"no CommReport attached under {label!r}")
+        return epoch.reconcile()
+
+    def reconcile_all(self) -> dict[str, dict]:
+        return {label: e.reconcile() for label, e in self._comm.items()}
+
+    # -- export --------------------------------------------------------------
+    def snapshot(self) -> dict:
+        """JSON-ready view. Histogram means are mirrored as
+        ``gauges["<name>_mean"]`` so the trend gate's suffix matching
+        (``step_time_s_mean`` etc.) sees them without schema knowledge."""
+        with self._lock:
+            gauges: dict[str, Any] = {k: g.value
+                                      for k, g in self._gauges.items()}
+            hists = {k: h.snapshot() for k, h in self._histograms.items()}
+            for k, snap in hists.items():
+                if snap["mean"] is not None:
+                    gauges[f"{k}_mean"] = snap["mean"]
+            return {
+                "counters": {k: c.value for k, c in self._counters.items()},
+                "gauges": gauges,
+                "histograms": hists,
+                "comm": {label: e.snapshot()
+                         for label, e in self._comm.items()},
+                "comm_archive": dict(self._comm_archive),
+            }
+
+    def dump(self, path: str, *, meta: dict | None = None,
+             merge: bool = True) -> dict:
+        """Persist ``snapshot()`` to ``path``. With ``merge`` (default) an
+        existing file's sections are updated key-by-key instead of replaced,
+        so benchmark subprocesses invoked one after another compose a single
+        ``results/metrics.json``."""
+        snap = self.snapshot()
+        if meta is not None:
+            snap["meta"] = meta
+        if merge and os.path.exists(path):
+            try:
+                with open(path) as f:
+                    old = json.load(f)
+            except (OSError, ValueError):
+                old = {}
+            for section, vals in snap.items():
+                if isinstance(vals, dict) and isinstance(old.get(section),
+                                                         dict):
+                    old[section].update(vals)
+                else:
+                    old[section] = vals
+            snap = old
+        d = os.path.dirname(path)
+        if d:
+            os.makedirs(d, exist_ok=True)
+        with open(path, "w") as f:
+            json.dump(snap, f, indent=1, sort_keys=True)
+        return snap
+
+
+# ---------------------------------------------------------------------------
+# process-global registry
+# ---------------------------------------------------------------------------
+_default = MetricsRegistry()
+
+
+def get_registry() -> MetricsRegistry:
+    return _default
+
+
+def set_registry(registry: MetricsRegistry) -> MetricsRegistry:
+    """Swap the process-global registry (tests); returns the previous one."""
+    global _default
+    prev, _default = _default, registry
+    return prev

@@ -122,15 +122,17 @@ class BlockPrefetch:
             return C.allgather_start(x, outer, local,
                                      algorithm="locality_bruck", tiled=True,
                                      assume_varying=True)
-        return jax.tree.map(go, slice_shards, self.dims, self.axes)
+        with jax.named_scope("repro:prefetch_start"):
+            return jax.tree.map(go, slice_shards, self.dims, self.axes)
 
     def finish(self, pending):
         def done(p, k):
             if k < 0:
                 return p
             return jnp.moveaxis(C.allgather_finish(p), 0, k)
-        return jax.tree.map(done, pending, self.dims,
-                            is_leaf=lambda v: isinstance(v, C.PendingCollective))
+        with jax.named_scope("repro:prefetch_finish"):
+            return jax.tree.map(done, pending, self.dims,
+                                is_leaf=lambda v: isinstance(v, C.PendingCollective))
 
 
 # ---------------------------------------------------------------------------
@@ -373,8 +375,9 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
             shard = make_shard_fn(mesh, seq_shard=seq_shard)
 
             def one(mb):
-                return jax.value_and_grad(loss_fn, has_aux=True)(
-                    params, mb, shard)
+                with jax.named_scope("repro:compute"):
+                    return jax.value_and_grad(loss_fn, has_aux=True)(
+                        params, mb, shard)
 
             (_, metrics), grads = _accumulated(one, batch)
             return grads, metrics
@@ -405,27 +408,30 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
             if k < 0:
                 return shard_leaf.astype(cfg.dtype) \
                     if shard_leaf.dtype == jnp.float32 else shard_leaf
-            x = shard_leaf.astype(cfg.dtype)       # gather the bf16 copy
-            x = jnp.moveaxis(x, k, 0)
-            g_outer, g_local = gather_outer_local(ax)
-            if g_outer:
-                full = C.locality_bruck_allgather(x, g_outer, g_local,
-                                                  tiled=True,
-                                                  assume_varying=True)
-            else:
-                full = C.bruck_allgather(x, g_local or ("data",), tiled=True,
-                                         assume_varying=True)
-            return jnp.moveaxis(full, 0, k)
+            with jax.named_scope("repro:fsdp_gather"):
+                x = shard_leaf.astype(cfg.dtype)   # gather the bf16 copy
+                x = jnp.moveaxis(x, k, 0)
+                g_outer, g_local = gather_outer_local(ax)
+                if g_outer:
+                    full = C.locality_bruck_allgather(x, g_outer, g_local,
+                                                      tiled=True,
+                                                      assume_varying=True)
+                else:
+                    full = C.bruck_allgather(x, g_local or ("data",),
+                                             tiled=True, assume_varying=True)
+                return jnp.moveaxis(full, 0, k)
 
         def sync_pod(t):
             if not outer:
                 return t / dp_size
-            return C.allreduce(t, (), outer, algorithm="locality",
-                               outer_algorithm=alg[1]) / dp_size
+            with jax.named_scope("repro:grad_sync"):
+                return C.allreduce(t, (), outer, algorithm="locality",
+                                   outer_algorithm=alg[1]) / dp_size
 
         def sync_full(t):
-            return C.allreduce(t, outer, local, algorithm=alg[0],
-                               outer_algorithm=alg[1]) / dp_size
+            with jax.named_scope("repro:grad_sync"):
+                return C.allreduce(t, outer, local, algorithm=alg[0],
+                                   outer_algorithm=alg[1]) / dp_size
 
         # the double-buffered pipeline hook: block shards stay sharded into
         # the forward, gathered per scanned layer with depth-ahead issue
@@ -449,9 +455,11 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                                  if k != "blocks"}
                         full = jax.tree.map(_gather, rest, rdims, raxes)
                         full["blocks"] = shards["blocks"]
-                        return loss_fn(full, mb, shard, prefetch=hook)
+                        with jax.named_scope("repro:compute"):
+                            return loss_fn(full, mb, shard, prefetch=hook)
                     full = jax.tree.map(_gather, shards, fsdp_dims, fsdp_axs)
-                    return loss_fn(full, mb, shard)
+                    with jax.named_scope("repro:compute"):
+                        return loss_fn(full, mb, shard)
                 return jax.value_and_grad(sharded_loss, has_aux=True)(params)
 
             # microbatches accumulate per-device; the (locality-aware) DP
@@ -578,7 +586,8 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
         grads = jax.tree.map(
             lambda g, s: jax.lax.with_sharding_constraint(g, s),
             grads, pspecs)
-        new_state, opt_metrics = optimizer.apply(state, grads)
+        with jax.named_scope("repro:optimizer"):
+            new_state, opt_metrics = optimizer.apply(state, grads)
         return new_state, {**metrics, **opt_metrics}
 
     jit_kw: dict[str, Any] = dict(

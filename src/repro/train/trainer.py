@@ -9,9 +9,20 @@ straggler monitoring and (simulated) failure recovery:
   restore the newest complete checkpoint and continue — optionally onto a
   *different* mesh (elastic restart; the data pipeline is stateless so the
   batch stream resumes exactly at the restored step);
-* step wall-times feed the StepMonitor; straggler events are recorded in
-  ``trainer.events`` (a real deployment would export them to the fleet
-  controller).
+* step wall-times feed the StepMonitor; events are structured
+  ``TelemetryEvent``s in ``trainer.events`` (str subclasses — the legacy
+  substring consumers keep working) and are logged the moment they occur,
+  never gated behind ``log_every``;
+* telemetry (DESIGN.md §8): every phase runs under a tracer span
+  (``train/step``, ``train/data``, ``train/compile``, checkpoint spans from
+  the store), step metrics publish into the metrics registry, and — when
+  ``comm_telemetry`` is on — the step is AOT-compiled so its HLO can be
+  scanned once by ``collective_stats``: the resulting ``CommReport``
+  (expected inter-pod bytes/msgs per invocation) is stamped into the
+  registry under ``"train/step:<mode>"`` and accounted per executed step,
+  making
+  predicted-vs-actual comm reconciliation exact by construction and any
+  unstamped/stale step path a visible mismatch.
 """
 from __future__ import annotations
 
@@ -26,6 +37,8 @@ from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticLM
 from repro.optim import AdamW
 from repro.runtime import FaultInjector, SimulatedFault, StepMonitor
+from repro import telemetry
+from repro.telemetry import TelemetryEvent
 from .step import StepArtifacts, custom_batch_specs, init_state, make_train_step
 
 
@@ -45,13 +58,19 @@ class TrainerConfig:
     lr: float = 3e-4
     seed: int = 0
     straggler_k: float = 3.0
+    # AOT-compile the step and stamp its CommReport (HLO comm ground truth)
+    # into the metrics registry; falls back to the plain jitted step (with a
+    # "warning" event) if the AOT path is unavailable on this backend.
+    comm_telemetry: bool = True
 
 
 class Trainer:
     def __init__(self, model_cfg, mesh, tcfg: TrainerConfig,
                  *, data: SyntheticLM | None = None,
                  fault_injector: FaultInjector | None = None,
-                 log: Callable[[str], None] = print):
+                 log: Callable[[str], None] = print,
+                 tracer: telemetry.Tracer | None = None,
+                 registry: telemetry.MetricsRegistry | None = None):
         self.model_cfg = model_cfg
         self.mesh = mesh
         self.tcfg = tcfg
@@ -61,22 +80,43 @@ class Trainer:
         self.faults = fault_injector or FaultInjector()
         self.monitor = StepMonitor(k=tcfg.straggler_k)
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep_last=tcfg.keep_last)
-        self.events: list[str] = []
+        self.events: list[TelemetryEvent] = []
         self.log = log
+        self.tracer = tracer or telemetry.get_tracer()
+        self.registry = registry or telemetry.get_registry()
         self.metrics_history: list[dict] = []
+        self.comm_report: telemetry.CommReport | None = None
         self._build(mesh)
         self._init_or_restore()
 
     # ------------------------------------------------------------------
+    def _event(self, message: str, *, kind: str = "info",
+               attrs: dict | None = None, log: bool = True) -> TelemetryEvent:
+        """Append one structured event; surface it through ``log``
+        immediately (events must never be lost to ``log_every`` skipping a
+        step's output)."""
+        ev = TelemetryEvent(message, kind=kind, step=getattr(self, "step",
+                                                             None),
+                            attrs=attrs)
+        self.events.append(ev)
+        if log:
+            self.log(f"[trainer] {ev}")
+        return ev
+
+    def _abstract_batch(self) -> dict:
+        t = self.tcfg
+        return custom_batch_specs(self.model_cfg, t.global_batch, t.seq_len)
+
     def _build(self, mesh) -> None:
         self.mesh = mesh
         t = self.tcfg
-        self.artifacts = make_train_step(
-            self.model_cfg, mesh,
-            optimizer=AdamW(lr=t.lr),
-            grad_sync=t.grad_sync, fsdp=t.fsdp, seq_shard=t.seq_shard,
-            prefetch_depth=t.prefetch_depth,
-            shape=custom_batch_specs(self.model_cfg, t.global_batch, t.seq_len))
+        with self.tracer.span("train/build", mesh=str(mesh.devices.shape)):
+            self.artifacts = make_train_step(
+                self.model_cfg, mesh,
+                optimizer=AdamW(lr=t.lr),
+                grad_sync=t.grad_sync, fsdp=t.fsdp, seq_shard=t.seq_shard,
+                prefetch_depth=t.prefetch_depth,
+                shape=self._abstract_batch())
         if t.grad_sync == "auto":
             self.log(f"[trainer] grad_sync=auto -> "
                      f"{self.artifacts.grad_sync} "
@@ -86,14 +126,54 @@ class Trainer:
             self.log(f"[trainer] prefetch_depth=auto -> "
                      f"{self.artifacts.prefetch_depth} "
                      f"({self.artifacts.prefetch_source})")
+        self._stamp_comm(t)
+
+    def _stamp_comm(self, t: TrainerConfig) -> None:
+        """AOT-compile the step ONCE ahead of time: the compiled executable
+        both serves the train loop (no second jit compile on first step) and
+        yields the HLO text the CommReport is derived from. Compile time
+        lands in the registry as a tracked gauge."""
+        self.comm_report = None
+        self._step_callable = self.artifacts.step_fn
+        # label qualified by the RESOLVED sync mode so A/B trainers in one
+        # process (locality vs xla) keep separate reconciliation ledgers
+        self.comm_label = f"train/step:{self.artifacts.grad_sync}"
+        if not t.comm_telemetry:
+            return
+        try:
+            with self.tracer.span("train/compile"):
+                t0 = time.perf_counter()
+                lowered = self.artifacts.step_fn.lower(
+                    self.artifacts.abstract_state, self._abstract_batch())
+                compiled = lowered.compile()
+                compile_s = time.perf_counter() - t0
+            hlo = compiled.as_text()
+            report = telemetry.comm_report(hlo, self.mesh,
+                                           label=self.comm_label)
+            self._step_callable = compiled
+            self.comm_report = report
+            self.registry.gauge("train/compile_time_s").set(compile_s)
+            self.registry.attach_comm_report(self.comm_label, report)
+            self._event(
+                f"comm report: {report.nonlocal_bytes:.0f} inter-pod B / "
+                f"{report.nonlocal_msgs:.0f} msgs, {report.dp_bytes:.0f} "
+                f"DP-crossing B per step "
+                f"(locality_schedule={report.has_locality_schedule})",
+                kind="comm", attrs=report.asdict(), log=False)
+        except Exception as e:            # pragma: no cover - backend quirks
+            self._event(f"comm telemetry unavailable: "
+                        f"{type(e).__name__}: {e}", kind="warning")
 
     def _init_or_restore(self) -> None:
-        restored = self.ckpt.restore(self.artifacts.abstract_state,
-                                     shardings=self.artifacts.state_shardings)
+        with self.tracer.span("train/restore"):
+            restored = self.ckpt.restore(self.artifacts.abstract_state,
+                                         shardings=self.artifacts.state_shardings)
         if restored is not None:
             ckpt_step, self.state = restored
             self.step = ckpt_step
-            self.events.append(f"restored checkpoint at step {ckpt_step}")
+            self._event(f"restored checkpoint at step {ckpt_step}",
+                        kind="restore", attrs={"ckpt_step": ckpt_step},
+                        log=False)
             self.log(f"[trainer] restored step {ckpt_step}")
         else:
             self.state = init_state(self.model_cfg, self.mesh, self.artifacts,
@@ -130,27 +210,46 @@ class Trainer:
 
     def run(self) -> dict[str, Any]:
         t = self.tcfg
+        reg = self.registry
         while self.step < t.steps:
             try:
-                batch = self._augment(self.data.batch(self.step))
-                t0 = time.perf_counter()
-                self.state, metrics = self.artifacts.step_fn(
-                    self.state, self._device_batch(batch))
-                jax.block_until_ready(metrics["loss"])
-                dt = time.perf_counter() - t0
+                with self.tracer.span("train/step", step=self.step):
+                    with self.tracer.span("train/data"):
+                        batch = self._augment(self.data.batch(self.step))
+                        device_batch = self._device_batch(batch)
+                    t0 = time.perf_counter()
+                    with self.tracer.span("train/step_fn"):
+                        self.state, metrics = self._step_callable(
+                            self.state, device_batch)
+                        jax.block_until_ready(metrics["loss"])
+                    dt = time.perf_counter() - t0
                 self.faults.check(self.step)
             except SimulatedFault as e:
-                self.events.append(str(e))
+                self._event(str(e), kind="fault", log=False)
+                reg.count("train/faults")
                 self.log(f"[trainer] {e} -> recovering")
                 self.recover()
                 continue
-            self.events.extend(self.monitor.record(
-                dt, algorithm=self.artifacts.grad_algorithm))
+            for ev in self.monitor.record(
+                    dt, algorithm=self.artifacts.grad_algorithm):
+                # surfaced immediately — a straggler between log_every
+                # boundaries used to vanish into the event list silently
+                self.events.append(ev)
+                self.log(f"[trainer] {ev}")
+                if ev.kind == "straggler":
+                    reg.count("train/stragglers")
             self.step += 1
+            reg.count("train/steps")
+            reg.observe("train/step_time_s", dt)
+            reg.gauge("train/tokens_per_s").set(
+                t.global_batch * t.seq_len / dt if dt else 0.0)
+            if self.comm_report is not None:
+                reg.record_comm(self.comm_label)
             m = {k: float(v) for k, v in metrics.items()}
             m["step"], m["dt"] = self.step, dt
             m["grad_algorithm"] = self.artifacts.grad_algorithm
             self.metrics_history.append(m)
+            reg.gauge("train/loss").set(m["loss"])
             if self.step % t.log_every == 0 or self.step == t.steps:
                 self.log(f"[trainer] step {self.step:5d} "
                          f"loss {m['loss']:.4f} gnorm {m['grad_norm']:.3f} "

@@ -59,7 +59,14 @@ def check_arch(arch, mesh8, mesh1, n_layers=2):
     st = eng_loc.stats()
     assert st["decode_steps"] == NEW and st["combine_steps"] == NEW
     assert eng_loc.art.combine_layers == n_layers, eng_loc.art.combine_layers
-    assert st["combine_bytes"] == NEW * eng_loc.combine.nbytes * n_layers
+    # combine traffic is sourced from the compiled decode HLO (CommReport),
+    # not the analytic nbytes x layer-count estimate
+    comm = st["comm"]
+    per_step = comm["per_step"]["dp_bytes"]
+    assert per_step > 0, comm
+    assert st["combine_bytes"] == NEW * per_step, st
+    rec = comm["reconcile"]
+    assert rec["invocations"] == NEW and rec["match"], rec
     return t_ref
 
 mesh8 = jax.make_mesh((8,), ("data",))
@@ -308,7 +315,10 @@ def test_engine_stats_and_next_token_single_device():
     toks = eng.generate(prompts, 3)
     assert toks.shape == (2, 3)
     st = eng.stats()
-    assert st == {"decode_steps": 3, "combine_steps": 0, "combine_bytes": 0}
+    assert st["decode_steps"] == 3
+    assert st["combine_steps"] == 0 and st["combine_bytes"] == 0
+    assert "comm" not in st          # combine "none": telemetry stays off
+    assert eng.comm_report is None
     # the sampling rule is the one helper: clamps padded-vocab ids
     big = jnp.zeros((2, 1, cfg.padded_vocab))
     big = big.at[:, :, cfg.padded_vocab - 1].set(9.0)
