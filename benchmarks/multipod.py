@@ -19,6 +19,14 @@ Paper Fig. 7/8 analogue on the compiled artifact, two halves:
      over ('pod','data')) vs GSPMD's implicit flat combine
      (combine="xla").
 
+   * serve cache migration on a 2×4 ('pod','data') mesh: the scheduler's
+     cross-pod KV-slab replication through the explicit ``cache_migrate``
+     collective (locality-Bruck schedule inside a manual shard_map region)
+     vs GSPMD's implicit flat resharding of the same donor-layout input —
+     plus a runtime half that forces four real migrations through the
+     continuous scheduler and requires every comm-ledger label (prefill,
+     migrate, decode) to reconcile predicted == actual exactly.
+
    * BOTH halves again on THREE-pod meshes (3×8 ('pod','data')) — the
      non-power region count that exercises Algorithm 2's allgatherv
      adaptation (partial final-round payloads; Bruck-transpose grad
@@ -90,6 +98,7 @@ from repro import configs
 from repro.core.hlo_analysis import collective_stats
 from repro.core.topology import device_pod_map
 from repro.launch.mesh import make_production_mesh
+from repro.serve import ServeSpec
 from repro.serve.engine import cache_specs, make_serve_fns
 
 mesh = make_production_mesh(multi_pod=True)          # 2x16x16
@@ -99,15 +108,17 @@ jax.set_mesh(mesh)
 cfg = dataclasses.replace(configs.get_smoke("llama3.2-3b"), n_layers=2,
                           n_heads=32, n_kv_heads=16)
 B, L = 1, 64                                          # seq-sharded over 32
-art = make_serve_fns(cfg, mesh, batch=B, cache_len=L, combine="locality")
+art = make_serve_fns(cfg, mesh, ServeSpec(batch=B, cache_len=L,
+                                          combine="locality"))
 assert art.combine.algorithm == "locality", art.combine
 assert art.combine.p == 32 and art.combine.p_local == 16, art.combine
 assert art.seq_axes == ("pod", "data"), art.seq_axes
+assert art.decode_fn_locality is not None, art
 c_specs = cache_specs(cfg, B, L)
 tok = jax.ShapeDtypeStruct((B, 1), np.int32)
 pod_map = device_pod_map(mesh, ("pod",))
 out = {"mesh": "2x16x16 (pod,data,model)", "n_devices": 512,
-       "combine_layers": art.combine_layers}
+       "combine": art.combine.algorithm}
 for name, fn in (("locality", art.decode_fn_locality),
                  ("flat_xla", art.decode_fn_xla)):
     hlo = fn.lower(art.abstract_params, c_specs, tok).compile().as_text()
@@ -130,6 +141,7 @@ import jax, numpy as np
 from repro import configs
 from repro.core.hlo_analysis import collective_stats, op_payloads
 from repro.core.topology import device_pod_map
+from repro.serve import ServeSpec
 from repro.serve.engine import cache_specs, make_serve_fns
 from repro.train.step import custom_batch_specs, make_train_step
 
@@ -165,13 +177,15 @@ out["train_fsdp_3pod"] = train
 
 # --- serve decode: hierarchical combine over q=3 pods vs flat GSPMD -------
 B, L = 1, 48                                  # seq-sharded over 24
-art = make_serve_fns(cfg, mesh, batch=B, cache_len=L, combine="locality")
+art = make_serve_fns(cfg, mesh, ServeSpec(batch=B, cache_len=L,
+                                          combine="locality"))
 assert art.combine.algorithm == "locality", art.combine
 assert art.combine.p == 24 and art.combine.p_local == 8, art.combine
 assert art.seq_axes == ("pod", "data"), art.seq_axes
+assert art.decode_fn_locality is not None, art
 c_specs = cache_specs(cfg, B, L)
 tok = jax.ShapeDtypeStruct((B, 1), np.int32)
-serve = {"combine_layers": art.combine_layers}
+serve = {"combine": art.combine.algorithm}
 for name, fn in (("locality", art.decode_fn_locality),
                  ("flat_xla", art.decode_fn_xla)):
     hlo = fn.lower(art.abstract_params, c_specs, tok).compile().as_text()
@@ -200,6 +214,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro import configs
 from repro.data import SyntheticLM
 from repro.optim import AdamW
+from repro.serve import ServeSpec
 from repro.serve.engine import Engine
 from repro.train.step import custom_batch_specs, init_state, make_train_step
 
@@ -254,11 +269,11 @@ toks = {}
 for name, kw in (("pod_loc", dict(combine="locality")),
                  ("pod_xla", dict(combine="xla")),
                  ("data_loc", dict(combine="locality", seq_axes=("data",)))):
-    eng = Engine(cfg, mesh, params, batch=1, cache_len=48, **kw)
+    eng = Engine(cfg, mesh, params, ServeSpec(batch=1, cache_len=48, **kw))
     if name == "pod_loc":
         assert eng.combine.algorithm == "locality", eng.combine
         assert eng.combine.p == 6 and eng.combine.p_local == 2, eng.combine
-        assert eng.art.combine_layers == cfg.n_layers, eng.art.combine_layers
+        assert eng.art.decode_fn_locality is not None, eng.art
     toks[name] = eng.generate(prompts, NEW)
 for a in ("pod_xla", "data_loc"):
     assert np.array_equal(toks["pod_loc"], toks[a]), (a, toks)
@@ -272,6 +287,7 @@ import json, dataclasses
 import jax, jax.numpy as jnp, numpy as np
 from repro import configs
 from repro.data import SyntheticLM
+from repro.serve import ServeSpec
 from repro.serve.engine import Engine
 from repro.train.step import custom_batch_specs, init_state, make_train_step
 
@@ -322,17 +338,92 @@ toks, logits_meta = {}, {}
 for name, kw in (("pod_loc", dict(combine="locality")),
                  ("pod_xla", dict(combine="xla")),
                  ("data_loc", dict(combine="locality", seq_axes=("data",)))):
-    eng = Engine(cfg, mesh, params, batch=1, cache_len=32, **kw)
+    eng = Engine(cfg, mesh, params, ServeSpec(batch=1, cache_len=32, **kw))
     if name == "pod_loc":
         assert eng.combine.algorithm == "locality", eng.combine
         assert eng.combine.p == 8 and eng.combine.p_local == 4, eng.combine
         assert eng.art.seq_axes == ("pod", "data"), eng.art.seq_axes
-        assert eng.art.combine_layers == cfg.n_layers, eng.art.combine_layers
+        assert eng.art.decode_fn_locality is not None, eng.art
     toks[name] = eng.generate(prompts, NEW)
 for a in ("pod_xla", "data_loc"):
     assert np.array_equal(toks["pod_loc"], toks[a]), (a, toks)
 out["decode"] = {"tokens_exact_equal": True, "steps": NEW,
                  "tokens": toks["pod_loc"].tolist()}
+print("JSON" + json.dumps(out))
+"""
+
+
+MIGRATE_HLO_CODE = r"""
+import json, dataclasses
+import jax, jax.numpy as jnp, numpy as np
+from repro import configs
+from repro.core.hlo_analysis import collective_stats
+from repro.core.topology import device_pod_map
+from repro.models import transformer
+from repro.serve import Engine, Request, ServeSpec, StepClock
+from repro.serve.scheduler import make_migrate_insert_fn
+
+mesh = jax.make_mesh((2, 4), ("pod", "data"))
+jax.set_mesh(mesh)
+cfg = dataclasses.replace(configs.get_smoke("llama3.2-3b"), n_layers=2,
+                          dtype=jnp.float32)
+params = transformer.init_params(jax.random.PRNGKey(0), cfg)
+pod_map = device_pod_map(mesh, ("pod",))
+out = {"mesh": "2x4 (pod,data)", "n_devices": 8}
+
+spec = ServeSpec(batch=8, cache_len=32, page_len=8, migrate="locality_bruck")
+eng = Engine(cfg, mesh, params, spec, clock=StepClock())
+sched = eng.scheduler
+assert sched._migrate_fn is not None, "no migrate path on a 2-pod mesh?"
+
+# --- HLO ground truth: explicit cache_migrate vs flat GSPMD reshard ------
+# Both variants consume the SAME donor-layout input (a B=1 prefill cache,
+# KV slabs sequence-sharded over ('pod','data')) and produce the same
+# batch-sharded serving cache; the only difference is who moves the slab —
+# the locality-Bruck allgather or GSPMD's implicit flat resharding.
+a_cache = jax.tree.map(lambda s: jax.ShapeDtypeStruct(s.shape, s.dtype),
+                       sched.abstract_cache)
+a_req = transformer.cache_specs(cfg, 1, spec.cache_len)
+a_row = jax.ShapeDtypeStruct((), jnp.int32)
+for name, alg in (("locality", "locality_bruck"), ("flat_xla", "gspmd")):
+    fn = make_migrate_insert_fn(mesh, spec.batch, sched.cache_sh,
+                                sched.donor_specs, sched.donor_sh, alg)
+    hlo = fn.lower(a_cache, a_req, a_row).compile().as_text()
+    st = collective_stats(hlo, pod_map)
+    out[name] = {
+        "counts": dict(st.counts),
+        "permute_edges_nonlocal": st.permute_edges_nonlocal,
+        "permute_bytes_nonlocal": st.permute_bytes_nonlocal,
+        "group_msgs_nonlocal": st.group_msgs_nonlocal,
+        "group_bytes_nonlocal": st.group_bytes_nonlocal,
+        "nonlocal_msgs": st.nonlocal_msgs,
+        "nonlocal_bytes": st.nonlocal_bytes,
+    }
+
+# --- runtime ledger: forced cross-pod migrations reconcile exactly -------
+# 8 requests, every one homed in pod 0: four land in pod-0 rows (local
+# insert), four spill into pod-1 rows — each spill is one cache migration
+# the comm ledger must account exactly (predicted == actual, not approx)
+rng = np.random.default_rng(0)
+for i in range(8):
+    eng.submit(Request(tokens=rng.integers(0, cfg.vocab_size, (6,),
+                                           ).astype(np.int32),
+                       max_new=4, home_pod=0, arrival_s=0.0))
+res = eng.drain()
+assert len(res) == 8, len(res)
+assert all(r.finish_reason == "length" for r in res.values()), res
+assert sched._migrations == 4, sched._migrations
+assert sum(r.migrated for r in res.values()) == 4, res
+comm = eng.scheduler.stats()["comm"]
+mig = comm["serve/migrate:locality_bruck"]
+assert mig["match"] is True, comm
+assert mig["predicted_nonlocal_bytes"] > 0, comm      # crossed the DCN
+assert all(rec["match"] for rec in comm.values()), comm
+out["ledger"] = {k: {"match": bool(v["match"]),
+                     "invocations": v["invocations"],
+                     "nonlocal_bytes": v["predicted_nonlocal_bytes"]}
+                 for k, v in comm.items()}
+out["migrations"] = sched._migrations
 print("JSON" + json.dumps(out))
 """
 
@@ -352,6 +443,7 @@ def main() -> list[tuple]:
     for key, code, devices in (("train_fsdp", TRAIN_HLO_CODE, 32),
                                ("serve_combine", SERVE_HLO_CODE, 512),
                                ("threepod", THREEPOD_HLO_CODE, 24),
+                               ("cache_migrate", MIGRATE_HLO_CODE, 8),
                                ("numerics", NUMERICS_CODE, 8),
                                ("numerics_3pod", NUMERICS3_CODE, 6)):
         stdout = run_multidevice(code, devices=devices, timeout=3000)
@@ -367,7 +459,7 @@ def main() -> list[tuple]:
 
     rows = []
     for key in ("train_fsdp", "serve_combine",
-                "train_fsdp_3pod", "serve_combine_3pod"):
+                "train_fsdp_3pod", "serve_combine_3pod", "cache_migrate"):
         cell = results[key]
         loc, flat = cell["locality"], cell["flat_xla"]
         red = _reduction(cell)
@@ -405,6 +497,11 @@ def main() -> list[tuple]:
             f"locality={loc['nonlocal_msgs']:.0f} "
             f"flat={flat['nonlocal_msgs']:.0f} "
             f"ratio={red['nonlocal_msgs_ratio']:.4f}"))
+    mig = results["cache_migrate"]
+    assert all(rec["match"] for rec in mig["ledger"].values()), mig["ledger"]
+    rows.append(("multipod/cache_migrate/ledger", None,
+                 f"migrations={mig['migrations']} labels="
+                 f"{len(mig['ledger'])} all_reconciled=True"))
     for nkey in ("numerics", "numerics_3pod"):
         num = results[nkey]
         assert num["train"]["loss_bitwise_equal"], num

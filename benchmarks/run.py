@@ -18,6 +18,13 @@
     ``BENCH_overlap.json`` and fails if the prefetched pipeline does not
     reduce exposed communication (or breaks exact equality).
 
+``python benchmarks/run.py serve_traffic``
+    Continuous batching vs lockstep waves under Poisson and bursty request
+    traces on a deterministic virtual clock (DESIGN.md §9): per-request
+    p50/p99 latency and SLO goodput of the Scheduler vs the wave baseline;
+    writes ``BENCH_serve_traffic.json`` and fails unless continuous
+    batching wins p99 latency AND SLO goodput on every trace.
+
 ``python benchmarks/run.py multipod``
     The ('pod','data') sharding-domain proof (DESIGN.md §6): compiled-HLO
     non-local byte/message comparison of the locality train-FSDP and
@@ -84,6 +91,8 @@ def main() -> None:
                    add_help=False)
     sub.add_parser("overlap", help="eager vs prefetched pipeline benchmark")
     sub.add_parser("multipod", help="('pod','data') non-local traffic proof")
+    sub.add_parser("serve_traffic",
+                   help="continuous batching vs lockstep waves")
     # default to `bench` for backward compatibility: `run.py --only fig7`
     argv = sys.argv[1:]
     if argv[:1] == ["tune"]:
@@ -99,6 +108,17 @@ def main() -> None:
                 overlap.main()
         finally:                   # keep artifacts from failed gate runs
             telemetry_artifacts("overlap")
+        return
+    if argv[:1] == ["serve_traffic"]:
+        from repro import telemetry
+        from . import serve_traffic
+        from .common import telemetry_artifacts
+        print("name,us_per_call,derived")
+        try:
+            with telemetry.span("bench/serve_traffic"):
+                serve_traffic.main()
+        finally:                   # keep artifacts from failed gate runs
+            telemetry_artifacts("serve_traffic")
         return
     if argv[:1] == ["multipod"]:
         from repro import telemetry

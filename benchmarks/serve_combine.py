@@ -23,6 +23,7 @@ import jax, jax.numpy as jnp, numpy as np, dataclasses
 from repro import configs
 from repro.models import transformer
 from repro.serve.engine import make_serve_fns, resolve_cache_combine
+from repro.serve.spec import ServeSpec
 from repro.core.hlo_analysis import (allreduce_combiners, collective_stats,
                                      op_payloads)
 
@@ -42,7 +43,8 @@ out = {"payload_bytes": choice.nbytes, "p": choice.p,
        "auto_resolution": {"algorithm": choice.algorithm,
                            "source": choice.source}}
 for alg in ("xla", "locality"):
-    art = make_serve_fns(cfg, mesh, batch=B, cache_len=CL, combine=alg)
+    art = make_serve_fns(cfg, mesh, ServeSpec(batch=B, cache_len=CL,
+                                          combine=alg))
     fn = art.decode_fn
     hlo = fn.lower(art.abstract_params, cache_sds, tok_sds).compile().as_text()
     st = collective_stats(hlo)

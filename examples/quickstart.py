@@ -18,7 +18,7 @@ from repro.core.autotune import model_costs
 from repro.data import SyntheticLM
 from repro.models import transformer
 from repro.optim import AdamW, TrainState
-from repro.serve import Engine
+from repro.serve import Engine, Request, ServeSpec
 from repro.train.step import make_loss_fn
 
 
@@ -53,10 +53,12 @@ def main():
     # --- 3. serve -----------------------------------------------------------
     mesh = jax.make_mesh((1,), ("data",))
     jax.set_mesh(mesh)
-    eng = Engine(cfg, mesh, state.params, batch=4, cache_len=48)
+    eng = Engine(cfg, mesh, state.params, ServeSpec(batch=4, cache_len=48))
     prompts = data.batch(999)["tokens"][:4, :16]
-    toks = eng.generate(prompts, max_new=8)
-    print("generated continuations:", toks[0])
+    for i in range(4):
+        eng.submit(Request(tokens=np.asarray(prompts[i]), max_new=8))
+    results = eng.drain()
+    print("generated continuations:", results[0].tokens)
 
     # --- 4. the paper's trade-off, in numbers --------------------------------
     print("\nmodeled allgather cost on 4096 ranks, 16/region, 8B msgs (Lassen):")

@@ -24,22 +24,29 @@ def main():
     import jax
     import numpy as np
 
+    import warnings
+
     from repro import configs
     from repro.models import transformer
-    from repro.serve import Engine
+    from repro.serve import Engine, ServeSpec
 
     mesh = jax.make_mesh((args.devices // 2, 2), ("data", "model"))
     jax.set_mesh(mesh)
     cfg = configs.get_smoke(args.arch)
     params = transformer.init_params(jax.random.PRNGKey(0), cfg)
-    eng = Engine(cfg, mesh, params, batch=args.batch,
-                 cache_len=args.prompt_len + args.max_new)
+    eng = Engine(cfg, mesh, params,
+                 ServeSpec(batch=args.batch,
+                           cache_len=args.prompt_len + args.max_new))
 
     rng = np.random.default_rng(0)
     prompts = rng.integers(0, cfg.vocab_size,
                            (args.batch, args.prompt_len), dtype=np.int32)
     t0 = time.perf_counter()
-    toks = eng.generate(prompts, max_new=args.max_new)
+    # the lockstep wave is exactly what this example measures (whole-batch
+    # per-token latency), so it keeps the deprecated generate loop on purpose
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", DeprecationWarning)
+        toks = eng.generate(prompts, max_new=args.max_new)
     dt = time.perf_counter() - t0
     n_tok = args.batch * args.max_new
     print(f"[serve] {cfg.name}: {n_tok} tokens in {dt:.2f}s "

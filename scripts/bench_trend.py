@@ -59,6 +59,11 @@ METRICS: dict[str, tuple[str, bool]] = {
     # locality schedule is losing its DCN edge
     "nonlocal_bytes_ratio": ("lower", False),
     "nonlocal_msgs_ratio": ("lower", False),
+    # serve-traffic virtual-clock trace metrics (BENCH_serve_traffic.json):
+    # deterministic functions of the trace and the schedule, strict gate
+    "p50_latency_ticks": ("lower", False),
+    "p99_latency_ticks": ("lower", False),
+    "slo_goodput_tokens_per_tick": ("higher", False),
     # results/metrics.json (repro.telemetry registry snapshot): gauge names
     # are slash-qualified ("train/step_time_s_mean") — matching is on the
     # name's last segment, see the rsplit in compare_file/write_history

@@ -404,6 +404,36 @@ def allgather(x: jax.Array, outer: Axes, local: Axes = (), *,
     return ALLGATHERS[algorithm](x, outer, local, tiled)
 
 
+# Algorithms eligible for KV-cache migration (see ``cache_migrate``): the
+# locality schedule minimizes inter-pod messages, multilane minimizes
+# per-rank inter-pod bytes, and flat XLA is the ring-decomposed baseline.
+MIGRATE_ALGORITHMS = ("locality_bruck", "multilane", "xla")
+
+
+def cache_migrate(x: jax.Array, outer: Axes, local: Axes = (), *,
+                  algorithm: str = "auto", tiled: bool = True) -> jax.Array:
+    """Replicate a sequence-sharded KV-cache slab over ``outer + local``.
+
+    The serve scheduler calls this when a request's cache must move across
+    the pod (DCN) boundary: the donor layout shards the slab's sequence dim
+    over every rank, and the destination insert needs the full slab on the
+    owning ranks — a gatherv-shaped replication where the Algorithm-2
+    machinery applies directly (uneven tails ride the allgatherv adaptation
+    inside :func:`locality_bruck_allgather`). Priced as its own tuning cell
+    (``"cache_migrate"``) because the slab-sized payloads sit in a different
+    α/β regime than activation allgathers.
+    """
+    if algorithm == "auto":
+        algorithm = _resolve_auto("cache_migrate", x, _tup(outer), _tup(local))
+    if algorithm not in MIGRATE_ALGORITHMS:
+        raise ValueError(f"cache_migrate algorithm {algorithm!r} not in "
+                         f"{MIGRATE_ALGORITHMS}")
+    if not _tup(local):
+        algorithm = "bruck" if algorithm != "xla" else "xla"
+    with jax.named_scope(f"cache_migrate_{algorithm}"):
+        return ALLGATHERS[algorithm](x, outer, local, tiled)
+
+
 # =============================================================================
 # Split (start/finish) collectives — the overlap pipeline's communication half
 # =============================================================================

@@ -397,6 +397,30 @@ MODELS = {
 }
 
 
+def cache_migrate_model(algorithm: str, p: int, p_local: int,
+                        block_bytes: float,
+                        m: MachineParams | str) -> float:
+    """Closed-form price of a KV-slab migration (collectives.cache_migrate).
+
+    Migration is a replication of a sequence-sharded slab over the full
+    (outer, local) mesh, so each eligible algorithm prices as its allgather
+    closed form — but at slab-sized blocks, where α and β trade off
+    differently than for activation payloads (hence its own tuning cell):
+    the locality schedule minimizes DCN *messages*, multilane minimizes
+    per-rank DCN *bytes*, and GSPMD's flat all-gather ring-decomposes into
+    a boundary crossing per region.
+    """
+    if isinstance(m, str):
+        m = MACHINES[m]
+    if algorithm == "locality_bruck":
+        return locality_bruck_model(p, p_local, block_bytes, m)
+    if algorithm == "multilane":
+        return multilane_model(p, p_local, block_bytes, m)
+    if algorithm == "xla":
+        return ring_model(p, block_bytes, m, p_local)
+    raise ValueError(f"unknown cache_migrate algorithm {algorithm!r}")
+
+
 def schedule_cost(schedule, m: MachineParams, block_bytes: float,
                   region: RegionMap | None = None, *,
                   mode: str = "round") -> float:

@@ -35,6 +35,7 @@ from repro.core.hlo_analysis import Roofline, collective_stats
 from repro.core.topology import device_pod_map
 from repro.launch.mesh import make_production_mesh
 from repro.models import encdec, transformer
+from repro.serve import ServeSpec
 from repro.serve.engine import cache_shardings, cache_specs, make_serve_fns
 from repro.train.sharding import dp_axes, param_specs
 from repro.train.step import make_train_step
@@ -62,13 +63,13 @@ def lower_cell(cfg, shape, mesh, *, grad_sync="locality", fsdp=True,
         return art.step_fn.lower(art.abstract_state,
                                  dict(cfg.input_specs(shape)))
     if shape.kind == "prefill":
-        art = make_serve_fns(cfg, mesh, batch=shape.global_batch,
-                             cache_len=shape.seq_len)
+        art = make_serve_fns(cfg, mesh, ServeSpec(batch=shape.global_batch,
+                                                  cache_len=shape.seq_len))
         return art.prefill_fn.lower(art.abstract_params,
                                     dict(cfg.input_specs(shape)))
     # decode: cache of seq_len context + one-token step
-    art = make_serve_fns(cfg, mesh, batch=shape.global_batch,
-                         cache_len=shape.seq_len)
+    art = make_serve_fns(cfg, mesh, ServeSpec(batch=shape.global_batch,
+                                              cache_len=shape.seq_len))
     c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len)
     tok = jax.ShapeDtypeStruct((shape.global_batch, 1), np.int32)
     return art.decode_fn.lower(art.abstract_params, c_specs, tok)

@@ -23,7 +23,7 @@ def main() -> None:
     import numpy as np
     from repro import configs
     from repro.models import encdec, transformer
-    from repro.serve import Engine
+    from repro.serve import Engine, Request, ServeSpec
 
     mesh = jax.make_mesh((2, args.devices // 4, 2) if args.devices >= 8
                          else (args.devices, 1),
@@ -35,15 +35,21 @@ def main() -> None:
     params = mod.init_params(jax.random.PRNGKey(0), cfg)
     if cfg.family == "audio":
         raise SystemExit("use examples/serve_batched.py for the enc-dec path")
-    eng = Engine(cfg, mesh, params, batch=args.batch,
-                 cache_len=args.prompt_len + args.max_new)
+    # round the cache up to page granularity (page_len must divide cache_len)
+    need = args.prompt_len + args.max_new
+    spec = ServeSpec(batch=args.batch, cache_len=-(-need // 16) * 16)
+    eng = Engine(cfg, mesh, params, spec)
     prompts = np.random.default_rng(0).integers(
         0, cfg.vocab_size, (args.batch, args.prompt_len), dtype=np.int32)
     t0 = time.perf_counter()
-    toks = eng.generate(prompts, max_new=args.max_new)
+    for i in range(args.batch):
+        eng.submit(Request(tokens=prompts[i], max_new=args.max_new))
+    results = eng.drain()
     dt = time.perf_counter() - t0
-    print(f"[serve] generated {toks.shape} in {dt:.2f}s "
-          f"({args.batch * args.max_new / dt:.1f} tok/s); sample: {toks[0][:12]}")
+    sample = results[0].tokens[:12]
+    print(f"[serve] drained {len(results)} requests "
+          f"({args.batch * args.max_new} tokens) in {dt:.2f}s "
+          f"({args.batch * args.max_new / dt:.1f} tok/s); sample: {sample}")
 
 
 if __name__ == "__main__":

@@ -114,6 +114,15 @@ def multihead_attention(q, k, v, *, causal=True, window=0, chunk=0, cap=0.0,
     return jnp.concatenate(outs, axis=1) if len(outs) > 1 else outs[0]
 
 
+def _mask_bcast(mask):
+    """Broadcast a slot mask over (B,KV,G,Lloc) scores.
+
+    Lockstep decode carries a scalar ``pos`` and an (Lloc,) mask; continuous
+    batching carries a per-row (B,) ``pos`` and a (B,Lloc) mask.
+    """
+    return mask[None, None, None] if mask.ndim == 1 else mask[:, None, None, :]
+
+
 def decode_stats_scores(q, k_cache, pos, *, slot_offset=0, total_len=None,
                         window=0, chunk=0, cap=0.0, ring=False):
     """The cheap prefix of one-token decode attention over a cache slice:
@@ -122,7 +131,8 @@ def decode_stats_scores(q, k_cache, pos, *, slot_offset=0, total_len=None,
     q (B,1,H,D) vs k (B,Lloc,KV,D) holding global slots
     [slot_offset, slot_offset + Lloc) of a ``total_len``-slot cache.
     Returns ``(s, mask)`` with s (B,KV,G,Lloc) already NEG_INF-masked and
-    mask (Lloc,) boolean. Split out so the serve engine can issue the
+    mask (Lloc,) boolean — (B,Lloc) when ``pos`` is a per-row (B,) vector.
+    Split out so the serve engine can issue the
     max-allreduce of the running maxima right here — everything after
     (exp / sum / the P·V matmul, :func:`decode_stats_accumulate` or the
     Pallas kernel in ``kernels/decode_stats``) is independent compute the
@@ -138,14 +148,15 @@ def decode_stats_scores(q, k_cache, pos, *, slot_offset=0, total_len=None,
     s = s * (D ** -0.5)
     if cap:
         s = cap * jnp.tanh(s / cap)
+    p_ = pos[:, None] if jnp.ndim(pos) == 1 else pos  # (B,1) rows broadcast
     j = slot_offset + jnp.arange(L_loc)
-    t_j = (pos - ((pos - j) % L_tot)) if ring else j  # token held by slot j
-    mask = t_j >= 0 if ring else (j <= pos)
+    t_j = (p_ - ((p_ - j) % L_tot)) if ring else j    # token held by slot j
+    mask = t_j >= 0 if ring else (j <= p_)
     if window:
-        mask &= (pos - t_j) < window
+        mask &= (p_ - t_j) < window
     if chunk:
-        mask &= (t_j // chunk) == (pos // chunk)
-    s = jnp.where(mask[None, None, None], s, NEG_INF)
+        mask &= (t_j // chunk) == (p_ // chunk)
+    s = jnp.where(_mask_bcast(mask), s, NEG_INF)
     return s, mask
 
 
@@ -159,7 +170,7 @@ def decode_stats_accumulate(s, mask, m, v_cache):
     H = KV * G
     D = v_cache.shape[-1]
     p = jnp.exp(s - m[..., None])
-    p = jnp.where(mask[None, None, None], p, 0.0)     # m=NEG_INF ⇒ exp(0)=1
+    p = jnp.where(_mask_bcast(mask), p, 0.0)          # m=NEG_INF ⇒ exp(0)=1
     l = jnp.sum(p, axis=-1)
     o = jnp.einsum("bkgj,bjkd->bkgd", p.astype(v_cache.dtype),
                    v_cache).astype(jnp.float32)
@@ -271,10 +282,18 @@ def attention(params, x, cfg, spec, *, positions=None, cache=None,
                                   "cap": cfg.attn_softcap, "ring": ring})
         if res is None:
             slot = pos % L_c if ring else pos
-            k_cache = jax.lax.dynamic_update_slice(
-                k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
-            v_cache = jax.lax.dynamic_update_slice(
-                v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
+            if jnp.ndim(pos) == 1:
+                # continuous batching: per-row write positions (B,)
+                row_dus = jax.vmap(
+                    lambda c, u, s: jax.lax.dynamic_update_slice(
+                        c, u, (s, 0, 0)))
+                k_cache = row_dus(k_cache, k.astype(k_cache.dtype), slot)
+                v_cache = row_dus(v_cache, v.astype(v_cache.dtype), slot)
+            else:
+                k_cache = jax.lax.dynamic_update_slice(
+                    k_cache, k.astype(k_cache.dtype), (0, slot, 0, 0))
+                v_cache = jax.lax.dynamic_update_slice(
+                    v_cache, v.astype(v_cache.dtype), (0, slot, 0, 0))
             o = decode_attention(q, k_cache, v_cache, pos, window=window,
                                  chunk=chunk, cap=cfg.attn_softcap, ring=ring)
         else:

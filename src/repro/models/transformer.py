@@ -220,7 +220,10 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
 
     if decode:
         pos = cache["pos"]
-        positions = jnp.broadcast_to(pos, (B, 1))
+        # scalar pos = lockstep batch; (B,) pos = continuous batching with
+        # per-row positions ((B,) does not broadcast to (B,1) — reshape)
+        positions = (pos[:, None] if jnp.ndim(pos) == 1
+                     else jnp.broadcast_to(pos, (B, 1)))
     else:
         pos = None
         positions = jnp.arange(S)[None]
@@ -341,7 +344,8 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
 # caches for decode dry-run (ShapeDtypeStructs, no allocation)
 # ---------------------------------------------------------------------------
 
-def cache_specs(cfg, batch: int, cache_len: int) -> dict:
+def cache_specs(cfg, batch: int, cache_len: int, *,
+                vector_pos: bool = False) -> dict:
     plan = cfg.layer_plan()
     pi, reps, rem = find_period(plan)
     D = cfg.head_dim_
@@ -363,7 +367,8 @@ def cache_specs(cfg, batch: int, cache_len: int) -> dict:
     return {
         "blocks": {f"slot{j}": slot_spec(plan[j], True) for j in range(pi)},
         "rest": [slot_spec(plan[reps * pi + i], False) for i in range(rem)],
-        "pos": jax.ShapeDtypeStruct((), jnp.int32),
+        "pos": jax.ShapeDtypeStruct((batch,) if vector_pos else (),
+                                    jnp.int32),
     }
 
 

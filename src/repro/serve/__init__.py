@@ -1,1 +1,8 @@
 from .engine import Engine, cache_shardings, make_serve_fns
+from .paged import PagedKVCache
+from .scheduler import Scheduler, StepClock, WallClock
+from .spec import Request, RequestResult, ServeSpec
+
+__all__ = ["Engine", "PagedKVCache", "Request", "RequestResult",
+           "Scheduler", "ServeSpec", "StepClock", "WallClock",
+           "cache_shardings", "make_serve_fns"]

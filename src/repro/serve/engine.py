@@ -32,6 +32,7 @@ per-step combine traffic in ``Engine.stats()``.
 from __future__ import annotations
 
 import dataclasses
+import warnings
 from typing import Any, Callable
 
 import jax
@@ -46,6 +47,7 @@ from repro.models import encdec, transformer
 from repro.models.attention import decode_stats_scores
 from repro.train.sharding import (dp_axes, make_shard_fn, normalize_axes,
                                   param_specs)
+from .spec import Request, RequestResult, ServeSpec
 
 
 def _axsize(mesh, name) -> int:
@@ -54,9 +56,44 @@ def _axsize(mesh, name) -> int:
     return mesh.devices.shape[list(mesh.axis_names).index(name)]
 
 
-def cache_specs(cfg, batch: int, cache_len: int):
+def cache_specs(cfg, batch: int, cache_len: int, *, vector_pos: bool = False):
     mod = encdec if cfg.family == "audio" else transformer
+    if vector_pos:                 # continuous batching: per-row positions
+        return mod.cache_specs(cfg, batch, cache_len, vector_pos=True)
     return mod.cache_specs(cfg, batch, cache_len)
+
+
+def _coerce_spec(spec, batch, cache_len, prefill_len, combine, fused_stats,
+                 seq_axes, caller: str) -> ServeSpec:
+    """Normalize the serve surface to a ServeSpec.
+
+    New API: ``caller(cfg, mesh, ServeSpec(...))``. The legacy keyword
+    surface (``batch=``, ``cache_len=``, ...) keeps working one release
+    behind a DeprecationWarning; mixing both is an error."""
+    legacy = {k: v for k, v in dict(batch=batch, cache_len=cache_len,
+                                    prefill_len=prefill_len, combine=combine,
+                                    fused_stats=fused_stats,
+                                    seq_axes=seq_axes).items()
+              if v is not None}
+    if spec is not None:
+        if legacy:
+            raise TypeError(
+                f"{caller}: pass either a ServeSpec or the legacy keywords, "
+                f"not both (got {sorted(legacy)})")
+        return spec
+    if batch is None or cache_len is None:
+        raise TypeError(f"{caller} requires a ServeSpec (or, deprecated, "
+                        "the batch=/cache_len= keywords)")
+    warnings.warn(
+        f"{caller}(..., batch=, cache_len=, ...) is deprecated; pass "
+        f"{caller}(cfg, mesh, ServeSpec(batch=..., cache_len=..., ...)) "
+        "(removal one release out, see DESIGN.md §9)",
+        DeprecationWarning, stacklevel=3)
+    return ServeSpec(
+        batch=batch, cache_len=cache_len, prefill_len=prefill_len,
+        combine=combine if combine is not None else "auto",
+        fused_stats=fused_stats if fused_stats is not None else "auto",
+        seq_axes=seq_axes if seq_axes is not None else "auto")
 
 
 def _cache_layout(mesh, batch: int,
@@ -179,7 +216,6 @@ class ServeArtifacts:
     combine: Any = None       # CombineChoice for the decode cache-combine
     decode_fn_xla: Callable | None = None       # always-compiled GSPMD path
     decode_fn_locality: Callable | None = None  # manual combine path (or None)
-    combine_layers: int = 0   # attention layers the manual combine covers
     fused_stats: str = "jnp"  # resolved partial-stat impl ("jnp"/"pallas"/...)
     seq_axes: Any = None      # sequence-shard candidates (('pod','data')/...)
     tok_sharding: Any = None  # decode-token sharding (AOT calls don't reshard)
@@ -251,31 +287,32 @@ def resolve_cache_combine(cfg, mesh, batch: int, cache_len: int,
     return CombineChoice(sel.algorithm, sel.source, nbytes, p, p_local)
 
 
-def _combine_layer_count(cfg, mesh, cache_len: int,
-                         seq_cand: tuple[str, ...] | None) -> int:
-    """Decode-attention layers the locality hook will actually handle —
+def _combine_eligible(cfg, mesh, cache_len: int,
+                      seq_cand: tuple[str, ...] | None) -> bool:
+    """Whether ANY decode-attention layer will take the locality hook —
     mirrors the per-layer fallbacks of ``_make_locality_decode_combine``
     (ring/chunk cache lengths indivisible by the shard count, head_dim
-    model-sharded caches), so engine stats account real combine traffic
-    and a layout with zero eligible layers never compiles the manual path."""
+    model-sharded caches), so a layout where every layer would fall back
+    never compiles a manual path that executes nothing. Per-step combine
+    traffic is read off the compiled HLO's CommReport, never an analytic
+    layer count."""
     if not seq_cand:
-        return 0
+        return False
     m = _axsize(mesh, "model")
     kv = getattr(cfg, "n_kv_heads", 1)
     kv_sharded = m > 1 and kv % m == 0
     if m > 1 and not kv_sharded and cfg.head_dim_ % m == 0:
-        return 0                       # head_dim-sharded caches: xla path
+        return False                   # head_dim-sharded caches: xla path
     if cfg.family == "audio":
-        return cfg.n_layers if _seq_axes_for(mesh, cache_len, seq_cand) else 0
-    count = 0
+        return bool(_seq_axes_for(mesh, cache_len, seq_cand))
     for spec in cfg.layer_plan():
         if spec.mixer not in ("attn", "shared_attn"):
             continue
         rl = transformer.ring_cache_len(cfg, spec)
         L = cache_len if rl is None else min(cache_len, rl)
         if _seq_axes_for(mesh, L, seq_cand):
-            count += 1
-    return count
+            return True
+    return False
 
 
 def _make_locality_decode_combine(cfg, mesh, seq_cand: tuple[str, ...],
@@ -379,19 +416,31 @@ def _make_locality_decode_combine(cfg, mesh, seq_cand: tuple[str, ...],
     return combine
 
 
-def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
+def make_serve_fns(cfg, mesh, spec: ServeSpec | None = None, *,
+                   batch: int | None = None, cache_len: int | None = None,
                    prefill_len: int | None = None,
-                   combine: str = "auto",
-                   fused_stats: str = "auto",
-                   seq_axes: str | tuple[str, ...] = "auto") -> ServeArtifacts:
-    """combine: "auto" resolves through repro.tuning; "xla"/"locality" force
-    the decode cache-combine algorithm (explicit benchmark/test dispatch).
-    fused_stats: partial-stat accumulation inside the locality combine
-    region — "auto" (Pallas kernel on TPU, jnp elsewhere), "jnp", "pallas",
-    or "pallas_interpret" (kernel-path testing on CPU).
-    seq_axes: sequence-parallel cache domain — "auto" spans every DP axis
-    (('pod','data') on multi-pod meshes: the combine crosses the DCN);
+                   combine: str | None = None,
+                   fused_stats: str | None = None,
+                   seq_axes: str | tuple[str, ...] | None = None
+                   ) -> ServeArtifacts:
+    """Compile the serving steps for a :class:`ServeSpec`.
+
+    ``make_serve_fns(cfg, mesh, ServeSpec(batch=..., cache_len=...))`` is
+    the API; the spread keywords are the deprecated legacy surface (see
+    ``_coerce_spec``). Spec fields: ``combine`` "auto" resolves through
+    repro.tuning, "xla"/"locality" force the decode cache-combine algorithm
+    (explicit benchmark/test dispatch); ``fused_stats`` picks the
+    partial-stat accumulation inside the locality combine region — "auto"
+    (Pallas kernel on TPU, jnp elsewhere), "jnp", "pallas", or
+    "pallas_interpret" (kernel-path testing on CPU); ``seq_axes`` sets the
+    sequence-parallel cache domain — "auto" spans every DP axis
+    (('pod','data') on multi-pod meshes: the combine crosses the DCN),
     ("data",) forces the legacy intra-pod layout (pods replicate)."""
+    spec = _coerce_spec(spec, batch, cache_len, prefill_len, combine,
+                        fused_stats, seq_axes, "make_serve_fns")
+    batch, cache_len = spec.batch, spec.cache_len
+    combine, fused_stats = spec.combine, spec.fused_stats
+    seq_axes = spec.seq_axes
     mod = encdec if cfg.family == "audio" else transformer
     a_params = jax.eval_shape(
         lambda k: mod.init_params(k, cfg), jax.random.PRNGKey(0))
@@ -428,13 +477,11 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
         cfg, mesh, batch, cache_len,
         override=None if combine == "auto" else combine, seq_axes=seq_axes)
     _, seq_cand = _cache_layout(mesh, batch, seq_axes)
-    combine_layers = 0
-    if choice.algorithm == "locality":
-        combine_layers = _combine_layer_count(cfg, mesh, cache_len, seq_cand)
-        if combine_layers == 0:
-            # every layer would take the per-layer fallback — don't compile
-            # a manual path that executes nothing
-            choice = dataclasses.replace(choice, algorithm="xla")
+    if choice.algorithm == "locality" and not _combine_eligible(
+            cfg, mesh, cache_len, seq_cand):
+        # every layer would take the per-layer fallback — don't compile
+        # a manual path that executes nothing
+        choice = dataclasses.replace(choice, algorithm="xla")
 
     stats_impl = stats_ops.resolve_impl(fused_stats)
 
@@ -475,7 +522,6 @@ def make_serve_fns(cfg, mesh, *, batch: int, cache_len: int,
                           abstract_params=a_params, combine=choice,
                           decode_fn_xla=decode_fn_xla,
                           decode_fn_locality=decode_fn_locality,
-                          combine_layers=combine_layers,
                           fused_stats=stats_impl, seq_axes=seq_cand,
                           tok_sharding=tok_sh,
                           abstract_cache=cache_specs(cfg, batch, cache_len))
@@ -496,29 +542,34 @@ class Engine:
     the combine algorithm (``serve/decode:locality`` / ``serve/decode:xla``)
     so side-by-side A/B engines in one process keep separate ledgers."""
 
-    def __init__(self, cfg, mesh, params, *, batch: int, cache_len: int,
-                 combine: str = "auto", fused_stats: str = "auto",
-                 seq_axes: str | tuple[str, ...] = "auto",
+    def __init__(self, cfg, mesh, params, spec: ServeSpec | None = None, *,
+                 batch: int | None = None, cache_len: int | None = None,
+                 combine: str | None = None, fused_stats: str | None = None,
+                 seq_axes: str | tuple[str, ...] | None = None,
                  log: Callable[[str], None] | None = None,
                  comm_telemetry: bool | str = "auto",
-                 tracer=None, registry=None):
+                 tracer=None, registry=None, clock=None):
         from repro import telemetry
+        spec = _coerce_spec(spec, batch, cache_len, None, combine,
+                            fused_stats, seq_axes, "Engine")
         self.cfg = cfg
         self.mesh = mesh
+        self.spec = spec
+        self.resolved = spec.resolve(cfg, mesh)
         self.tracer = tracer or telemetry.get_tracer()
         self.registry = registry or telemetry.get_registry()
         with self.tracer.span("serve/build"):
-            self.art = make_serve_fns(cfg, mesh, batch=batch,
-                                      cache_len=cache_len, combine=combine,
-                                      fused_stats=fused_stats,
-                                      seq_axes=seq_axes)
+            self.art = make_serve_fns(cfg, mesh, spec)
         params = jax.tree.map(
             lambda p: p.astype(cfg.dtype) if p.dtype == jnp.float32 else p,
             params)
         self.params = jax.device_put(params, self.art.param_shardings)
-        self.batch = batch
-        self.cache_len = cache_len
+        self.batch = spec.batch
+        self.cache_len = spec.cache_len
         self.combine = self.art.combine
+        self._comm_requested = comm_telemetry
+        self._clock = clock
+        self._scheduler = None
         self._stats = {"decode_steps": 0, "combine_steps": 0,
                        "combine_bytes": 0.0, "nonlocal_bytes": 0.0,
                        "nonlocal_msgs": 0.0}
@@ -570,8 +621,8 @@ class Engine:
         combine traffic they generated. ``combine_bytes`` is sourced from
         the compiled artifact's CommReport (DP-domain-crossing bytes of the
         decode HLO × steps) when comm telemetry is on — the ground truth,
-        not an analytic layer count — falling back to the analytic estimate
-        (stat payload × eligible layers) without it. ``nonlocal_*`` are the
+        not an analytic layer count — and stays 0 without it. ``nonlocal_*``
+        are the
         inter-pod (DCN) accumulations; a ``comm`` entry carries the
         per-step report and its runtime reconciliation when stamped."""
         out = dict(self._stats)
@@ -582,10 +633,48 @@ class Engine:
             }
         return out
 
+    # -- request-level API (DESIGN.md §9) -------------------------------
+    @property
+    def scheduler(self):
+        """The continuous-batching scheduler over this engine's compiled
+        steps — built lazily on the first ``submit``."""
+        if self._scheduler is None:
+            from .scheduler import Scheduler
+            self._scheduler = Scheduler(
+                self, clock=self._clock,
+                comm_telemetry=self._comm_requested is not False)
+        return self._scheduler
+
+    def submit(self, request: Request) -> int:
+        """Enqueue one request; returns its handle (the request id)."""
+        return self.scheduler.submit(request)
+
+    def step(self) -> list[RequestResult]:
+        """Admit what fits, decode one step; the requests that finished."""
+        return self.scheduler.step()
+
+    def drain(self) -> dict[int, RequestResult]:
+        """Run until every submitted request finished; results by handle."""
+        return self.scheduler.drain()
+
+    def cancel(self, rid: int) -> bool:
+        return self.scheduler.cancel(rid)
+
+    def result(self, rid: int) -> RequestResult | None:
+        return self.scheduler.result(rid)
+
     def generate(self, prompts: np.ndarray, max_new: int,
                  extra: dict | None = None) -> np.ndarray:
-        """prompts: (B, S) int32. Returns (B, max_new) greedy tokens."""
+        """prompts: (B, S) int32. Returns (B, max_new) greedy tokens.
+
+        Legacy lockstep loop: the whole batch prefills together and decodes
+        to the same budget. Kept one release behind a DeprecationWarning —
+        ``submit()``/``step()``/``drain()`` is the serving API."""
         import time as _time
+        warnings.warn(
+            "Engine.generate is the legacy lockstep loop; use "
+            "Engine.submit/step/drain (DESIGN.md §9)",
+            DeprecationWarning, stacklevel=2)
         batch_in = {"tokens": jnp.asarray(prompts)}
         batch_in.update(extra or {})
         with self.tracer.span("serve/prefill", prompt_len=int(prompts.shape[-1])):
@@ -612,8 +701,10 @@ class Engine:
                 reg.record_comm(self.comm_label)
             if combining:
                 self._stats["combine_steps"] += 1
-                self._stats["combine_bytes"] += (
-                    rep.dp_bytes if rep is not None
-                    else self.combine.nbytes * self.art.combine_layers)
+                if rep is not None:
+                    # ground truth only: the compiled HLO's DP-crossing
+                    # bytes — without telemetry the counter stays 0 rather
+                    # than reporting an analytic guess as traffic
+                    self._stats["combine_bytes"] += rep.dp_bytes
         reg.count("serve/tokens", max_new * prompts.shape[0])
         return np.concatenate(out, axis=1)

@@ -1,0 +1,164 @@
+"""Request-level serving API: the three dataclasses of the serve surface.
+
+The old surface was a kwarg sprawl — ``make_serve_fns(cfg, mesh, *, batch,
+cache_len, combine, fused_stats, seq_axes, ...)`` with ``Engine.__init__``
+repeating every knob.  The scheduler cannot bolt onto that, so the surface
+is three small dataclasses instead:
+
+* :class:`ServeSpec`      — static compile-time geometry (batch, cache_len,
+  the combine / fused_stats / seq_axes policies, paging granularity),
+  resolved once against a concrete ``(cfg, mesh)`` via
+  :meth:`ServeSpec.resolve`;
+* :class:`Request`        — one user request: prompt tokens, decode budget,
+  arrival metadata, home pod;
+* :class:`RequestResult`  — the finished request: generated tokens,
+  per-token completion stamps, finish reason.
+
+``Engine(cfg, mesh, params, spec)`` plus ``submit(request) -> handle`` /
+``step()`` / ``drain()`` is the new API; the old keyword constructors keep
+working one release behind a ``DeprecationWarning`` (see engine.py).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import numpy as np
+
+
+@dataclasses.dataclass(frozen=True)
+class ServeSpec:
+    """Static serving geometry — everything that shapes the compiled steps.
+
+    batch:       decode batch rows (the paged cache's slot count).
+    cache_len:   KV slots per row (prompt + decode budget ceiling).
+    combine:     decode cache-combine policy — "auto" (tuning policy),
+                 "xla", or "locality".
+    fused_stats: partial-stat impl inside the locality combine region —
+                 "auto" / "jnp" / "pallas" / "pallas_interpret".
+    seq_axes:    sequence-parallel cache domain — "auto" spans every DP
+                 axis (('pod','data') on multi-pod meshes), ("data",)
+                 forces the legacy intra-pod layout.
+    page_len:    paging granularity in KV slots: admission reserves
+                 ceil((prompt + max_new) / page_len) pages in the
+                 request's row (conservative — a request can never
+                 outgrow its reservation, so eviction is policy, not
+                 necessity).
+    migrate:     cross-pod cache-migration collective — "auto" resolves
+                 through the ``cache_migrate`` tuning cell, or one of
+                 ``core.collectives.MIGRATE_ALGORITHMS``.
+    """
+
+    batch: int
+    cache_len: int
+    prefill_len: int | None = None
+    combine: str = "auto"
+    fused_stats: str = "auto"
+    seq_axes: str | tuple[str, ...] = "auto"
+    page_len: int = 16
+    migrate: str = "auto"
+
+    def resolve(self, cfg, mesh) -> "ResolvedServeSpec":
+        """Bind the spec to a concrete (cfg, mesh): one place computes the
+        layout decision (batch- vs sequence-sharded), the combine choice,
+        and the pod geometry, so the engine, the scheduler, and the
+        benchmarks cannot drift on any of them."""
+        from .engine import (_axsize, _cache_layout, _seq_axes_for,
+                             resolve_cache_combine)
+        batch_sharded, seq_cand = _cache_layout(mesh, self.batch,
+                                                self.seq_axes)
+        choice = resolve_cache_combine(
+            cfg, mesh, self.batch, self.cache_len,
+            override=None if self.combine == "auto" else self.combine,
+            seq_axes=self.seq_axes)
+        n_pods = _axsize(mesh, "pod")
+        p_local = _axsize(mesh, "data")
+        seq_span = _seq_axes_for(mesh, self.cache_len, seq_cand)
+        return ResolvedServeSpec(
+            spec=self, batch_sharded=batch_sharded, seq_cand=seq_cand,
+            seq_span=seq_span, combine=choice, n_pods=n_pods,
+            p_local=p_local)
+
+
+@dataclasses.dataclass(frozen=True)
+class ResolvedServeSpec:
+    """A ServeSpec bound to (cfg, mesh): the derived geometry.
+
+    seq_cand: the DP axes a sequence-parallel cache may shard over
+              (layout candidates, per-layer narrowing via _seq_axes_for).
+    seq_span: the span a full-length cache actually shards over (None for
+              batch-sharded / replicated layouts).
+    """
+
+    spec: ServeSpec
+    batch_sharded: bool
+    seq_cand: tuple[str, ...] | None
+    seq_span: tuple[str, ...] | None
+    combine: Any
+    n_pods: int
+    p_local: int
+
+    @property
+    def batch(self) -> int:
+        return self.spec.batch
+
+    @property
+    def cache_len(self) -> int:
+        return self.spec.cache_len
+
+    def pod_of_row(self, row: int) -> int:
+        """Home pod of batch row ``row`` under the batch-sharded layout:
+        P(('pod','data')) on the batch dim places contiguous row blocks
+        pod-major, so row r lives in pod r·n_pods // batch."""
+        if self.n_pods <= 1 or not self.batch_sharded:
+            return 0
+        return (row * self.n_pods) // self.batch
+
+
+@dataclasses.dataclass(frozen=True)
+class Request:
+    """One serving request. ``tokens`` is the (S,) int32 prompt; ``max_new``
+    the decode budget; ``home_pod`` the pod whose HBM should absorb the
+    prefill (None = wherever a slot frees first); ``arrival_s`` the arrival
+    stamp on the submitting clock (the scheduler's clock if unset)."""
+
+    tokens: np.ndarray
+    max_new: int
+    home_pod: int | None = None
+    arrival_s: float | None = None
+    rid: int | None = None        # assigned by Engine.submit
+
+    def __post_init__(self):
+        t = np.asarray(self.tokens, dtype=np.int32)
+        if t.ndim != 1 or t.size == 0:
+            raise ValueError(f"Request.tokens must be a non-empty 1-D "
+                             f"prompt, got shape {t.shape}")
+        object.__setattr__(self, "tokens", t)
+        if self.max_new < 1:
+            raise ValueError("Request.max_new must be >= 1")
+
+
+@dataclasses.dataclass
+class RequestResult:
+    """A finished request.
+
+    finish_reason: "length" (decode budget exhausted), "evicted"
+    (cancelled by the scheduler), or "error".
+    token_times_s: completion stamp of each generated token on the
+    scheduler's clock — per-token latency is ``t - arrival_s``.
+    """
+
+    rid: int
+    tokens: np.ndarray
+    finish_reason: str
+    arrival_s: float
+    started_s: float
+    finished_s: float
+    token_times_s: list[float] = dataclasses.field(default_factory=list)
+    home_pod: int = 0
+    slot: int = -1
+    migrated: bool = False
+
+    @property
+    def n_tokens(self) -> int:
+        return int(np.asarray(self.tokens).size)

@@ -31,6 +31,7 @@ ALLGATHER_ALGORITHMS = tuple(schedules.ALGORITHMS)   # the five paper algs
 ALLREDUCE_ALGORITHMS = ("locality", "xla")
 LOGSUMEXP_ALGORITHMS = ("locality", "xla")
 OVERLAP_ALGORITHMS = ("eager", "prefetch")
+MIGRATE_ALGORITHMS = ("locality_bruck", "multilane", "xla")
 
 # Serving head dims are 64-128; the running-max phase of the logsumexp
 # combine moves payload/(D+1) bytes. Priced at D=64 (the conservative end:
@@ -173,6 +174,26 @@ def simulate_logsumexp_combine(algorithm: str, p: int, p_local: int,
     raise ValueError(f"unknown logsumexp_combine algorithm {algorithm!r}")
 
 
+def simulate_cache_migrate(algorithm: str, p: int, p_local: int,
+                           nbytes: float,
+                           machine: cost_model.MachineParams | str) -> float:
+    """KV-slab migration (``core/collectives.cache_migrate``): replicate a
+    sequence-sharded cache slab over the full mesh so the destination insert
+    can mask it into the owning batch row.
+
+    Executes the same schedule generators as the activation allgather, but
+    keyed as its own tuning cell: slab payloads (a whole request's KV) sit
+    orders of magnitude above decode activations, so the α-dominated
+    locality schedule and the β-dominated multilane schedule cross over in
+    a different byte regime. "xla" prices GSPMD's flat all-gather at its
+    ring decomposition (every hop a potential boundary crossing).
+    """
+    if algorithm not in MIGRATE_ALGORITHMS:
+        raise ValueError(f"unknown cache_migrate algorithm {algorithm!r}")
+    sched_alg = "ring" if algorithm == "xla" else algorithm
+    return simulate_allgather(sched_alg, p, p_local, nbytes, machine)
+
+
 def simulate_overlap(algorithm: str, p: int, p_local: int, nbytes: float,
                      machine: cost_model.MachineParams | str, *,
                      flops: float | None = None,
@@ -204,6 +225,8 @@ def simulate(collective: str, algorithm: str, p: int, p_local: int,
     if collective == "logsumexp_combine":
         return simulate_logsumexp_combine(algorithm, p, p_local, nbytes,
                                           machine)
+    if collective == "cache_migrate":
+        return simulate_cache_migrate(algorithm, p, p_local, nbytes, machine)
     if collective.startswith("overlap:i"):
         return simulate_overlap(algorithm, p, p_local, nbytes, machine,
                                 flops_per_byte=overlap_intensity(collective))
@@ -272,6 +295,10 @@ def _measure_real(collective: str, algorithm: str, p: int, p_local: int,
         def body(s):
             return C.allgather(s, "outer", "local", algorithm=algorithm,
                                tiled=True)
+    elif collective == "cache_migrate":
+        def body(s):
+            return C.cache_migrate(s, "outer", "local", algorithm=algorithm,
+                                   tiled=True)
     elif collective == "allreduce":
         def body(s):
             return C.allreduce(s, "outer", "local", algorithm=algorithm)

@@ -25,8 +25,9 @@ import threading
 
 from .cache import SchemaVersionError, TuningCache, bucket_bytes
 from .measure import (ALLREDUCE_ALGORITHMS, LOGSUMEXP_ALGORITHMS,
-                      OVERLAP_ALGORITHMS, Fingerprint, overlap_collective,
-                      overlap_intensity, simulate_allreduce,
+                      MIGRATE_ALGORITHMS, OVERLAP_ALGORITHMS, Fingerprint,
+                      overlap_collective, overlap_intensity,
+                      simulate_allreduce, simulate_cache_migrate,
                       simulate_logsumexp_combine, simulate_overlap)
 
 DEFAULT_TABLE_ENV = "REPRO_TUNING_TABLE"
@@ -133,6 +134,17 @@ class Policy:
             costs = {a: simulate_logsumexp_combine(a, p, p_local, nbytes,
                                                    self.machine)
                      for a in LOGSUMEXP_ALGORITHMS}
+            best = min(costs, key=costs.get)
+            return Selection(best, "model", costs[best])
+        if collective == "cache_migrate":
+            # KV-slab migration: single-region topologies take GSPMD's flat
+            # gather (nothing crosses a boundary); multi-region the three
+            # eligible schedules are priced on the slab's byte regime.
+            costs = {a: simulate_cache_migrate(a, p, p_local, nbytes,
+                                               self.machine)
+                     for a in MIGRATE_ALGORITHMS}
+            if p_local <= 1 or p <= p_local:
+                return Selection("xla", "model", costs["xla"])
             best = min(costs, key=costs.get)
             return Selection(best, "model", costs[best])
         if collective.startswith("overlap:i"):

@@ -21,15 +21,16 @@ from typing import Any, Sequence
 from repro.core import autotune
 from .cache import Entry, TuningCache, bucket_bytes, make_key
 from .measure import (ALLGATHER_ALGORITHMS, ALLREDUCE_ALGORITHMS,
-                      LOGSUMEXP_ALGORITHMS, OVERLAP_ALGORITHMS,
-                      OVERLAP_INTENSITY_OCTAVES, Fingerprint, measure,
-                      overlap_intensity, simulate_allreduce,
-                      simulate_logsumexp_combine, simulate_overlap)
+                      LOGSUMEXP_ALGORITHMS, MIGRATE_ALGORITHMS,
+                      OVERLAP_ALGORITHMS, OVERLAP_INTENSITY_OCTAVES,
+                      Fingerprint, measure, overlap_intensity,
+                      simulate_allreduce, simulate_logsumexp_combine,
+                      simulate_overlap)
 from .policy import Policy
 
 DEFAULT_SIZES = tuple(2 ** k for k in range(6, 23, 2))   # 64 B .. 4 MiB
 DEFAULT_COLLECTIVES = ("allgather", "allreduce", "logsumexp_combine",
-                       "overlap")
+                       "cache_migrate", "overlap")
 SMOKE_SIZES = (256, 4096, 65536)         # CI pre-merge: 3 octaves, 1 iter
 
 
@@ -38,7 +39,8 @@ def _algorithms_for(collective: str):
         return OVERLAP_ALGORITHMS
     return {"allgather": ALLGATHER_ALGORITHMS,
             "allreduce": ALLREDUCE_ALGORITHMS,
-            "logsumexp_combine": LOGSUMEXP_ALGORITHMS}[collective]
+            "logsumexp_combine": LOGSUMEXP_ALGORITHMS,
+            "cache_migrate": MIGRATE_ALGORITHMS}[collective]
 
 
 def _expand_collectives(collectives: Sequence[str]) -> list[str]:
@@ -118,6 +120,14 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
                 modeled = {a: simulate_allreduce(a, p, p_local, nbytes, machine)
                            for a in ALLREDUCE_ALGORITHMS}
                 self_cmp = eff_mode == "simulated"
+            elif collective == "cache_migrate":
+                # closed forms vs the round-simulated schedules: a genuine
+                # comparison even on CPU, like the allgather cells
+                from repro.core.cost_model import cache_migrate_model
+                modeled = {a: cache_migrate_model(a, p, p_local, nbytes,
+                                                  machine)
+                           for a in MIGRATE_ALGORITHMS}
+                self_cmp = False
             elif collective.startswith("overlap:i"):
                 fpb = overlap_intensity(collective)
                 modeled = {a: simulate_overlap(a, p, p_local, nbytes, machine,

@@ -291,6 +291,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro import configs
 from repro.data import SyntheticLM
 from repro.serve.engine import Engine
+from repro.serve.spec import ServeSpec
 from repro.train.step import custom_batch_specs, init_state, make_train_step
 
 mesh = jax.make_mesh((2, 4), ("pod", "data"))
@@ -320,10 +321,10 @@ toks = {}
 for name, kw in (("pod_loc", dict(combine="locality")),
                  ("pod_xla", dict(combine="xla")),
                  ("data_loc", dict(combine="locality", seq_axes=("data",)))):
-    eng = Engine(cfg, mesh, params, batch=1, cache_len=32, **kw)
+    eng = Engine(cfg, mesh, params, ServeSpec(batch=1, cache_len=32, **kw))
     if name == "pod_loc":
         assert eng.combine.p == 8 and eng.combine.p_local == 4, eng.combine
-        assert eng.art.combine_layers == cfg.n_layers, eng.art
+        assert eng.art.decode_fn_locality is not None, eng.art
     toks[name] = eng.generate(prompts, 4)
 assert np.array_equal(toks["pod_loc"], toks["pod_xla"]), toks
 assert np.array_equal(toks["pod_loc"], toks["data_loc"]), toks
@@ -343,6 +344,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro import configs
 from repro.data import SyntheticLM
 from repro.serve.engine import Engine
+from repro.serve.spec import ServeSpec
 from repro.train.step import custom_batch_specs, init_state, make_train_step
 
 mesh = jax.make_mesh((3, 2), ("pod", "data"))
@@ -397,11 +399,11 @@ toks = {}
 for name, kw in (("pod_loc", dict(combine="locality")),
                  ("pod_xla", dict(combine="xla")),
                  ("data_loc", dict(combine="locality", seq_axes=("data",)))):
-    eng = Engine(cfg, mesh, params, batch=1, cache_len=48, **kw)
+    eng = Engine(cfg, mesh, params, ServeSpec(batch=1, cache_len=48, **kw))
     if name == "pod_loc":
         assert eng.combine.algorithm == "locality", eng.combine
         assert eng.combine.p == 6 and eng.combine.p_local == 2, eng.combine
-        assert eng.art.combine_layers == cfg.n_layers, eng.art
+        assert eng.art.decode_fn_locality is not None, eng.art
     toks[name] = eng.generate(prompts, 4)
 assert np.array_equal(toks["pod_loc"], toks["pod_xla"]), toks
 assert np.array_equal(toks["pod_loc"], toks["data_loc"]), toks

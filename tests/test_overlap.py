@@ -292,6 +292,7 @@ import jax, jax.numpy as jnp, numpy as np
 from repro import configs
 from repro.models import transformer
 from repro.serve.engine import make_serve_fns
+from repro.serve.spec import ServeSpec
 
 mesh = jax.make_mesh((8,), ("data",))
 jax.set_mesh(mesh)
@@ -304,8 +305,9 @@ prompts = np.random.default_rng(0).integers(
 
 outs = {}
 for impl in ("jnp", "pallas_interpret"):
-    art = make_serve_fns(cfg, mesh, batch=B, cache_len=CL,
-                         combine="locality", fused_stats=impl)
+    art = make_serve_fns(cfg, mesh, ServeSpec(batch=B, cache_len=CL,
+                                          combine="locality",
+                                          fused_stats=impl))
     assert art.fused_stats == impl, art.fused_stats
     logits, cache = art.prefill_fn(params, {"tokens": jnp.asarray(prompts)})
     tok = jnp.argmax(logits[:, -1], axis=-1)[:, None].astype(jnp.int32)
@@ -314,7 +316,8 @@ for impl in ("jnp", "pallas_interpret"):
 np.testing.assert_allclose(outs["jnp"], outs["pallas_interpret"],
                            atol=1e-4, rtol=1e-4)
 # "auto" resolves to jnp on CPU backends (the kernel would only interpret)
-art = make_serve_fns(cfg, mesh, batch=B, cache_len=CL, combine="locality")
+art = make_serve_fns(cfg, mesh, ServeSpec(batch=B, cache_len=CL,
+                                          combine="locality"))
 assert art.fused_stats == "jnp", art.fused_stats
 print("SERVE_FUSED_OK")
 """

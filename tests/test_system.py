@@ -11,7 +11,7 @@ import numpy as np
 
 from repro import configs
 from repro.models import transformer
-from repro.serve import Engine
+from repro.serve import Engine, ServeSpec
 
 
 def test_end_to_end_tiny_train_then_serve(tmp_path):
@@ -50,7 +50,7 @@ def test_end_to_end_tiny_train_then_serve(tmp_path):
     # serve greedily; verify continuation follows tokens[t+1] = a*t + c
     mesh = jax.make_mesh((1,), ("data",))
     jax.set_mesh(mesh)
-    eng = Engine(cfg, mesh, state.params, batch=4, cache_len=48)
+    eng = Engine(cfg, mesh, state.params, ServeSpec(batch=4, cache_len=48))
     b = data.batch(1000)
     prompts = b["tokens"][:4, :16]
     toks = eng.generate(prompts, max_new=8)

@@ -348,6 +348,7 @@ import dataclasses, json, os, shutil
 import jax, jax.numpy as jnp, numpy as np
 from repro import configs, telemetry
 from repro.serve.engine import Engine
+from repro.serve.spec import ServeSpec
 from repro.train import Trainer, TrainerConfig
 from repro.models import transformer
 
@@ -400,7 +401,8 @@ prompts = np.random.default_rng(0).integers(
 NEW = 5
 engines = {}
 for alg in ("locality", "xla"):
-    eng = Engine(cfg, mesh, params, batch=1, cache_len=64, combine=alg)
+    eng = Engine(cfg, mesh, params, ServeSpec(batch=1, cache_len=64,
+                                              combine=alg))
     assert eng.comm_report is not None, f"decode comm stamping failed ({alg})"
     eng.generate(prompts, NEW)
     st = eng.stats()
