@@ -46,11 +46,12 @@ if __package__ in (None, ""):                     # `python benchmarks/run.py`
     sys.path.insert(1, os.path.join(_REPO, "src"))
     __package__ = "benchmarks"
 
-from . import (collective_hlo_audit, fig3_pingpong, fig7_model_scaling,
-               fig8_model_datasize, fig9_measured, overlap, roofline,
-               serve_combine)
+from . import (checkpoint_bench, collective_hlo_audit, fig3_pingpong,
+               fig7_model_scaling, fig8_model_datasize, fig9_measured,
+               overlap, roofline, serve_combine)
 
 BENCHES = {
+    "checkpoint": checkpoint_bench,
     "fig3": fig3_pingpong,
     "fig7": fig7_model_scaling,
     "fig8": fig8_model_datasize,

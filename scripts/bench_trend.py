@@ -74,6 +74,14 @@ METRICS: dict[str, tuple[str, bool]] = {
     # deterministic compile artifact, strict threshold
     "comm_nonlocal_bytes_per_step": ("lower", False),
     "comm_nonlocal_msgs_per_step": ("lower", False),
+    # distributed checkpoint (BENCH_checkpoint.json): save/restore/reshard
+    # wall-clock plus deterministic byte accounting — max_chunk_bytes
+    # drifting UP means save started gathering more than the shard
+    "save_wall_s": ("lower", True),
+    "restore_wall_s": ("lower", True),
+    "reshard_wall_s": ("lower", True),
+    "max_chunk_bytes": ("lower", False),
+    "replica_bytes": ("lower", False),
 }
 
 #: extra artifacts tracked alongside the BENCH_*.json pattern (relative to

@@ -69,6 +69,35 @@ def check_metrics(path: str, doc: dict) -> int:
                 print(f"{ctx}: FAIL — mean {h['mean']} outside "
                       f"[min {h['min']}, max {h['max']}]")
                 return 1
+    # checkpoint health invariants (DESIGN.md §10): any snapshot that did
+    # checkpoint I/O must show a clean writer — a failed save or a restore
+    # that had to fall back past a dangling LATEST is a CI failure even if
+    # the run itself "passed".
+    counters = doc.get("counters", {})
+    if counters.get("checkpoint/saves", 0) > 0 \
+            or counters.get("checkpoint/restores", 0) > 0:
+        for bad in ("checkpoint/save_failures", "checkpoint/latest_fallbacks",
+                    "checkpoint/manifest_fallbacks",
+                    "checkpoint/hash_failures"):
+            if counters.get(bad, 0) != 0:
+                print(f"{path}: FAIL — {bad} = {counters[bad]} after "
+                      f"{counters.get('checkpoint/saves', 0)} save(s) / "
+                      f"{counters.get('checkpoint/restores', 0)} restore(s) "
+                      f"(checkpoint I/O must be clean in CI)")
+                return 1
+        gauges = doc.get("gauges", {})
+        if counters.get("checkpoint/saves", 0) > 0:
+            mc = gauges.get("checkpoint/max_chunk_bytes")
+            tb = gauges.get("checkpoint/tree_bytes")
+            if not _finite(mc) or mc <= 0:
+                print(f"{path}: FAIL — checkpoint saves recorded but "
+                      f"checkpoint/max_chunk_bytes gauge is {mc!r}")
+                return 1
+            if _finite(tb) and mc > tb:
+                print(f"{path}: FAIL — max chunk ({mc:.0f} B) exceeds the "
+                      f"whole tree ({tb:.0f} B): save gathered more than "
+                      f"a shard")
+                return 1
     n_comm = 0
     for label, c in doc.get("comm", {}).items():
         ctx = f"{path}: comm {label!r}"

@@ -1,2 +1,5 @@
-from .store import (CheckpointManager, latest_step, restore_checkpoint,
-                    save_checkpoint)
+from .errors import CheckpointError
+from .store import (CheckpointDataError, CheckpointHealth, CheckpointManager,
+                    FAULT_POINTS, Snapshot, committed_step, extract_snapshot,
+                    latest_step, read_manifest, restore_checkpoint,
+                    save_checkpoint, write_snapshot)

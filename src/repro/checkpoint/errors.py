@@ -1,0 +1,26 @@
+"""Typed checkpoint failures.
+
+Restore-side validation raises :class:`CheckpointError` naming the leaf
+path (and chunk, where applicable) instead of bare ``assert`` — callers
+can distinguish "no checkpoint" (restore returns None) from "checkpoint
+present but unusable" (raises) and report *which* tensor broke.
+"""
+from __future__ import annotations
+
+
+class CheckpointError(RuntimeError):
+    """A checkpoint exists but cannot be used: architecture mismatch,
+    shape/dtype mismatch on a named leaf, or unrecoverable chunk loss
+    (every replica missing or hash-mismatched)."""
+
+    def __init__(self, message: str, *, leaf: str | None = None,
+                 step: int | None = None):
+        self.leaf = leaf
+        self.step = step
+        where = []
+        if step is not None:
+            where.append(f"step {step}")
+        if leaf:
+            where.append(f"leaf {leaf!r}")
+        suffix = f" [{', '.join(where)}]" if where else ""
+        super().__init__(message + suffix)

@@ -1,78 +1,305 @@
-"""Sharded checkpointing with atomic commit, async writes and elastic restore.
+"""Locality-aware sharded checkpointing: atomic commit, replication, reshard.
 
-Layout per checkpoint::
+Layout v2 (``manifest.json`` carries ``"schema": 2``)::
 
     <dir>/step_<N>/
-        manifest.json     step, leaf index, mesh shape, extra metadata
-        leaf_<i>.npy      one file per pytree leaf (global array)
-    <dir>/LATEST          text file: committed step number (atomic rename)
+        manifest.json           step, per-leaf chunk layout, mesh, replication
+        leaf_<i>_c<j>.npy       one file per DISTINCT device shard of leaf i
+        leaf_<i>_c<j>.r<k>.npy  k-th inter-pod replica of that chunk
+    <dir>/LATEST                text file: committed step number (os.replace)
 
-Writes go to ``step_<N>.tmp/`` and are renamed only after every leaf and the
-manifest are on disk — a crash mid-write never corrupts the newest complete
-checkpoint. Restore re-shards leaves onto the *current* mesh via
-``jax.device_put``, so a run checkpointed on 512 chips restarts unchanged on
-256 (elastic: the data-parallel axis size is free to change; manifest records
-the original mesh for audit). Async mode pushes the device→host copy and file
-I/O to a daemon thread so the train loop never blocks on storage.
+Save is *sharded*: each leaf is written as its deduplicated
+``addressable_shards`` — one chunk file per distinct shard slice, tagged
+with the owning pod (``topology.device_pod_map``) and content-hashed
+(sha256). No full-leaf host gather ever happens for a sharded leaf; the
+largest host allocation is one shard (``checkpoint/max_chunk_bytes`` gauge
+— the per-process-bytes test pins this). Inter-pod replication (factor
+priced by ``cost_model.checkpoint_replication_model`` — the degenerate
+one-round outer phase of the locality-Bruck schedule, each pod's shards
+mirrored to pod ``(p+k) mod q``) makes any single lost pod recoverable:
+restore fails over home → replica per chunk, hash-verifying each read.
+
+Restore reshards between arbitrary layouts (2×16 → 3×8 → flat, q arbitrary
+— the PR 5 allgatherv adaptation keeps every target layout expressible):
+``jax.make_array_from_callback`` asks for exactly each device's slice, which
+is assembled from the intersecting chunks — never the full leaf on host,
+never a cross-host gather. Step resolution prefers the committed ``LATEST``
+pointer, falls back to a directory scan (``checkpoint/latest_fallbacks``)
+when it is missing or dangling, and a corrupt/partial step falls back to
+the previous complete one (``checkpoint/manifest_fallbacks``). Validation
+raises typed :class:`CheckpointError` naming the leaf path.
+
+Durability: every write lands in ``step_<N>.tmp/`` and is renamed into
+place only when complete; every durable mutation routes through the
+``repro.faults`` injection waist (points ``checkpoint/chunk_write``,
+``manifest_write``, ``commit_rename``, ``latest_write``, ``latest_rename``)
+so the crash-recovery property tests can tear or kill any byte of the
+protocol. The async :class:`CheckpointManager` snapshots shard-wise,
+retries transient ``OSError`` with bounded exponential backoff, and
+surfaces a structured :class:`CheckpointHealth` instead of deferring
+exceptions to the next ``save()``.
+
+v1 manifests (no ``"schema"`` key, ``leaf_<i>.npy`` files) restore
+unchanged — old run directories stay readable.
 """
 from __future__ import annotations
 
+import dataclasses
+import hashlib
+import io
 import json
 import os
 import shutil
 import threading
+import time
 
 import jax
 import numpy as np
 
 from repro import telemetry
+from repro.faults import FaultHarness, guard, write_bytes
+from .errors import CheckpointError
+
+SCHEMA_VERSION = 2
+
+# fault-injection points (repro.faults), in protocol order
+POINT_CHUNK = "checkpoint/chunk_write"
+POINT_MANIFEST = "checkpoint/manifest_write"
+POINT_COMMIT = "checkpoint/commit_rename"
+POINT_LATEST = "checkpoint/latest_write"
+POINT_LATEST_RENAME = "checkpoint/latest_rename"
+FAULT_POINTS = (POINT_CHUNK, POINT_MANIFEST, POINT_COMMIT, POINT_LATEST,
+                POINT_LATEST_RENAME)
 
 
-def _leaf_paths(tree):
-    leaves, treedef = jax.tree.flatten(tree)
-    return leaves, treedef
+class CheckpointDataError(CheckpointError):
+    """A step's data is partial/corrupt (missing chunk, hash mismatch on
+    every replica, truncated file). Restore treats it as fall-back-able —
+    unlike a structural :class:`CheckpointError` (architecture mismatch),
+    which always raises."""
 
 
-def save_checkpoint(ckpt_dir: str, step: int, tree, *, extra: dict | None = None,
-                    keep_last: int = 3) -> str:
+# ---------------------------------------------------------------------------
+# shard-wise extraction (the device→host half of a save)
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class _Chunk:
+    index: list          # [[start, stop], ...] per dim (== [] for scalars)
+    pod: int
+    data: np.ndarray
+
+
+@dataclasses.dataclass
+class _LeafRecord:
+    name: str
+    shape: tuple
+    dtype: str
+    sharded: bool
+    chunks: list
+
+
+@dataclasses.dataclass
+class Snapshot:
+    """Host-side shard-wise copy of one pytree — what the async writer
+    thread consumes after the train loop has moved on."""
+
+    step: int
+    records: list
+    treedef_str: str
+    mesh: dict | None
+    extra: dict
+
+
+def _path_name(path) -> str:
+    parts = []
+    for p in path:
+        for attr in ("key", "idx", "name"):
+            v = getattr(p, attr, None)
+            if v is not None:
+                parts.append(str(v))
+                break
+        else:                                       # pragma: no cover
+            parts.append(str(p))
+    return "/".join(parts) or "<root>"
+
+
+def _norm_index(index, shape) -> list:
+    out = []
+    for sl, dim in zip(index, shape):
+        start = 0 if sl.start is None else int(sl.start)
+        stop = int(dim) if sl.stop is None else int(sl.stop)
+        out.append([start, stop])
+    return out
+
+
+def _mesh_info(leaves) -> dict | None:
+    for leaf in leaves:
+        mesh = getattr(getattr(leaf, "sharding", None), "mesh", None)
+        names = tuple(getattr(mesh, "axis_names", ()) or ())
+        if mesh is not None and names:
+            shape = [int(s) for s in np.asarray(mesh.devices).shape]
+            n_pods = shape[names.index("pod")] if "pod" in names else 1
+            return {"axes": list(names), "shape": shape, "n_pods": n_pods}
+    return None
+
+
+def _extract_leaf(path, leaf) -> _LeafRecord:
+    name = _path_name(path)
+    shards = getattr(leaf, "addressable_shards", None)
+    if isinstance(leaf, jax.Array) and shards:
+        podmap = None
+        mesh = getattr(leaf.sharding, "mesh", None)
+        if mesh is not None and "pod" in tuple(getattr(mesh, "axis_names",
+                                                       ()) or ()):
+            from repro.core.topology import device_pod_map
+            podmap = device_pod_map(mesh, ("pod",))
+        seen: dict[tuple, _Chunk] = {}
+        for s in shards:
+            key = tuple((sl.start, sl.stop) for sl in s.index)
+            if key in seen:
+                continue
+            pod = podmap.get(s.device.id, 0) if podmap else 0
+            # np.asarray(shard.data) is the ONLY device→host copy: one
+            # shard, never the assembled leaf
+            seen[key] = _Chunk(_norm_index(s.index, leaf.shape), pod,
+                               np.asarray(s.data))
+        chunks = list(seen.values())
+        return _LeafRecord(name, tuple(int(d) for d in leaf.shape),
+                           str(leaf.dtype), len(chunks) > 1, chunks)
+    arr = np.asarray(jax.device_get(leaf))
+    return _LeafRecord(name, tuple(arr.shape), str(arr.dtype), False,
+                       [_Chunk([[0, int(d)] for d in arr.shape], 0, arr)])
+
+
+def extract_snapshot(step: int, tree, extra: dict | None = None) -> Snapshot:
+    """Shard-wise host snapshot (the caller may then donate/overwrite the
+    device buffers; the writer thread works from this copy alone)."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    records = [_extract_leaf(path, leaf) for path, leaf in flat]
+    return Snapshot(step=step, records=records, treedef_str=str(treedef),
+                    mesh=_mesh_info([l for _, l in flat]), extra=extra or {})
+
+
+# ---------------------------------------------------------------------------
+# write path (atomic commit + replication + fault points)
+# ---------------------------------------------------------------------------
+def _npy_bytes(arr: np.ndarray) -> bytes:
+    buf = io.BytesIO()
+    np.save(buf, arr, allow_pickle=False)
+    return buf.getvalue()
+
+
+def _resolve_replication(replication, q: int, shard_bytes: int,
+                         machine: str) -> int:
+    from repro.core.cost_model import choose_replication
+    if replication == "auto":
+        rf = choose_replication(q, float(shard_bytes), machine)
+    else:
+        rf = 1 if replication in (None, 0) else int(replication)
+    return max(1, min(rf, max(q, 1)))
+
+
+def write_snapshot(ckpt_dir: str, snap: Snapshot, *, keep_last: int = 3,
+                   replication="auto", faults: FaultHarness | None = None,
+                   machine: str = "tpu_multipod") -> str:
+    from repro.core.cost_model import checkpoint_replication_model
+    reg = telemetry.get_registry()
     os.makedirs(ckpt_dir, exist_ok=True)
-    leaves, treedef = _leaf_paths(tree)
-    host_leaves = [np.asarray(jax.device_get(l)) for l in leaves]
-
+    step = snap.step
     final = os.path.join(ckpt_dir, f"step_{step:08d}")
     tmp = final + ".tmp"
     if os.path.exists(tmp):
         shutil.rmtree(tmp)
     os.makedirs(tmp)
-    for i, arr in enumerate(host_leaves):
-        np.save(os.path.join(tmp, f"leaf_{i}.npy"), arr)
-    manifest = {
-        "step": step,
-        "n_leaves": len(host_leaves),
-        "treedef": str(treedef),
-        "dtypes": [str(a.dtype) for a in host_leaves],
-        "shapes": [list(a.shape) for a in host_leaves],
-        "extra": extra or {},
-    }
-    with open(os.path.join(tmp, "manifest.json"), "w") as f:
-        json.dump(manifest, f)
+
+    q = (snap.mesh or {}).get("n_pods", 1)
+    max_chunk = max((c.data.nbytes for r in snap.records for c in r.chunks),
+                    default=0)
+    rf = _resolve_replication(replication, q, max_chunk, machine)
+
+    leaves_meta = []
+    total_bytes = replica_bytes = tree_bytes = 0
+    for i, rec in enumerate(snap.records):
+        chunk_meta = []
+        for ci, chunk in enumerate(rec.chunks):
+            data = _npy_bytes(chunk.data)
+            digest = hashlib.sha256(data).hexdigest()
+            files = []
+            for r in range(rf):
+                fname = (f"leaf_{i:04d}_c{ci}.npy" if r == 0
+                         else f"leaf_{i:04d}_c{ci}.r{r}.npy")
+                write_bytes(os.path.join(tmp, fname), data, faults=faults,
+                            point=POINT_CHUNK)
+                files.append({"file": fname,
+                              "pod": (chunk.pod + r) % max(q, 1),
+                              "sha256": digest})
+                if r:
+                    replica_bytes += len(data)
+            total_bytes += len(data)
+            chunk_meta.append({"index": chunk.index, "files": files})
+        tree_bytes += int(np.prod(rec.shape, dtype=np.int64)
+                          if rec.shape else 1) * rec.chunks[0].data.itemsize
+        leaves_meta.append({"path": rec.name, "shape": list(rec.shape),
+                            "dtype": rec.dtype, "sharded": rec.sharded,
+                            "chunks": chunk_meta})
+    manifest = {"schema": SCHEMA_VERSION, "step": step,
+                "n_leaves": len(snap.records), "treedef": snap.treedef_str,
+                "mesh": snap.mesh, "replication": rf,
+                "leaves": leaves_meta, "extra": snap.extra or {}}
+    write_bytes(os.path.join(tmp, "manifest.json"),
+                json.dumps(manifest).encode(), faults=faults,
+                point=POINT_MANIFEST)
     if os.path.exists(final):
         shutil.rmtree(final)
-    os.rename(tmp, final)                       # atomic commit
-    with open(os.path.join(ckpt_dir, "LATEST.tmp"), "w") as f:
-        f.write(str(step))
-    os.replace(os.path.join(ckpt_dir, "LATEST.tmp"),
-               os.path.join(ckpt_dir, "LATEST"))
+    guard(POINT_COMMIT, faults)
+    os.rename(tmp, final)                            # atomic commit
+    ltmp = os.path.join(ckpt_dir, "LATEST.tmp")
+    write_bytes(ltmp, str(step).encode(), faults=faults, point=POINT_LATEST)
+    guard(POINT_LATEST_RENAME, faults)
+    os.replace(ltmp, os.path.join(ckpt_dir, "LATEST"))
     _gc(ckpt_dir, keep_last)
+
+    reg.gauge("checkpoint/save_bytes").set(float(total_bytes))
+    reg.gauge("checkpoint/replica_bytes").set(float(replica_bytes))
+    reg.gauge("checkpoint/max_chunk_bytes").set(float(max_chunk))
+    reg.gauge("checkpoint/tree_bytes").set(float(tree_bytes))
+    reg.gauge("checkpoint/replication").set(float(rf))
+    if rf > 1:
+        reg.gauge("checkpoint/replication_model_s").set(
+            checkpoint_replication_model(q, float(max_chunk), machine, rf=rf))
     return final
 
 
+def save_checkpoint(ckpt_dir: str, step: int, tree, *,
+                    extra: dict | None = None, keep_last: int = 3,
+                    replication="auto", faults: FaultHarness | None = None,
+                    machine: str = "tpu_multipod") -> str:
+    snap = extract_snapshot(step, tree, extra)
+    return write_snapshot(ckpt_dir, snap, keep_last=keep_last,
+                          replication=replication, faults=faults,
+                          machine=machine)
+
+
 def _gc(ckpt_dir: str, keep_last: int) -> None:
+    """Delete all but the newest ``keep_last`` steps — but never the step
+    ``LATEST`` points at (the old _gc could unlink the committed pointer's
+    target, leaving restore a dangling LATEST)."""
+    if not keep_last:
+        return
     steps = sorted(_all_steps(ckpt_dir))
-    for s in steps[:-keep_last] if keep_last else []:
-        shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"), ignore_errors=True)
+    keep = set(steps[-keep_last:])
+    pinned = _read_latest(ckpt_dir)
+    if pinned is not None:
+        keep.add(pinned)
+    for s in steps:
+        if s not in keep:
+            shutil.rmtree(os.path.join(ckpt_dir, f"step_{s:08d}"),
+                          ignore_errors=True)
 
 
+# ---------------------------------------------------------------------------
+# step resolution
+# ---------------------------------------------------------------------------
 def _all_steps(ckpt_dir: str) -> list[int]:
     if not os.path.isdir(ckpt_dir):
         return []
@@ -84,88 +311,328 @@ def _all_steps(ckpt_dir: str) -> list[int]:
     return out
 
 
+def _read_latest(ckpt_dir: str) -> int | None:
+    try:
+        with open(os.path.join(ckpt_dir, "LATEST")) as f:
+            return int(f.read().strip())
+    except (OSError, ValueError):
+        return None
+
+
 def latest_step(ckpt_dir: str) -> int | None:
+    """Newest step with a manifest on disk (directory scan — see
+    :func:`committed_step` for the LATEST-preferring resolution)."""
     steps = _all_steps(ckpt_dir)
     return max(steps) if steps else None
+
+
+def committed_step(ckpt_dir: str) -> int | None:
+    """The step restore should load: the committed ``LATEST`` pointer when
+    it is readable and its target exists; otherwise fall back to the
+    directory scan and count ``checkpoint/latest_fallbacks`` (a fallback
+    means a crash landed between commit and pointer update, or a pre-v2
+    directory)."""
+    pinned = _read_latest(ckpt_dir)
+    if pinned is not None and os.path.exists(
+            os.path.join(ckpt_dir, f"step_{pinned:08d}", "manifest.json")):
+        return pinned
+    steps = _all_steps(ckpt_dir)
+    if pinned is not None or steps:
+        telemetry.get_registry().count("checkpoint/latest_fallbacks")
+    return max(steps) if steps else None
+
+
+def _load_manifest(d: str, step: int) -> dict:
+    try:
+        with open(os.path.join(d, "manifest.json")) as f:
+            manifest = json.load(f)
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointDataError(f"manifest unreadable: {e}", step=step)
+    if not isinstance(manifest, dict) or "n_leaves" not in manifest:
+        raise CheckpointDataError("manifest missing required keys", step=step)
+    if manifest.get("schema", 1) >= 2 and "leaves" not in manifest:
+        raise CheckpointDataError("v2 manifest missing leaf table", step=step)
+    return manifest
+
+
+def read_manifest(ckpt_dir: str, *, step: int | None = None
+                  ) -> tuple[int, dict] | None:
+    """(step, manifest) for the committed (or explicit) step; None when the
+    directory holds no complete checkpoint. Used by consumers that need the
+    ``extra`` metadata before deciding what to restore (serve resume)."""
+    step = step if step is not None else committed_step(ckpt_dir)
+    if step is None:
+        return None
+    return step, _load_manifest(os.path.join(ckpt_dir, f"step_{step:08d}"),
+                                step)
+
+
+# ---------------------------------------------------------------------------
+# restore path (reshard via per-device chunk assembly)
+# ---------------------------------------------------------------------------
+def _read_chunk(d: str, meta: dict, ci: int, step: int) -> np.ndarray:
+    """One chunk, failing over home → replicas with hash verification."""
+    reg = telemetry.get_registry()
+    errs = []
+    for fi, finfo in enumerate(meta["chunks"][ci]["files"]):
+        path = os.path.join(d, finfo["file"])
+        try:
+            with open(path, "rb") as f:
+                raw = f.read()
+        except OSError as e:
+            errs.append(f"{finfo['file']}: {e}")
+            continue
+        if hashlib.sha256(raw).hexdigest() != finfo["sha256"]:
+            reg.count("checkpoint/hash_failures")
+            errs.append(f"{finfo['file']}: sha256 mismatch")
+            continue
+        if fi:
+            reg.count("checkpoint/replica_reads")
+        return np.load(io.BytesIO(raw), allow_pickle=False)
+    raise CheckpointDataError(
+        f"chunk {ci} unrecoverable from any replica ({'; '.join(errs)})",
+        leaf=meta["path"], step=step)
+
+
+def _assemble(d: str, meta: dict, index, cache: dict, step: int
+              ) -> np.ndarray:
+    """The slice ``index`` of a leaf, copied out of intersecting chunks —
+    the host allocation is the requested slice, not the leaf."""
+    shape = tuple(meta["shape"])
+    tgt = _norm_index(index, shape)
+    out = None
+    covered = 0
+    for ci, cm in enumerate(meta["chunks"]):
+        src = cm["index"]
+        inter = [[max(a1, a2), min(b1, b2)]
+                 for (a1, b1), (a2, b2) in zip(src, tgt)]
+        if any(a >= b for a, b in inter):
+            continue
+        data = _read_chunk(d, meta, ci, step) if ci not in cache \
+            else cache[ci]
+        cache[ci] = data
+        if out is None:
+            out = np.empty([b - a for a, b in tgt], dtype=data.dtype)
+        sl_src = tuple(slice(a - s[0], b - s[0])
+                       for (a, b), s in zip(inter, src))
+        sl_dst = tuple(slice(a - t[0], b - t[0])
+                       for (a, b), t in zip(inter, tgt))
+        out[sl_dst] = data[sl_src]
+        covered += int(np.prod([b - a for a, b in inter], dtype=np.int64)
+                       if inter else 1)
+    want = int(np.prod([b - a for a, b in tgt], dtype=np.int64)
+               if tgt else 1)
+    if out is None or covered != want:
+        raise CheckpointDataError(
+            f"chunks cover {covered}/{want} elements of slice {tgt}",
+            leaf=meta["path"], step=step)
+    return out
+
+
+def _load_leaf_v2(d: str, meta: dict, like, sharding, step: int):
+    shape = tuple(meta["shape"])
+    if tuple(like.shape) != shape:
+        raise CheckpointError(
+            f"checkpoint shape {list(shape)} != expected {list(like.shape)}",
+            leaf=meta["path"], step=step)
+    cache: dict[int, np.ndarray] = {}
+    if sharding is not None and getattr(sharding, "mesh", None) is not None:
+        # reshard-on-read: each device's callback assembles exactly its
+        # slice under the TARGET layout from the stored chunks — a 2×16
+        # save restores onto 3×8 or flat without the full leaf ever
+        # existing on host
+        return jax.make_array_from_callback(
+            shape, sharding,
+            lambda index: _assemble(d, meta, index, cache, step))
+    full = _assemble(d, meta, tuple(slice(0, s) for s in shape), cache, step)
+    return jax.device_put(full, sharding) if sharding is not None \
+        else jax.device_put(full)
+
+
+def _load_leaf_v1(d: str, i: int, like, sharding, step: int):
+    arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
+    if tuple(arr.shape) != tuple(like.shape):
+        raise CheckpointError(
+            f"checkpoint shape {list(arr.shape)} != expected "
+            f"{list(like.shape)}", leaf=f"leaf_{i}", step=step)
+    return jax.device_put(arr, sharding) if sharding is not None \
+        else jax.device_put(arr)
+
+
+def _materialize(d: str, manifest: dict, like, shardings, step: int):
+    leaves_like, treedef = jax.tree.flatten(like)
+    if manifest["n_leaves"] != len(leaves_like):
+        raise CheckpointError(
+            f"checkpoint has {manifest['n_leaves']} leaves, expected "
+            f"{len(leaves_like)} — architecture mismatch", step=step)
+    shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
+                    else [None] * len(leaves_like))
+    v2 = manifest.get("schema", 1) >= 2
+    out = []
+    for i, (lk, sh) in enumerate(zip(leaves_like, shard_leaves)):
+        if v2:
+            out.append(_load_leaf_v2(d, manifest["leaves"][i], lk, sh, step))
+        else:
+            out.append(_load_leaf_v1(d, i, lk, sh, step))
+    return jax.tree.unflatten(treedef, out)
 
 
 def restore_checkpoint(ckpt_dir: str, like, *, step: int | None = None,
                        shardings=None):
     """Restore into the structure of ``like`` (a pytree of arrays or
-    ShapeDtypeStructs). ``shardings``: matching pytree of Shardings for
-    elastic placement on the current mesh; None → default placement.
-
-    Returns (step, tree) or None if no complete checkpoint exists.
+    ShapeDtypeStructs); ``shardings``: matching pytree of Shardings for
+    elastic placement on the *current* mesh (arbitrary layout — restore
+    reshards chunk-wise). Prefers the committed ``LATEST`` step; a
+    corrupt/partial step falls back to the previous complete one
+    (``checkpoint/manifest_fallbacks``). Returns ``(step, tree)`` or None
+    when no checkpoint exists; raises :class:`CheckpointError` on
+    architecture mismatch or when every candidate step is unusable.
     """
-    step = step if step is not None else latest_step(ckpt_dir)
-    if step is None:
-        return None
-    d = os.path.join(ckpt_dir, f"step_{step:08d}")
-    with open(os.path.join(d, "manifest.json")) as f:
-        manifest = json.load(f)
-    leaves_like, treedef = jax.tree.flatten(like)
-    assert manifest["n_leaves"] == len(leaves_like), (
-        f"checkpoint has {manifest['n_leaves']} leaves, expected "
-        f"{len(leaves_like)} — architecture mismatch")
-    shard_leaves = (jax.tree.flatten(shardings)[0] if shardings is not None
-                    else [None] * len(leaves_like))
-    out = []
-    for i, (lk, sh) in enumerate(zip(leaves_like, shard_leaves)):
-        arr = np.load(os.path.join(d, f"leaf_{i}.npy"))
-        assert tuple(arr.shape) == tuple(lk.shape), (
-            f"leaf {i}: ckpt shape {arr.shape} != expected {lk.shape}")
-        out.append(jax.device_put(arr, sh) if sh is not None else
-                   jax.device_put(arr))
-    return step, jax.tree.unflatten(treedef, out)
+    reg = telemetry.get_registry()
+    explicit = step is not None
+    if explicit:
+        candidates = [step]
+    else:
+        head = committed_step(ckpt_dir)
+        if head is None:
+            return None
+        candidates = [head] + sorted(
+            (s for s in _all_steps(ckpt_dir) if s != head), reverse=True)
+    last_err: CheckpointDataError | None = None
+    for s in candidates:
+        d = os.path.join(ckpt_dir, f"step_{s:08d}")
+        try:
+            manifest = _load_manifest(d, s)
+            return s, _materialize(d, manifest, like, shardings, s)
+        except CheckpointDataError as e:
+            if explicit:
+                raise
+            # partial/corrupt step: fall back to the previous complete one
+            reg.count("checkpoint/manifest_fallbacks")
+            last_err = e
+    raise CheckpointError(
+        f"no usable checkpoint under {ckpt_dir}: {last_err}")
+
+
+# ---------------------------------------------------------------------------
+# async manager
+# ---------------------------------------------------------------------------
+@dataclasses.dataclass
+class CheckpointHealth:
+    """Structured writer health — what the Trainer inspects *between*
+    saves instead of discovering a stale failure inside the next one.
+
+    state: "ok" (every save committed cleanly), "degraded" (committed, but
+    a retry fired or an earlier save failed), "failed" (the most recent
+    attempt failed — the newest snapshot is NOT on disk)."""
+
+    state: str = "ok"
+    last_saved_step: int | None = None
+    last_error: str | None = None
+    failures: int = 0
+    retries: int = 0
+    pending: bool = False
 
 
 class CheckpointManager:
-    """Async checkpointing: ``save`` returns immediately; a daemon thread
-    serializes writes. ``wait()`` blocks until the queue drains (used before
-    shutdown and in tests)."""
+    """Async checkpointing: ``save`` snapshots shard-wise and returns; a
+    daemon thread serializes writes with bounded retry-with-backoff on
+    transient ``OSError``. A previous save's failure never aborts the next
+    ``save()`` (it lands in :attr:`health` / ``healthy()``); ``wait()``
+    still blocks and raises the latest error — the end-of-run contract."""
 
-    def __init__(self, ckpt_dir: str, keep_last: int = 3):
+    def __init__(self, ckpt_dir: str, keep_last: int = 3, *,
+                 replication="auto", retries: int = 3,
+                 backoff_s: float = 0.05,
+                 faults: FaultHarness | None = None,
+                 machine: str = "tpu_multipod"):
         self.ckpt_dir = ckpt_dir
         self.keep_last = keep_last
-        self._lock = threading.Lock()
+        self.replication = replication
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.faults = faults
+        self.machine = machine
+        self.health = CheckpointHealth()
         self._thread: threading.Thread | None = None
         self._error: BaseException | None = None
 
+    def healthy(self) -> bool:
+        return self.health.state != "failed"
+
     def save(self, step: int, tree, *, extra: dict | None = None,
              blocking: bool = False) -> None:
-        # snapshot to host synchronously (cheap on CPU; on TPU this is the
-        # device->host DMA) so the train loop may donate/overwrite buffers.
         tracer = telemetry.get_tracer()
+        reg = telemetry.get_registry()
         with tracer.span("checkpoint/save", step=step):
-            leaves, treedef = jax.tree.flatten(tree)
-            host = [np.asarray(jax.device_get(l)) for l in leaves]
-            snapshot = jax.tree.unflatten(treedef, host)
+            # shard-sized host copies (device→host DMA of each shard, never
+            # an assembled leaf) — the loop may then donate the buffers
+            snap = extract_snapshot(step, tree, extra)
 
         def work():
+            t0 = time.perf_counter()
+            attempt = 0
             try:
-                # the writer thread's spans land in their own trace lane
-                with tracer.span("checkpoint/write", step=step):
-                    save_checkpoint(self.ckpt_dir, step, snapshot,
-                                    extra=extra, keep_last=self.keep_last)
-                telemetry.get_registry().count("checkpoint/saves")
-            except BaseException as e:       # surfaced on next wait()
+                while True:
+                    try:
+                        with tracer.span("checkpoint/write", step=step):
+                            write_snapshot(
+                                self.ckpt_dir, snap,
+                                keep_last=self.keep_last,
+                                replication=self.replication,
+                                faults=self.faults, machine=self.machine)
+                        break
+                    except OSError:
+                        if attempt >= self.retries:
+                            raise
+                        delay = self.backoff_s * (2 ** attempt)
+                        attempt += 1
+                        self.health.retries += 1
+                        reg.count("checkpoint/retries")
+                        time.sleep(delay)
+            except BaseException as e:
                 self._error = e
+                self.health.failures += 1
+                self.health.state = "failed"
+                self.health.last_error = f"{type(e).__name__}: {e}"
+                self.health.pending = False
+                reg.count("checkpoint/save_failures")
+                return
+            self.health.last_saved_step = step
+            self.health.state = ("degraded" if attempt or self.health.failures
+                                 else "ok")
+            self.health.pending = False
+            reg.count("checkpoint/saves")
+            reg.observe("checkpoint/save_s", time.perf_counter() - t0)
 
-        self.wait()
+        # join (never raise): surfacing the PREVIOUS save's failure here
+        # used to abort before the new writer started, losing THIS snapshot
+        self._join()
+        self.health.pending = True
         self._thread = threading.Thread(target=work, daemon=True)
         self._thread.start()
         if blocking:
             self.wait()
 
-    def wait(self) -> None:
+    def _join(self) -> None:
         if self._thread is not None:
             self._thread.join()
             self._thread = None
+
+    def wait(self) -> None:
+        """Block until the queue drains; raise the pending error, if any."""
+        self._join()
         if self._error is not None:
             err, self._error = self._error, None
             raise err
 
     def restore(self, like, *, shardings=None):
+        reg = telemetry.get_registry()
+        t0 = time.perf_counter()
         with telemetry.get_tracer().span("checkpoint/restore"):
-            return restore_checkpoint(self.ckpt_dir, like,
-                                      shardings=shardings)
+            out = restore_checkpoint(self.ckpt_dir, like,
+                                     shardings=shardings)
+        if out is not None:
+            reg.count("checkpoint/restores")
+            reg.observe("checkpoint/restore_s", time.perf_counter() - t0)
+        return out

@@ -421,6 +421,45 @@ def cache_migrate_model(algorithm: str, p: int, p_local: int,
     raise ValueError(f"unknown cache_migrate algorithm {algorithm!r}")
 
 
+def checkpoint_replication_model(q: int, shard_bytes: float,
+                                 m: MachineParams | str, *,
+                                 rf: int = 2) -> float:
+    """Price of placing ``rf - 1`` inter-pod replicas of each rank's
+    checkpoint shard (checkpoint layout v2, DESIGN.md §10).
+
+    Replica exchange is the degenerate outer phase of the locality-Bruck
+    schedule: every rank sends its shard to the lane-aligned rank of pod
+    ``(p + k) mod q`` for k = 1..rf-1 — (rf-1) non-local messages of
+    ``shard_bytes`` each, zero local traffic (the shard already lives on
+    the sender). The same Eq.-2 postal terms as the gather's outer rounds,
+    so replication and the training collectives are priced in one currency.
+    """
+    if isinstance(m, str):
+        m = MACHINES[m]
+    rf = min(rf, max(q, 1))
+    if q <= 1 or rf <= 1:
+        return 0.0
+    n = rf - 1
+    return m.cost(n_local=0, s_local=0.0, n_nonlocal=n,
+                  s_nonlocal=n * shard_bytes)
+
+
+def choose_replication(q: int, shard_bytes: float, m: MachineParams | str, *,
+                       budget_s: float | None = None) -> int:
+    """Replication factor for checkpoint v2: 2 (one inter-pod replica —
+    any single lost pod is recoverable from its neighbour) whenever the
+    topology has pods to replicate across and the modeled exchange fits
+    ``budget_s``; 1 otherwise. The budget defaults to unconstrained: a
+    checkpoint's replica exchange overlaps the async writer, so only an
+    explicit operator budget (e.g. a preemption grace window) trims it."""
+    if q <= 1:
+        return 1
+    if budget_s is not None and checkpoint_replication_model(
+            q, shard_bytes, m, rf=2) > budget_s:
+        return 1
+    return 2
+
+
 def schedule_cost(schedule, m: MachineParams, block_bytes: float,
                   region: RegionMap | None = None, *,
                   mode: str = "round") -> float:

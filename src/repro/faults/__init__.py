@@ -1,0 +1,2 @@
+from .harness import (FaultHarness, FaultSpec, ProcessKilled, guard,
+                      write_bytes)

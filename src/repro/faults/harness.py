@@ -1,0 +1,125 @@
+"""Deterministic fault injection for durability code paths.
+
+The checkpoint store routes every durable mutation (chunk write, manifest
+write, commit rename, LATEST replace) through a narrow waist that consults a
+:class:`FaultHarness` before touching the filesystem. Tests arm the harness
+with :class:`FaultSpec`s to make a *specific* byte hit the disk torn, an
+*exact* rename die, or a randomly-chosen write kill the process — and
+because the harness is seeded, a failing schedule replays bit-for-bit from
+its seed alone (the property tests print the seed on failure).
+
+Three failure modes:
+
+``io_error``
+    The write raises :class:`OSError` before any byte lands — the transient
+    class (full disk, flaky NFS) the store's bounded retry absorbs.
+``torn``
+    Half the payload lands, then :class:`ProcessKilled` — the crash window
+    the atomic-commit protocol (tmp dir + rename) must make invisible.
+``kill``
+    :class:`ProcessKilled` before any byte lands — SIGKILL between
+    syscalls.
+
+``ProcessKilled`` subclasses ``BaseException`` deliberately: a real SIGKILL
+is not an application error, so no ``except Exception`` recovery path
+(retry loops, the Trainer's fault recovery) may swallow it. Only top-level
+test drivers catch it.
+"""
+from __future__ import annotations
+
+import dataclasses
+import fnmatch
+
+import numpy as np
+
+
+class ProcessKilled(BaseException):
+    """Simulated hard kill (SIGKILL / preemption without grace).
+
+    BaseException on purpose: recovery code that catches ``Exception``
+    must not survive it — the process is gone; only the harness driver
+    (the test) observes it.
+    """
+
+
+@dataclasses.dataclass(frozen=True)
+class FaultSpec:
+    """One armed failure. Matches a fault ``point`` (glob ok) and fires
+    either at an exact hit count (``at``, 0-based per point) or at random
+    with probability ``rate`` per hit; ``times`` bounds total firings."""
+
+    point: str                 # e.g. "checkpoint/chunk_write", "checkpoint/*"
+    mode: str = "io_error"     # io_error | torn | kill
+    at: int | None = None      # fire on the at-th hit of a matching point
+    rate: float = 0.0          # else: fire with this probability per hit
+    times: int = 1             # firings before the spec disarms
+
+    def __post_init__(self):
+        if self.mode not in ("io_error", "torn", "kill"):
+            raise ValueError(f"unknown fault mode {self.mode!r}")
+
+
+class FaultHarness:
+    """Seeded decision point: ``check(point)`` returns the failure mode to
+    apply right now, or None. Hit counters are global across the harness's
+    lifetime (a retried write is a *new* hit — an ``at=0`` io_error fires
+    once and the retry goes through, exactly the transient-fault shape)."""
+
+    def __init__(self, specs: tuple[FaultSpec, ...] | list[FaultSpec] = (),
+                 seed: int = 0):
+        self.specs = tuple(specs)
+        self.seed = seed
+        self._rng = np.random.Generator(np.random.Philox(key=seed))
+        self._hits: dict[str, int] = {}
+        self._fired: dict[int, int] = {i: 0 for i in range(len(self.specs))}
+        self.log: list[tuple[str, str, int]] = []   # (point, mode, hit)
+
+    def hits(self, point: str) -> int:
+        return self._hits.get(point, 0)
+
+    def check(self, point: str) -> str | None:
+        """Record one hit of ``point``; return the armed mode if a spec
+        fires (first matching spec wins), else None."""
+        n = self._hits.get(point, 0)
+        self._hits[point] = n + 1
+        for i, spec in enumerate(self.specs):
+            if self._fired[i] >= spec.times:
+                continue
+            if not fnmatch.fnmatch(point, spec.point):
+                continue
+            fire = (n == spec.at) if spec.at is not None else (
+                spec.rate > 0 and self._rng.random() < spec.rate)
+            if fire:
+                self._fired[i] += 1
+                self.log.append((point, spec.mode, n))
+                return spec.mode
+        return None
+
+
+def write_bytes(path: str, data: bytes, *, faults: FaultHarness | None,
+                point: str) -> None:
+    """The injection waist for payload writes: apply the armed failure
+    mode, else write ``data`` to ``path`` in full."""
+    mode = faults.check(point) if faults is not None else None
+    if mode == "io_error":
+        raise OSError(f"injected io_error at {point} ({path})")
+    if mode == "kill":
+        raise ProcessKilled(f"injected kill at {point} ({path})")
+    if mode == "torn":
+        with open(path, "wb") as f:        # half the payload lands, then die
+            f.write(data[: len(data) // 2])
+            f.flush()
+        raise ProcessKilled(f"injected torn write at {point} ({path})")
+    with open(path, "wb") as f:
+        f.write(data)
+
+
+def guard(point: str, faults: FaultHarness | None) -> None:
+    """The injection waist for non-payload mutations (renames): io_error
+    raises OSError, torn/kill raise ProcessKilled *before* the mutation —
+    a rename is atomic, so its only failure shapes are "didn't happen"."""
+    mode = faults.check(point) if faults is not None else None
+    if mode == "io_error":
+        raise OSError(f"injected io_error at {point}")
+    if mode in ("torn", "kill"):
+        raise ProcessKilled(f"injected {mode} at {point}")

@@ -1,1 +1,2 @@
-from .monitor import SimulatedFault, FaultInjector, StepMonitor
+from .monitor import (FaultInjector, PreemptionSignal, SimulatedFault,
+                      StepMonitor)

@@ -10,7 +10,10 @@ container simulates failures via ``FaultInjector``.
 from __future__ import annotations
 
 import dataclasses
+import signal
+import threading
 
+from repro.faults import ProcessKilled
 from repro.telemetry import TelemetryEvent
 
 
@@ -20,17 +23,57 @@ class SimulatedFault(RuntimeError):
 
 @dataclasses.dataclass
 class FaultInjector:
-    """Raises SimulatedFault at the given step numbers (once each)."""
+    """Raises SimulatedFault at ``fail_at_steps`` (once each) — the
+    *recoverable* failure class the Trainer restores through — and
+    :class:`repro.faults.ProcessKilled` at ``kill_at_steps``: a hard kill
+    that no recovery path may catch (BaseException), so the process dies
+    and the kill-and-resume tests restart it from the committed
+    checkpoint."""
 
     fail_at_steps: tuple[int, ...] = ()
+    kill_at_steps: tuple[int, ...] = ()
 
     def __post_init__(self):
         self._pending = set(self.fail_at_steps)
+        self._kills = set(self.kill_at_steps)
 
     def check(self, step: int) -> None:
+        if step in self._kills:
+            self._kills.discard(step)
+            raise ProcessKilled(f"injected kill at step {step}")
         if step in self._pending:
             self._pending.discard(step)
             raise SimulatedFault(f"injected failure at step {step}")
+
+
+class PreemptionSignal:
+    """Graceful-preemption latch: the fleet scheduler's "you have N seconds"
+    notice. The Trainer polls :meth:`should_stop` each step and, when set,
+    runs one final *blocking* save and drains cleanly instead of dying with
+    up to ``ckpt_every`` steps of progress uncommitted.
+
+    Trigger paths: :meth:`trigger` (tests, embedding runtimes),
+    ``at_steps`` (deterministic test schedules), or a real SIGTERM when
+    constructed with ``install_sigterm=True`` (opt-in: library code must
+    not steal the host process's handlers by default)."""
+
+    def __init__(self, at_steps: tuple[int, ...] = (), *,
+                 install_sigterm: bool = False):
+        self._event = threading.Event()
+        self._at = set(at_steps)
+        if install_sigterm:
+            signal.signal(signal.SIGTERM, lambda *_: self.trigger())
+
+    def trigger(self) -> None:
+        self._event.set()
+
+    def triggered(self) -> bool:
+        return self._event.is_set()
+
+    def should_stop(self, step: int) -> bool:
+        if step in self._at:
+            self.trigger()
+        return self._event.is_set()
 
 
 @dataclasses.dataclass

@@ -653,9 +653,28 @@ class Engine:
         """Admit what fits, decode one step; the requests that finished."""
         return self.scheduler.step()
 
-    def drain(self) -> dict[int, RequestResult]:
-        """Run until every submitted request finished; results by handle."""
+    def drain(self, *, checkpoint_dir: str | None = None
+              ) -> dict[int, RequestResult]:
+        """Run until every submitted request finished; results by handle.
+
+        ``checkpoint_dir`` turns the drain into a *graceful preemption
+        drain*: instead of decoding the backlog to completion, every
+        in-flight request (KV state and all) is checkpointed via
+        :meth:`suspend` and only the already-finished results return — a
+        restarted engine's :meth:`resume` replays the rest."""
+        if checkpoint_dir is not None:
+            self.suspend(checkpoint_dir)
+            return dict(self.scheduler.results)
         return self.scheduler.drain()
+
+    def suspend(self, checkpoint_dir: str) -> str:
+        """Checkpoint all in-flight/queued request state (DESIGN.md §10)."""
+        return self.scheduler.suspend(checkpoint_dir)
+
+    def resume(self, checkpoint_dir: str) -> int:
+        """Reload a suspend checkpoint into this (fresh) engine; returns
+        the number of requests replayed back in."""
+        return self.scheduler.resume(checkpoint_dir)
 
     def cancel(self, rid: int) -> bool:
         return self.scheduler.cancel(rid)

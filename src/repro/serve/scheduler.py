@@ -258,6 +258,7 @@ class Scheduler:
         self._migrate_fn = None
         self._migrate_compiled = None
         self._migrate_label = None
+        self._extract_fn = None
         self._build_decode()
         self._build_insert()
 
@@ -505,6 +506,138 @@ class Scheduler:
         while self.queue or self.active:
             self.step()
         return dict(self.results)
+
+    # -- suspend / resume (graceful drain for restarts, DESIGN.md §10) --
+    def _make_extract_fn(self):
+        """jit((cache, row) -> B=1 slab in the donor/replicated layout) —
+        the transpose of ``make_insert_fn``: the suspended request's row
+        leaves the live batch cache the same shape the insert/migration
+        machinery puts it back with on resume."""
+        def extract(cache, row):
+            def visit(path, leaf):
+                b = _leaf_batch_dim(path, leaf)
+                if b is None:              # (B,) pos vector -> donor scalar
+                    return leaf[row]
+                return jax.lax.dynamic_slice_in_dim(leaf, row, 1, b)
+            return jax.tree_util.tree_map_with_path(visit, cache)
+
+        return jax.jit(extract, in_shardings=(self.cache_sh, None),
+                       out_shardings=self.rep_sh)
+
+    def _req_meta(self, st: _Active) -> dict:
+        return {"rid": st.req.rid,
+                "prompt": np.asarray(st.req.tokens).tolist(),
+                "max_new": int(st.req.max_new),
+                "arrival_s": st.req.arrival_s,
+                "home_pod": st.req.home_pod,
+                "generated": [int(t) for t in st.tokens],
+                "times": [float(t) for t in st.times],
+                "started_s": float(st.started_s),
+                "migrated": bool(st.migrated)}
+
+    def suspend(self, ckpt_dir: str) -> str:
+        """Checkpoint every in-flight request — per-row KV slab (extracted
+        through the insert machinery's transpose) plus token/queue state —
+        through the v2 store (atomic commit, replication, sharded chunks in
+        sequential mode). A restarted engine's :meth:`resume` replays them;
+        nothing is dropped. The scheduler itself is left untouched."""
+        from repro.checkpoint import save_checkpoint
+        tree: dict[str, Any] = {}
+        meta_active = []
+        for rid, st in sorted(self.active.items()):
+            if self.sequential:
+                tree[f"r{rid}"] = self._cache     # B=1: cache IS the slab
+            else:
+                if self._extract_fn is None:
+                    self._extract_fn = self._make_extract_fn()
+                tree[f"r{rid}"] = self._extract_fn(
+                    self._cache, jnp.asarray(st.row, jnp.int32))
+            meta_active.append(self._req_meta(st))
+        queued = [{"rid": r.rid, "prompt": np.asarray(r.tokens).tolist(),
+                   "max_new": int(r.max_new), "arrival_s": r.arrival_s,
+                   "home_pod": r.home_pod} for r in self.queue]
+        extra = {"kind": "serve_suspend", "active": meta_active,
+                 "queued": queued, "next_rid": self._next_rid,
+                 "now": float(self.clock.now()), "steps": self._steps,
+                 "batch": self.spec.batch}
+        with self.tracer.span("serve/suspend", active=len(meta_active),
+                              queued=len(queued)):
+            path = save_checkpoint(ckpt_dir, self._steps, tree, extra=extra)
+        self.registry.count("serve/suspends")
+        return path
+
+    def resume(self, ckpt_dir: str) -> int:
+        """Reload a :meth:`suspend` checkpoint into this (fresh) scheduler:
+        re-reserve rows, re-insert each KV slab via the same insert path a
+        migrated prefill takes, rebuild the queue — restart replays rather
+        than drops. Returns the number of requests brought back."""
+        from repro.checkpoint import (CheckpointError, read_manifest,
+                                      restore_checkpoint)
+        if self.active or self.queue:
+            raise RuntimeError("resume() requires a fresh scheduler")
+        rm = read_manifest(ckpt_dir)
+        if rm is None:
+            raise CheckpointError(f"no serve checkpoint under {ckpt_dir}")
+        step, manifest = rm
+        extra = manifest.get("extra", {})
+        if extra.get("kind") != "serve_suspend":
+            raise CheckpointError("not a serve suspend checkpoint",
+                                  step=step)
+        like, shardings = {}, {}
+        for m in extra["active"]:
+            key = f"r{m['rid']}"
+            if self.sequential:
+                like[key] = self.engine.art.abstract_cache
+                shardings[key] = self.cache_sh
+            else:
+                like[key] = transformer.cache_specs(self.cfg, 1,
+                                                    self.spec.cache_len)
+                shardings[key] = self.rep_sh
+        slabs = {}
+        if like:
+            _, slabs = restore_checkpoint(ckpt_dir, like, step=step,
+                                          shardings=shardings)
+        with self.tracer.span("serve/resume", active=len(extra["active"]),
+                              queued=len(extra["queued"])):
+            for m in extra["active"]:
+                rid = m["rid"]
+                req = Request(tokens=np.asarray(m["prompt"], np.int32),
+                              max_new=m["max_new"],
+                              arrival_s=m["arrival_s"],
+                              home_pod=m["home_pod"], rid=rid)
+                row = self.paged.reserve(rid, req.tokens.size, req.max_new,
+                                         home_pod=req.home_pod)
+                if row is None:
+                    raise RuntimeError(
+                        f"resume: no free row for suspended request {rid}")
+                slab = slabs[f"r{rid}"]
+                if self.sequential:
+                    self._cache = slab
+                else:
+                    self._cache = self._insert_fn(
+                        self._cache, slab, jnp.asarray(row, jnp.int32))
+                st = _Active(req=req, row=row, started_s=m["started_s"],
+                             migrated=m["migrated"],
+                             tokens=list(m["generated"]),
+                             times=list(m["times"]))
+                self.active[rid] = st
+                if not self.sequential:
+                    self._tok[row, 0] = st.tokens[-1]
+            for qm in extra["queued"]:
+                req = Request(tokens=np.asarray(qm["prompt"], np.int32),
+                              max_new=qm["max_new"],
+                              arrival_s=qm["arrival_s"],
+                              home_pod=qm["home_pod"], rid=qm["rid"])
+                bisect.insort(self.queue, req,
+                              key=lambda r: (r.arrival_s, r.rid))
+        self._next_rid = max(self._next_rid, extra["next_rid"])
+        self._steps = extra["steps"]
+        if not isinstance(self.clock, WallClock):
+            # StepClock replay: resumed stamps continue from the suspend
+            # point; WallClock perf_counters don't compare across processes
+            self.clock.idle_until(extra["now"])
+        self.registry.count("serve/resumes")
+        return len(extra["active"]) + len(extra["queued"])
 
     def result(self, rid: int) -> RequestResult | None:
         return self.results.get(rid)

@@ -36,7 +36,8 @@ import numpy as np
 from repro.checkpoint import CheckpointManager
 from repro.data import SyntheticLM
 from repro.optim import AdamW
-from repro.runtime import FaultInjector, SimulatedFault, StepMonitor
+from repro.runtime import (FaultInjector, PreemptionSignal, SimulatedFault,
+                           StepMonitor)
 from repro import telemetry
 from repro.telemetry import TelemetryEvent
 from .step import StepArtifacts, custom_batch_specs, init_state, make_train_step
@@ -68,6 +69,7 @@ class Trainer:
     def __init__(self, model_cfg, mesh, tcfg: TrainerConfig,
                  *, data: SyntheticLM | None = None,
                  fault_injector: FaultInjector | None = None,
+                 preemption: PreemptionSignal | None = None,
                  log: Callable[[str], None] = print,
                  tracer: telemetry.Tracer | None = None,
                  registry: telemetry.MetricsRegistry | None = None):
@@ -78,6 +80,9 @@ class Trainer:
             vocab_size=model_cfg.vocab_size, seq_len=tcfg.seq_len,
             global_batch=tcfg.global_batch, seed=tcfg.seed)
         self.faults = fault_injector or FaultInjector()
+        self.preemption = preemption
+        self.status = "initialized"
+        self._ckpt_failures_seen = 0
         self.monitor = StepMonitor(k=tcfg.straggler_k)
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep_last=tcfg.keep_last)
         self.events: list[TelemetryEvent] = []
@@ -164,10 +169,17 @@ class Trainer:
             self._event(f"comm telemetry unavailable: "
                         f"{type(e).__name__}: {e}", kind="warning")
 
-    def _init_or_restore(self) -> None:
+    def _init_or_restore(self, step: int | None = None) -> None:
         with self.tracer.span("train/restore"):
-            restored = self.ckpt.restore(self.artifacts.abstract_state,
-                                         shardings=self.artifacts.state_shardings)
+            if step is None:
+                restored = self.ckpt.restore(
+                    self.artifacts.abstract_state,
+                    shardings=self.artifacts.state_shardings)
+            else:
+                from repro.checkpoint import restore_checkpoint
+                restored = restore_checkpoint(
+                    self.tcfg.ckpt_dir, self.artifacts.abstract_state,
+                    step=step, shardings=self.artifacts.state_shardings)
         if restored is not None:
             ckpt_step, self.state = restored
             self.step = ckpt_step
@@ -208,10 +220,61 @@ class Trainer:
         self._build(mesh or self.mesh)
         self._init_or_restore()
 
+    def fit(self, *, resume: str | int = "auto") -> dict[str, Any]:
+        """Elastic entry point: train to ``tcfg.steps``, resuming per
+        ``resume`` — ``"auto"`` continues from the committed LATEST step
+        (the constructor already restored it; this is the restart-loop
+        default), ``"none"`` reinitializes from scratch, an int restores
+        that exact step (rollback)."""
+        if resume == "none":
+            if self.step:
+                self._event("resume=none: reinitializing from scratch",
+                            kind="restore")
+            self.state = init_state(self.model_cfg, self.mesh,
+                                    self.artifacts, seed=self.tcfg.seed)
+            self.step = 0
+        elif isinstance(resume, int) and not isinstance(resume, bool):
+            self._init_or_restore(step=resume)
+            if self.step != resume:
+                from repro.checkpoint import CheckpointError
+                raise CheckpointError(f"no checkpoint at step {resume} "
+                                      f"under {self.tcfg.ckpt_dir}")
+        elif resume != "auto":
+            raise ValueError(f"resume must be 'auto', 'none' or an int, "
+                             f"got {resume!r}")
+        return self.run()
+
+    def _check_ckpt_health(self) -> None:
+        """Surface writer failures as events the moment they happen — the
+        old manager deferred them into the next save()/wait() call."""
+        h = self.ckpt.health
+        if h.failures > self._ckpt_failures_seen:
+            self._ckpt_failures_seen = h.failures
+            self._event(f"checkpoint writer unhealthy ({h.state}): "
+                        f"{h.last_error}", kind="warning",
+                        attrs={"state": h.state, "failures": h.failures,
+                               "retries": h.retries})
+
+    def _preempt(self) -> bool:
+        if self.preemption is None or not self.preemption.should_stop(
+                self.step):
+            return False
+        # final blocking save + clean drain: restart resumes exactly here
+        self.ckpt.save(self.step, self.state, blocking=True)
+        self.registry.count("train/preemptions")
+        self._event(f"preempted: drained after blocking save at step "
+                    f"{self.step}", kind="preemption",
+                    attrs={"step": self.step})
+        self.status = "preempted"
+        return True
+
     def run(self) -> dict[str, Any]:
         t = self.tcfg
         reg = self.registry
+        self.status = "running"
         while self.step < t.steps:
+            if self._preempt():
+                break
             try:
                 with self.tracer.span("train/step", step=self.step):
                     with self.tracer.span("train/data"):
@@ -256,6 +319,11 @@ class Trainer:
                          f"({dt*1e3:.0f} ms)")
             if self.step % t.ckpt_every == 0 or self.step == t.steps:
                 self.ckpt.save(self.step, self.state)
+            self._check_ckpt_health()
         self.ckpt.wait()
-        return {"final_loss": self.metrics_history[-1]["loss"],
-                "steps": self.step, "events": list(self.events)}
+        if self.status != "preempted":
+            self.status = "complete"
+        return {"final_loss": (self.metrics_history[-1]["loss"]
+                               if self.metrics_history else None),
+                "steps": self.step, "status": self.status,
+                "events": list(self.events)}

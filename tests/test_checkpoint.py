@@ -1,14 +1,18 @@
-"""Checkpoint store: atomic commit, GC, async manager, mismatch detection."""
+"""Checkpoint store v2: atomic commit, GC pinning, LATEST resolution, async
+manager health, typed errors, sharded save + resharding restore."""
+import json
 import os
-import shutil
 
 import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.checkpoint import (CheckpointManager, latest_step,
+from repro import telemetry
+from repro.checkpoint import (CheckpointError, CheckpointManager,
+                              committed_step, latest_step, read_manifest,
                               restore_checkpoint, save_checkpoint)
+from repro.faults import FaultHarness, FaultSpec
 
 TREE = {"a": jnp.arange(12.0).reshape(3, 4), "b": [jnp.ones(5), jnp.zeros(2)],
         "c": {"d": jnp.asarray(3)}}
@@ -17,6 +21,13 @@ TREE = {"a": jnp.arange(12.0).reshape(3, 4), "b": [jnp.ones(5), jnp.zeros(2)],
 @pytest.fixture()
 def ckdir(tmp_path):
     return str(tmp_path / "ck")
+
+
+@pytest.fixture()
+def registry():
+    prev = telemetry.set_registry(telemetry.MetricsRegistry())
+    yield telemetry.get_registry()
+    telemetry.set_registry(prev)
 
 
 def test_save_restore_roundtrip(ckdir):
@@ -28,12 +39,40 @@ def test_save_restore_roundtrip(ckdir):
         np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
+def test_manifest_v2_schema(ckdir):
+    save_checkpoint(ckdir, 3, TREE, extra={"note": "x"})
+    step, manifest = read_manifest(ckdir)
+    assert step == 3 and manifest["schema"] == 2
+    assert manifest["n_leaves"] == len(jax.tree.leaves(TREE))
+    paths = [l["path"] for l in manifest["leaves"]]
+    assert "a" in paths and "c/d" in paths      # named leaves, not indices
+    for leaf in manifest["leaves"]:
+        for chunk in leaf["chunks"]:
+            assert all(len(f["sha256"]) == 64 for f in chunk["files"])
+    assert manifest["extra"] == {"note": "x"}
+
+
 def test_gc_keeps_last_k(ckdir):
     for s in (1, 2, 3, 4, 5):
         save_checkpoint(ckdir, s, TREE, keep_last=2)
     steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckdir)
                    if d.startswith("step_"))
     assert steps == [4, 5]
+
+
+def test_gc_never_deletes_latest_target(ckdir):
+    """Regression: after a rollback (recovery re-saves at a LOWER step than
+    the on-disk tail), _gc kept the numerically-last steps and unlinked the
+    one LATEST had just been pointed at — a dangling committed pointer."""
+    for s in (5, 6, 7):
+        save_checkpoint(ckdir, s, TREE, keep_last=3)
+    save_checkpoint(ckdir, 4, TREE, keep_last=2)   # rollback save
+    assert committed_step(ckdir) == 4
+    step, _ = restore_checkpoint(ckdir, TREE)
+    assert step == 4                               # pinned, not gc'd
+    steps = sorted(int(d.split("_")[1]) for d in os.listdir(ckdir)
+                   if d.startswith("step_") and not d.endswith(".tmp"))
+    assert 4 in steps
 
 
 def test_incomplete_checkpoint_ignored(ckdir):
@@ -45,10 +84,106 @@ def test_incomplete_checkpoint_ignored(ckdir):
     assert step == 1
 
 
-def test_leaf_count_mismatch_raises(ckdir):
+def test_leaf_count_mismatch_raises_typed(ckdir):
     save_checkpoint(ckdir, 1, TREE)
-    with pytest.raises(AssertionError, match="architecture mismatch"):
+    with pytest.raises(CheckpointError, match="architecture mismatch"):
         restore_checkpoint(ckdir, {"only": jnp.ones(3)})
+
+
+def test_shape_mismatch_names_leaf(ckdir):
+    save_checkpoint(ckdir, 1, TREE)
+    bad = dict(TREE)
+    bad["a"] = jnp.ones((2, 2))
+    with pytest.raises(CheckpointError, match="'a'"):
+        restore_checkpoint(ckdir, bad)
+
+
+def test_restore_prefers_committed_latest(ckdir, registry):
+    save_checkpoint(ckdir, 1, TREE)
+    save_checkpoint(ckdir, 2, TREE)
+    # a crash between commit-rename and the LATEST replace leaves a newer
+    # complete dir with a stale pointer: restore follows the POINTER
+    with open(os.path.join(ckdir, "LATEST"), "w") as f:
+        f.write("1")
+    step, _ = restore_checkpoint(ckdir, TREE)
+    assert step == 1
+    assert registry.counter("checkpoint/latest_fallbacks").value == 0
+
+
+def test_missing_latest_falls_back_to_scan(ckdir, registry):
+    save_checkpoint(ckdir, 1, TREE)
+    save_checkpoint(ckdir, 2, TREE)
+    os.remove(os.path.join(ckdir, "LATEST"))
+    step, _ = restore_checkpoint(ckdir, TREE)
+    assert step == 2
+    assert registry.counter("checkpoint/latest_fallbacks").value == 1
+
+
+def test_dangling_latest_falls_back_to_scan(ckdir, registry):
+    save_checkpoint(ckdir, 1, TREE)
+    with open(os.path.join(ckdir, "LATEST"), "w") as f:
+        f.write("9999")                       # gc'd / never-written target
+    step, _ = restore_checkpoint(ckdir, TREE)
+    assert step == 1
+    assert registry.counter("checkpoint/latest_fallbacks").value == 1
+
+
+def test_corrupt_manifest_falls_back_to_previous_step(ckdir, registry):
+    save_checkpoint(ckdir, 1, TREE)
+    save_checkpoint(ckdir, 2, TREE)
+    with open(os.path.join(ckdir, "step_00000002", "manifest.json"),
+              "w") as f:
+        f.write('{"schema": 2, "n_lea')       # torn JSON
+    step, tree = restore_checkpoint(ckdir, TREE)
+    assert step == 1
+    np.testing.assert_array_equal(np.asarray(tree["a"]),
+                                  np.asarray(TREE["a"]))
+    assert registry.counter("checkpoint/manifest_fallbacks").value >= 1
+
+
+def test_missing_chunk_falls_back_to_previous_step(ckdir, registry):
+    save_checkpoint(ckdir, 1, TREE)
+    save_checkpoint(ckdir, 2, TREE)
+    d = os.path.join(ckdir, "step_00000002")
+    for name in os.listdir(d):
+        if name.startswith("leaf_0000"):
+            os.remove(os.path.join(d, name))
+    step, _ = restore_checkpoint(ckdir, TREE)
+    assert step == 1
+    assert registry.counter("checkpoint/manifest_fallbacks").value >= 1
+
+
+def test_hash_mismatch_detected(ckdir, registry):
+    save_checkpoint(ckdir, 1, TREE)
+    d = os.path.join(ckdir, "step_00000001")
+    victim = sorted(n for n in os.listdir(d) if n.startswith("leaf_"))[0]
+    with open(os.path.join(d, victim), "r+b") as f:
+        f.seek(-1, os.SEEK_END)
+        f.write(b"\x00")
+    # single replica on a pod-less tree: corruption is unrecoverable and
+    # there is no previous step — typed error, not garbage data
+    with pytest.raises(CheckpointError):
+        restore_checkpoint(ckdir, TREE)
+    assert registry.counter("checkpoint/hash_failures").value >= 1
+
+
+def test_v1_manifest_back_compat(ckdir):
+    """Pre-v2 run directories (leaf_<i>.npy + flat manifest) stay readable."""
+    d = os.path.join(ckdir, "step_00000005")
+    os.makedirs(d)
+    leaves, treedef = jax.tree.flatten(TREE)
+    for i, leaf in enumerate(leaves):
+        np.save(os.path.join(d, f"leaf_{i}.npy"), np.asarray(leaf))
+    manifest = {"step": 5, "n_leaves": len(leaves), "treedef": str(treedef),
+                "dtypes": [str(np.asarray(l).dtype) for l in leaves],
+                "shapes": [list(np.asarray(l).shape) for l in leaves],
+                "extra": {}}
+    with open(os.path.join(d, "manifest.json"), "w") as f:
+        json.dump(manifest, f)
+    step, tree = restore_checkpoint(ckdir, TREE)
+    assert step == 5
+    for a, b in zip(jax.tree.leaves(TREE), jax.tree.leaves(tree)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
 
 
 def test_async_manager(ckdir):
@@ -57,9 +192,166 @@ def test_async_manager(ckdir):
         mgr.save(s, TREE)
     mgr.wait()
     assert latest_step(ckdir) == 20
+    assert mgr.healthy() and mgr.health.state == "ok"
+    assert mgr.health.last_saved_step == 20
     res = mgr.restore(TREE)
     assert res is not None and res[0] == 20
 
 
+def test_manager_failure_does_not_lose_next_snapshot(ckdir, registry):
+    """The satellite-1 regression: a pending writer error used to escape
+    from inside the next save() (via self.wait()), aborting it before the
+    new snapshot was enqueued."""
+    faults = FaultHarness([FaultSpec(point="checkpoint/manifest_write",
+                                     mode="io_error", at=0)])
+    mgr = CheckpointManager(ckdir, retries=0, faults=faults)
+    mgr.save(1, TREE)
+    mgr._join()
+    assert not mgr.healthy() and mgr.health.state == "failed"
+    assert mgr.health.failures == 1
+    mgr.save(2, TREE)              # must not raise, must not be lost
+    mgr._join()
+    assert latest_step(ckdir) == 2
+    assert mgr.healthy() and mgr.health.state == "degraded"
+    assert mgr.health.last_saved_step == 2
+    assert registry.counter("checkpoint/save_failures").value == 1
+    with pytest.raises(OSError):   # the end-of-run contract still surfaces
+        mgr.wait()
+
+
+def test_manager_retries_transient_io_error(ckdir, registry):
+    # exactly one injected io_error: the first attempt fails, the retry
+    # commits — no failure recorded, health degraded (a retry fired)
+    faults = FaultHarness([FaultSpec(point="checkpoint/chunk_write",
+                                     mode="io_error", at=0)])
+    mgr = CheckpointManager(ckdir, retries=3, backoff_s=0.001, faults=faults)
+    mgr.save(1, TREE, blocking=True)
+    assert latest_step(ckdir) == 1
+    assert mgr.healthy() and mgr.health.state == "degraded"
+    assert mgr.health.retries == 1
+    assert registry.counter("checkpoint/retries").value == 1
+    assert registry.counter("checkpoint/save_failures").value == 0
+
+
 def test_restore_none_when_empty(ckdir):
     assert restore_checkpoint(ckdir, TREE) is None
+    assert committed_step(ckdir) is None
+
+
+# ---------------------------------------------------------------------------
+# sharded save + resharding restore (multi-device subprocesses)
+# ---------------------------------------------------------------------------
+SHARDED_CODE = r"""
+import json, os
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro import telemetry
+from repro.checkpoint import read_manifest, restore_checkpoint, save_checkpoint
+
+reg = telemetry.set_registry(telemetry.MetricsRegistry()) and None
+reg = telemetry.get_registry()
+devs = np.array(jax.devices()[:8]).reshape(2, 4)
+mesh = Mesh(devs, ("pod", "data"))
+sh = NamedSharding(mesh, P(("pod", "data")))
+rep = NamedSharding(mesh, P())
+tree = {
+    "w": jax.device_put(jnp.arange(16 * 6, dtype=jnp.float32).reshape(16, 6), sh),
+    "b": jax.device_put(jnp.arange(8, dtype=jnp.float32), rep),
+    "step": jax.device_put(jnp.asarray(3), rep),
+}
+ck = os.environ["CKDIR"]
+save_checkpoint(ck, 1, tree)
+
+step, manifest = read_manifest(ck)
+w_meta = [l for l in manifest["leaves"] if l["path"] == "w"][0]
+assert w_meta["sharded"] and len(w_meta["chunks"]) == 8, w_meta
+assert manifest["replication"] == 2, manifest["replication"]
+pods = set()
+for chunk in w_meta["chunks"]:
+    assert len(chunk["files"]) == 2                 # home + 1 replica
+    assert chunk["files"][0]["pod"] != chunk["files"][1]["pod"]
+    pods.add(chunk["files"][0]["pod"])
+assert pods == {0, 1}, pods
+
+# no host-gather: the largest host allocation during save is ONE shard of
+# w — 16*6/8 floats — not the full 16*6 leaf
+g = reg.snapshot()["gauges"]
+shard_bytes = 16 * 6 * 4 // 8
+assert g["checkpoint/max_chunk_bytes"] == shard_bytes, g
+assert g["checkpoint/max_chunk_bytes"] < 16 * 6 * 4
+assert g["checkpoint/replication"] == 2
+assert g["checkpoint/replication_model_s"] > 0
+
+# restore 1: same layout, values exact
+_, t1 = restore_checkpoint(ck, tree, shardings={"w": sh, "b": rep, "step": rep})
+np.testing.assert_array_equal(np.asarray(t1["w"]), np.asarray(tree["w"]))
+
+# restore 2: RESHARD 2x4 -> flat(8) ('data',)
+flat = Mesh(np.array(jax.devices()[:8]), ("data",))
+fsh = NamedSharding(flat, P("data"))
+frep = NamedSharding(flat, P())
+_, t2 = restore_checkpoint(ck, tree, shardings={"w": fsh, "b": frep, "step": frep})
+np.testing.assert_array_equal(np.asarray(t2["w"]), np.asarray(tree["w"]))
+assert t2["w"].sharding.is_equivalent_to(fsh, 2)
+
+# restore 3: RESHARD 2x4 -> 4x2 (different pod count, q=4)
+mesh4 = Mesh(np.array(jax.devices()[:8]).reshape(4, 2), ("pod", "data"))
+qsh = NamedSharding(mesh4, P(("pod", "data")))
+qrep = NamedSharding(mesh4, P())
+_, t3 = restore_checkpoint(ck, tree, shardings={"w": qsh, "b": qrep, "step": qrep})
+np.testing.assert_array_equal(np.asarray(t3["w"]), np.asarray(tree["w"]))
+
+# restore 4: LOST POD — delete every pod-0 home file; replicas recover it
+d = os.path.join(ck, f"step_{1:08d}")
+lost = 0
+for leaf in manifest["leaves"]:
+    for chunk in leaf["chunks"]:
+        f0 = chunk["files"][0]
+        if f0["pod"] == 0:
+            os.remove(os.path.join(d, f0["file"]))
+            lost += 1
+assert lost > 0
+_, t4 = restore_checkpoint(ck, tree, shardings={"w": sh, "b": rep, "step": rep})
+np.testing.assert_array_equal(np.asarray(t4["w"]), np.asarray(tree["w"]))
+assert reg.counter("checkpoint/replica_reads").value >= lost
+print("SHARDED_OK")
+"""
+
+
+@pytest.mark.slow
+def test_sharded_save_reshard_restore(subproc, tmp_path):
+    env_code = f"import os; os.environ['CKDIR'] = {str(tmp_path / 'ck')!r}\n"
+    out = subproc(env_code + SHARDED_CODE, devices=8)
+    assert "SHARDED_OK" in out
+
+
+NONPOW_CODE = r"""
+import os
+import jax, jax.numpy as jnp, numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+from repro.checkpoint import restore_checkpoint, save_checkpoint
+
+# save on 2x6 (q=2), restore on 3x4 (q=3, non-power pod count) and 6x2:
+# the restart matrix cell the allgatherv adaptation makes legal
+devs = np.array(jax.devices()[:12])
+mesh_a = Mesh(devs.reshape(2, 6), ("pod", "data"))
+tree = {"w": jax.device_put(
+    jnp.arange(24 * 5, dtype=jnp.float32).reshape(24, 5),
+    NamedSharding(mesh_a, P(("pod", "data"))))}
+ck = os.environ["CKDIR"]
+save_checkpoint(ck, 1, tree)
+for shape, q in (((3, 4), 3), ((6, 2), 6), ((12,), None)):
+    names = ("pod", "data") if len(shape) == 2 else ("data",)
+    m = Mesh(devs.reshape(shape), names)
+    sh = NamedSharding(m, P("data" if len(shape) == 1 else ("pod", "data")))
+    _, t = restore_checkpoint(ck, tree, shardings={"w": sh})
+    np.testing.assert_array_equal(np.asarray(t["w"]), np.asarray(tree["w"]))
+print("NONPOW_OK")
+"""
+
+
+@pytest.mark.slow
+def test_restore_arbitrary_pod_counts(subproc, tmp_path):
+    env_code = f"import os; os.environ['CKDIR'] = {str(tmp_path / 'ck')!r}\n"
+    out = subproc(env_code + NONPOW_CODE, devices=12)
+    assert "NONPOW_OK" in out
