@@ -32,6 +32,13 @@
     layout-equivalence numerics; writes ``BENCH_multipod.json`` and fails
     unless the locality paths move strictly fewer inter-pod bytes AND
     messages.
+
+``python benchmarks/run.py fleet``
+    Fleet-controller chaos mini-soak (DESIGN.md §11): seeded kills,
+    preemptions and stragglers on a 12-device pod-aligned run; trends the
+    controller's decision latency and failure-to-resumed recovery
+    wall-clock; writes ``BENCH_fleet.json`` and fails unless the run
+    converges to healthy.
 """
 from __future__ import annotations
 
@@ -94,6 +101,7 @@ def main() -> None:
     sub.add_parser("multipod", help="('pod','data') non-local traffic proof")
     sub.add_parser("serve_traffic",
                    help="continuous batching vs lockstep waves")
+    sub.add_parser("fleet", help="fleet-controller chaos mini-soak")
     # default to `bench` for backward compatibility: `run.py --only fig7`
     argv = sys.argv[1:]
     if argv[:1] == ["tune"]:
@@ -131,6 +139,17 @@ def main() -> None:
                 multipod.main()
         finally:                   # keep artifacts from failed gate runs
             telemetry_artifacts("multipod")
+        return
+    if argv[:1] == ["fleet"]:
+        from repro import telemetry
+        from . import fleet_bench
+        from .common import telemetry_artifacts
+        print("name,us_per_call,derived")
+        try:
+            with telemetry.span("bench/fleet"):
+                fleet_bench.main()
+        finally:                   # keep artifacts from failed gate runs
+            telemetry_artifacts("fleet", devices=fleet_bench.DEVICES)
         return
     if argv[:1] != ["bench"] and any(a.startswith("--only") for a in argv):
         argv = ["bench"] + argv

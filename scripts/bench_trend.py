@@ -82,6 +82,12 @@ METRICS: dict[str, tuple[str, bool]] = {
     "reshard_wall_s": ("lower", True),
     "max_chunk_bytes": ("lower", False),
     "replica_bytes": ("lower", False),
+    # fleet controller (BENCH_fleet.json + registry histogram-mean
+    # mirrors): per-tick decision cost and failure-to-resumed wall-clock
+    "decision_latency_s": ("lower", True),
+    "recovery_wall_s": ("lower", True),
+    "decision_latency_s_mean": ("lower", True),
+    "recovery_s_mean": ("lower", True),
 }
 
 #: extra artifacts tracked alongside the BENCH_*.json pattern (relative to

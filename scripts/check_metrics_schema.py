@@ -98,6 +98,36 @@ def check_metrics(path: str, doc: dict) -> int:
                       f"whole tree ({tb:.0f} B): save gathered more than "
                       f"a shard")
                 return 1
+    # fleet controller invariants (DESIGN.md §11): the decision ledger must
+    # be self-consistent — every decision is exactly one action, a healthy
+    # run never halted, and the controller's straggler view (the runtime
+    # counter it polls) can never lag the trainer's own surfaced count.
+    if "fleet/decisions" in counters:
+        actions = sum(counters.get(f"fleet/{k}", 0)
+                      for k in ("noops", "retries", "shrinks", "grows",
+                                "halts"))
+        if counters["fleet/decisions"] != actions:
+            print(f"{path}: FAIL — fleet/decisions = "
+                  f"{counters['fleet/decisions']} but per-action counters "
+                  f"sum to {actions} (a decision was recorded without its "
+                  f"action, or vice versa)")
+            return 1
+        if counters.get("fleet/episodes", 0) < 1:
+            print(f"{path}: FAIL — fleet decisions recorded without a "
+                  f"single fleet/episodes build")
+            return 1
+        if doc.get("gauges", {}).get("fleet/healthy") == 1 \
+                and counters.get("fleet/halts", 0) != 0:
+            print(f"{path}: FAIL — fleet/healthy gauge is 1 but "
+                  f"{counters['fleet/halts']} halt decision(s) were taken")
+            return 1
+    if "train/stragglers" in counters and "runtime/stragglers" in counters \
+            and counters["runtime/stragglers"] < counters["train/stragglers"]:
+        print(f"{path}: FAIL — runtime/stragglers "
+              f"({counters['runtime/stragglers']}) < train/stragglers "
+              f"({counters['train/stragglers']}): the monitor surfaced "
+              f"events it never counted")
+        return 1
     n_comm = 0
     for label, c in doc.get("comm", {}).items():
         ctx = f"{path}: comm {label!r}"

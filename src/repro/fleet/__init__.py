@@ -1,0 +1,22 @@
+"""Fleet controller: autoscaling shrink/grow orchestration (DESIGN.md §11).
+
+The decision layer over PR 8's elastic mechanisms — a pure, bounded
+policy (:mod:`.policy`), cost-model-priced pod-aligned layout selection
+(:mod:`.layout`), a seeded disturbance schedule (:mod:`.chaos`) and the
+episode loop that ties them to ``Trainer.fit(resume=...)`` and
+``Engine.suspend/resume`` (:mod:`.controller`).
+"""
+from .chaos import ChaosSchedule, ChaosSpec
+from .controller import (ACTION_COUNTERS, FleetController, FleetDataLossError,
+                         FleetReport)
+from .layout import (FleetLayoutError, Layout, choose_layout, layout_mesh,
+                     layout_price_s, pod_aligned_layouts)
+from .policy import (ACTIONS, ESCALATION, Decision, FleetPolicy,
+                     FleetSignals, PolicyConfig)
+
+__all__ = [
+    "ACTIONS", "ACTION_COUNTERS", "ChaosSchedule", "ChaosSpec", "Decision",
+    "ESCALATION", "FleetController", "FleetDataLossError", "FleetLayoutError",
+    "FleetPolicy", "FleetReport", "FleetSignals", "Layout", "PolicyConfig",
+    "choose_layout", "layout_mesh", "layout_price_s", "pod_aligned_layouts",
+]

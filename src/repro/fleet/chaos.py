@@ -1,0 +1,99 @@
+"""Seeded chaos schedule: the disturbance half of the convergence proof.
+
+One Philox-keyed draw (same generator discipline as
+``repro.faults.FaultHarness``) fixes WHICH steps get hard kills, graceful
+preemptions and injected stragglers, plus an explicit capacity timeline
+(step -> devices offered). The controller re-arms each episode's injector
+and preemption signal from the schedule's *unfired* view: a kill consumed
+in episode N must not re-fire when episode N+1 replays the same step from
+the commit, while straggler delays stay armed per episode (a replayed
+delayed step is delayed again — determinism over cleverness).
+
+Everything is derived from ``(seed, steps, counts)``: two soak runs with
+the same arguments see byte-identical disturbance timelines.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import numpy as np
+
+from repro.runtime import FaultInjector, PreemptionSignal
+
+
+@dataclasses.dataclass(frozen=True)
+class ChaosSpec:
+    """Counts + bounds for the random draw."""
+
+    steps: int                       # schedule horizon (trainer steps)
+    seed: int = 0
+    kills: int = 1
+    preempts: int = 1
+    straggles: int = 1
+    first_step: int = 3              # no chaos during compile/warmup steps
+    delay_s: float = 0.25            # minimum injected straggler sleep
+    #: explicit capacity timeline: ((step, devices), ...) — capacity
+    #: changes are operator/scheduler actions, not random noise
+    capacity: tuple[tuple[int, int], ...] = ()
+
+
+class ChaosSchedule:
+    def __init__(self, spec: ChaosSpec):
+        self.spec = spec
+        lo = spec.first_step
+        hi = max(lo + 1, spec.steps)
+        want = spec.kills + spec.preempts + spec.straggles
+        if want > hi - lo:
+            raise ValueError(f"{want} events do not fit in steps "
+                             f"[{lo}, {hi})")
+        rng = np.random.Generator(np.random.Philox(key=spec.seed))
+        # distinct steps so one step never carries two event kinds (a
+        # kill and a preemption at the same step would be order-defined
+        # by trainer internals, not by the schedule)
+        picks = rng.choice(np.arange(lo, hi), size=want, replace=False)
+        k, p = spec.kills, spec.preempts
+        self.kills = tuple(sorted(int(s) for s in picks[:k]))
+        self.preempts = tuple(sorted(int(s) for s in picks[k:k + p]))
+        self.straggles = tuple(sorted(int(s) for s in picks[k + p:]))
+        self.capacity = tuple(sorted(spec.capacity))
+        self._fired_kills: set[int] = set()
+        self._fired_preempts: set[int] = set()
+
+    # -- per-episode arming --------------------------------------------
+    def fault_injector(self) -> FaultInjector:
+        return FaultInjector(
+            kill_at_steps=tuple(s for s in self.kills
+                                if s not in self._fired_kills),
+            delay_at_steps=self.straggles,
+            delay_s=self.spec.delay_s)
+
+    def preemption_signal(self) -> PreemptionSignal:
+        return PreemptionSignal(
+            at_steps=tuple(s for s in self.preempts
+                           if s not in self._fired_preempts))
+
+    # -- controller feedback -------------------------------------------
+    def observe_kill(self, step: int) -> None:
+        self._fired_kills.add(step)
+
+    def observe_preempt(self, step: int) -> None:
+        self._fired_preempts.add(step)
+
+    def capacity_at(self, step: int, default: int) -> int:
+        cap = default
+        for s, v in self.capacity:
+            if s <= step:
+                cap = v
+        return cap
+
+    def pending(self) -> dict:
+        return {"kills": [s for s in self.kills
+                          if s not in self._fired_kills],
+                "preempts": [s for s in self.preempts
+                             if s not in self._fired_preempts]}
+
+    def describe(self) -> dict:
+        return {"seed": self.spec.seed, "kills": list(self.kills),
+                "preempts": list(self.preempts),
+                "straggles": list(self.straggles),
+                "capacity": [list(c) for c in self.capacity]}

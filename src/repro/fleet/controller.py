@@ -1,0 +1,383 @@
+"""FleetController: the autoscaling shrink/grow orchestration loop.
+
+PR 8 built the elastic *mechanisms* — resharding restore, preemption
+drain, fault injection. This is the *decider* on top: an episode loop
+that builds a Trainer on the current pod-aligned layout, runs
+``fit(resume="auto")``, and converts whatever ends the episode (a hard
+kill, a drain, completion) into the next action through the pure
+:class:`~repro.fleet.policy.FleetPolicy`.
+
+Signals consumed, all pre-existing surfaces:
+
+* ``runtime/stragglers`` counter (StepMonitor pressure),
+* serve scheduler queue depth (``Engine.scheduler.stats()``),
+* ``PreemptionSignal`` drains (chaos- or SIGTERM-triggered),
+* ``CheckpointManager`` health + ``committed_step``,
+* ``repro.faults`` kills (``ProcessKilled``).
+
+``ProcessKilled`` is a BaseException precisely so no recovery path inside
+the stack may swallow it; the controller is the documented exception —
+it IS the top-level restart driver the ``repro.faults`` contract refers
+to, standing in for the external daemon (borg/k8s) of a real fleet.
+
+Every decision lands as a structured ``TelemetryEvent`` plus ``fleet/*``
+counters (``fleet/decisions`` must equal the sum of the per-action
+counters — ``scripts/check_metrics_schema.py`` enforces it), decision
+latency and post-failure recovery wall-clock go to histograms, and —
+when ``assert_locality`` is on — every multi-pod layout's compiled step
+must show a locality schedule in its HLO (``CommReport
+.has_locality_schedule``) or the build fails loudly.
+
+Zero-data-loss is asserted structurally: every episode must resume
+exactly at the committed step (:class:`FleetDataLossError` otherwise),
+and per-step losses are folded into ``loss_by_step`` so a soak can
+compare the disturbed trajectory bitwise against an undisturbed run.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any, Callable
+
+from repro import telemetry
+from repro.checkpoint import committed_step
+from repro.faults import ProcessKilled
+from repro.runtime import PreemptionSignal
+from repro.telemetry import TelemetryEvent
+
+from .chaos import ChaosSchedule
+from .layout import (FleetLayoutError, Layout, choose_layout, layout_mesh,
+                     layout_price_s)
+from .policy import Decision, FleetPolicy, FleetSignals
+
+#: decision action -> metrics counter suffix
+ACTION_COUNTERS = {"none": "noops", "retry": "retries", "shrink": "shrinks",
+                   "grow": "grows", "halt": "halts"}
+
+_HALT = "halt"                  # pending-resize sentinel for a tick halt
+
+
+class FleetDataLossError(RuntimeError):
+    """An episode resumed somewhere other than the committed step."""
+
+
+@dataclasses.dataclass
+class FleetReport:
+    status: str                         # "complete" | "halted-degraded"
+    steps: int                          # final trainer step
+    episodes: list[dict]
+    decisions: list[Decision]
+    final_layout: tuple[int, int]
+    loss_by_step: dict[int, float]      # step -> loss, replays folded in
+    chaos: dict | None = None
+
+
+class FleetController:
+    """Drives ``make_trainer(mesh)`` episodes until complete or halted.
+
+    ``make_trainer`` must return a fresh :class:`repro.train.Trainer` for
+    the given mesh, pointed at ONE checkpoint directory across calls (the
+    resume chain lives there). When ``chaos`` is set the controller owns
+    the trainer's fault injector and preemption signal (re-armed from the
+    schedule's unfired view each episode); otherwise a trainer-provided
+    ``preemption`` is respected and only created when absent.
+    """
+
+    def __init__(self, make_trainer: Callable[[Any], Any], *,
+                 pod_size: int,
+                 policy: FleetPolicy | None = None,
+                 capacity_fn: Callable[[int], int] | None = None,
+                 chaos: ChaosSchedule | None = None,
+                 devices: int | None = None,
+                 machine: str = "tpu_multipod",
+                 block_bytes: float = 1 << 20,
+                 assert_locality: bool = False,
+                 poll_every: int = 1,
+                 max_episodes: int = 32,
+                 engine_factory: Callable[[Any], Any] | None = None,
+                 serve_ckpt_dir: str | None = None,
+                 log: Callable[[str], None] = print,
+                 tracer: telemetry.Tracer | None = None,
+                 registry: telemetry.MetricsRegistry | None = None):
+        self.make_trainer = make_trainer
+        self.pod_size = pod_size
+        self.policy = policy or FleetPolicy()
+        self.capacity_fn = capacity_fn
+        self.chaos = chaos
+        self._devices = devices
+        self.machine = machine
+        self.block_bytes = block_bytes
+        self.assert_locality = assert_locality
+        self.poll_every = max(1, poll_every)
+        self.max_episodes = max_episodes
+        self.engine_factory = engine_factory
+        self.serve_ckpt_dir = serve_ckpt_dir
+        if engine_factory is not None and serve_ckpt_dir is None:
+            raise ValueError("engine_factory needs serve_ckpt_dir for "
+                             "suspend/resume across resizes")
+        self.log = log
+        self.tracer = tracer or telemetry.get_tracer()
+        self.registry = registry or telemetry.get_registry()
+        self.events: list[TelemetryEvent] = []
+        self.episodes: list[dict] = []
+        self.loss_by_step: dict[int, float] = {}
+        self.engine = None
+        self._engine_suspended = False
+        self._pending: Layout | str | None = None
+
+    # -- signal assembly -----------------------------------------------
+    def _capacity(self, step: int, fallback: int) -> int:
+        return (self.capacity_fn(step) if self.capacity_fn is not None
+                else fallback)
+
+    def _queue_depth(self) -> int:
+        if self.engine is None:
+            return 0
+        s = self.engine.scheduler.stats()
+        return int(s.get("active", 0)) + int(s.get("queued", 0))
+
+    def _signals(self, kind: str, tr) -> FleetSignals:
+        counters = self.registry.snapshot().get("counters", {})
+        live = int(tr.mesh.devices.size)
+        return FleetSignals(
+            kind=kind, step=tr.step,
+            committed_step=committed_step(tr.tcfg.ckpt_dir) or 0,
+            stragglers=int(counters.get("runtime/stragglers", 0)),
+            queue_depth=self._queue_depth(),
+            ckpt_state=tr.ckpt.health.state,
+            devices=live,
+            capacity=self._capacity(tr.step, live))
+
+    # -- decision plumbing ---------------------------------------------
+    def _decide(self, kind: str, tr) -> Decision:
+        sig = self._signals(kind, tr)
+        t0 = time.perf_counter()
+        d = self.policy.decide(sig)
+        latency = time.perf_counter() - t0
+        reg = self.registry
+        reg.observe("fleet/decision_latency_s", latency)
+        reg.count("fleet/decisions")
+        reg.count(f"fleet/{ACTION_COUNTERS[d.action]}")
+        ev = TelemetryEvent(
+            f"fleet decision: {d.action} — {d.reason}", kind="fleet",
+            step=sig.step,
+            attrs={"action": d.action, "reason": d.reason,
+                   "escalation": d.escalation,
+                   "target_devices": d.target_devices,
+                   "signal": dataclasses.asdict(sig)})
+        self.events.append(ev)
+        if d.action != "none":
+            self.log(f"[fleet] {ev}")
+        return d
+
+    # -- layout / serve helpers ----------------------------------------
+    def _choose(self, capacity: int) -> Layout:
+        return choose_layout(capacity, self.pod_size, machine=self.machine,
+                             block_bytes=self.block_bytes)
+
+    def _target_layout(self, d: Decision, current: Layout) -> Layout:
+        if d.target_devices is not None:
+            return self._choose(d.target_devices)
+        # default escalation shrink: one pod fewer, never below one pod
+        return self._choose(max(self.pod_size,
+                                current.total - self.pod_size))
+
+    def _suspend_serve(self) -> None:
+        """Graceful serve drain ahead of a layout change: on a real fleet
+        the resize notice reaches the serve tier too, so in-flight decode
+        state is checkpointed rather than lost."""
+        if self.engine is None:
+            return
+        with self.tracer.span("fleet/serve_suspend"):
+            self.engine.suspend(self.serve_ckpt_dir)
+        self.engine = None
+        self._engine_suspended = True
+        self.registry.count("fleet/serve_suspends")
+
+    def _resume_serve(self, mesh) -> None:
+        if self.engine_factory is None or self.engine is not None:
+            return
+        with self.tracer.span("fleet/serve_resume"):
+            self.engine = self.engine_factory(mesh)
+            if self._engine_suspended:
+                n = self.engine.resume(self.serve_ckpt_dir)
+                self._engine_suspended = False
+                self.registry.count("fleet/serve_resumes")
+                self.log(f"[fleet] serve engine resumed "
+                         f"{n} request(s) on {mesh.devices.shape}")
+
+    # -- episode construction ------------------------------------------
+    def _hook(self, tr) -> None:
+        """The per-step tick, installed as ``Trainer.step_hook``."""
+        if self._pending is not None or tr.step % self.poll_every:
+            return
+        d = self._decide("tick", tr)
+        if d.action == "halt":
+            self._pending = _HALT
+            tr.preemption.trigger()         # drain with a final save
+        elif d.action in ("shrink", "grow"):
+            target = self._target_layout(d, self._layout)
+            if target == self._layout:
+                return                      # already there: nothing to do
+            self._pending = target
+            tr.preemption.trigger()
+
+    def _build(self, layout: Layout):
+        import jax
+
+        reg = self.registry
+        mesh = layout_mesh(
+            layout, None if self._devices is None
+            else jax.devices()[:self._devices])
+        jax.set_mesh(mesh)
+        price = layout_price_s(layout, machine=self.machine,
+                               block_bytes=self.block_bytes)
+        reg.count("fleet/episodes")
+        reg.gauge("fleet/devices").set(float(layout.total))
+        reg.gauge("fleet/pods").set(float(layout.pods))
+        reg.gauge("fleet/layout_price_s").set(price)
+        with self.tracer.span("fleet/build", layout=str(layout)):
+            tr = self.make_trainer(mesh)
+        if self.chaos is not None:
+            tr.faults = self.chaos.fault_injector()
+            tr.preemption = self.chaos.preemption_signal()
+        elif tr.preemption is None:
+            tr.preemption = PreemptionSignal()
+        tr.step_hook = self._hook
+        # zero-data-loss, structurally: the trainer must sit exactly on
+        # the committed step — anything else means a commit was dropped
+        # (or a stale one resurrected) across the restart
+        commit = committed_step(tr.tcfg.ckpt_dir) or 0
+        if tr.step != commit:
+            raise FleetDataLossError(
+                f"episode resumed at step {tr.step}, committed step is "
+                f"{commit} ({tr.tcfg.ckpt_dir})")
+        if self.assert_locality and layout.pods > 1:
+            rep = tr.comm_report
+            if rep is None:
+                raise FleetLayoutError(
+                    f"layout {layout}: no CommReport to assert locality "
+                    f"on (enable comm_telemetry)")
+            if not rep.has_locality_schedule:
+                raise FleetLayoutError(
+                    f"layout {layout}: compiled step has NO pod-crossing "
+                    f"locality schedule (grad_sync="
+                    f"{tr.artifacts.grad_sync})")
+            reg.count("fleet/layout_asserts")
+        self._resume_serve(mesh)
+        return tr
+
+    def _fold_losses(self, tr) -> None:
+        for m in tr.metrics_history:
+            self.loss_by_step[m["step"]] = m["loss"]
+
+    def _record_episode(self, n: int, layout: Layout, resumed: int,
+                        tr, outcome: str) -> None:
+        self.episodes.append({
+            "episode": n, "layout": layout.shape, "resumed_step": resumed,
+            "end_step": tr.step, "outcome": outcome})
+
+    # -- the loop -------------------------------------------------------
+    def run(self) -> FleetReport:
+        reg = self.registry
+        cap0 = self._capacity(0, self._devices or 0)
+        if cap0 <= 0:
+            import jax
+            cap0 = len(jax.devices())
+        layout = self._choose(cap0)
+        self._layout = layout
+        status = None
+        t_fail: float | None = None
+        episode = 0
+        tr = None
+        while status is None:
+            episode += 1
+            if episode > self.max_episodes:
+                status = "halted-degraded"
+                self.events.append(TelemetryEvent(
+                    f"fleet: episode budget ({self.max_episodes}) "
+                    f"exhausted", kind="fleet"))
+                self.log(f"[fleet] {self.events[-1]}")
+                break
+            self._layout = layout
+            self._pending = None
+            tr = self._build(layout)
+            if t_fail is not None:
+                reg.observe("fleet/recovery_s", time.perf_counter() - t_fail)
+                t_fail = None
+            resumed = tr.step
+            try:
+                out = tr.fit(resume="auto")
+            except ProcessKilled as e:
+                # top-level restart driver: the one sanctioned catch —
+                # see repro.faults and the module docstring
+                t_fail = time.perf_counter()
+                try:
+                    # fence the dead incarnation's async writer before any
+                    # restart: a save still in flight would race the next
+                    # episode's committed-step read (the simulated-kill
+                    # analogue of waiting out the old process's lease)
+                    tr.ckpt.wait()
+                except Exception as werr:       # noqa: BLE001
+                    # a failed in-flight save is the writer's problem, not
+                    # the restart's: health lands in the next signals read
+                    self.log(f"[fleet] killed episode's writer errored "
+                             f"while draining: {werr}")
+                self._fold_losses(tr)
+                self._record_episode(episode, layout, resumed, tr, "killed")
+                if self.chaos is not None:
+                    self.chaos.observe_kill(tr.step)
+                self.log(f"[fleet] episode {episode} killed at step "
+                         f"{tr.step}: {e}")
+                d = self._decide("kill", tr)
+                if d.action == "halt":
+                    status = "halted-degraded"
+                elif d.action == "shrink":
+                    self._suspend_serve()
+                    layout = self._target_layout(d, layout)
+                continue
+            self._fold_losses(tr)
+            if out["status"] == "preempted":
+                t_fail = time.perf_counter()
+                if self._pending is not None:
+                    # our own resize drain coming back around
+                    target = self._pending
+                    self._pending = None
+                    outcome = ("halting" if target is _HALT else
+                               f"resizing -> {target}")
+                    self._record_episode(episode, layout, resumed, tr,
+                                         outcome)
+                    if target is _HALT:
+                        status = "halted-degraded"
+                    else:
+                        self._suspend_serve()
+                        layout = target
+                    continue
+                self._record_episode(episode, layout, resumed, tr,
+                                     "preempted")
+                if self.chaos is not None:
+                    self.chaos.observe_preempt(tr.step)
+                d = self._decide("preemption", tr)
+                if d.action == "halt":
+                    status = "halted-degraded"
+                elif d.action == "shrink":
+                    self._suspend_serve()
+                    layout = self._target_layout(d, layout)
+                continue
+            self._record_episode(episode, layout, resumed, tr, "complete")
+            status = "complete"
+        healthy = (status == "complete"
+                   and (tr is None or tr.ckpt.healthy()))
+        reg.gauge("fleet/healthy").set(1.0 if healthy else 0.0)
+        ev = TelemetryEvent(
+            f"fleet run {status}: {episode} episode(s), final layout "
+            f"{layout}", kind="fleet",
+            attrs={"status": status, "episodes": episode,
+                   "layout": layout.shape, "healthy": healthy})
+        self.events.append(ev)
+        self.log(f"[fleet] {ev}")
+        return FleetReport(
+            status=status, steps=tr.step if tr is not None else 0,
+            episodes=self.episodes, decisions=list(self.policy.history),
+            final_layout=layout.shape, loss_by_step=dict(self.loss_by_step),
+            chaos=self.chaos.describe() if self.chaos else None)

@@ -1,0 +1,231 @@
+"""Fleet decision policy: signals in, one bounded action out.
+
+Pure Python and fully deterministic — no jax, no clocks, no randomness —
+so the hysteresis/cooldown/escalation invariants are property-testable
+(tests/test_fleet.py drives it through hypothesis).
+
+The controller feeds every observation through :meth:`FleetPolicy.decide`
+as a :class:`FleetSignals` and executes the returned :class:`Decision`:
+
+========== =====================================================
+signal     response
+========== =====================================================
+kill/fault open (or continue) an *incident*: ``retry`` up to
+           ``max_retries`` times, then ``shrink`` (one pod fewer),
+           then ``halt`` — the bounded escalation ladder. Committed
+           progress since the incident opened closes it (the crash
+           is new, not a loop) and restarts the retry budget, as
+           does a shrink (the ladder restarts on the new layout).
+preemption ``retry`` — the drain already committed a blocking save,
+           so resuming at the commit is free.
+tick       capacity below the live layout forces a ``shrink`` to
+           capacity (cooldown does not apply: the devices are
+           gone); sustained straggler pressure (>= ``straggler_high``
+           flags inside ``straggler_window`` steps) shrinks after
+           the cooldown; spare capacity grows back only when the
+           cooldown has passed AND straggler pressure is at or
+           under ``straggler_low`` AND the checkpoint writer is
+           healthy (hysteresis: the grow watermark sits strictly
+           below the shrink watermark, so a marginal fleet cannot
+           oscillate).
+========== =====================================================
+
+``halt`` is absorbing: once the policy halts, every later signal gets
+``halt`` back — the controller parks the fleet degraded instead of
+burning restarts.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+#: action -> escalation rank. ``grow`` is capacity-seeking, not an
+#: escalation, and shares rank 0 with ``none``.
+ESCALATION = {"none": 0, "grow": 0, "retry": 1, "shrink": 2, "halt": 3}
+
+ACTIONS = tuple(ESCALATION)
+
+
+@dataclasses.dataclass(frozen=True)
+class FleetSignals:
+    """One observation of the fleet, as the controller sees it."""
+
+    kind: str = "tick"          # "tick" | "kill" | "fault" | "preemption"
+    step: int = 0               # trainer step the signal was taken at
+    committed_step: int = 0     # last durably committed checkpoint step
+    stragglers: int = 0         # CUMULATIVE runtime/stragglers counter
+    queue_depth: int = 0        # serve backlog (active + queued requests)
+    ckpt_state: str = "ok"      # CheckpointManager health: ok|degraded|failed
+    devices: int = 0            # devices in the live layout
+    capacity: int = 0           # devices the fleet scheduler currently offers
+
+
+@dataclasses.dataclass(frozen=True)
+class Decision:
+    action: str                 # one of ACTIONS
+    reason: str
+    step: int
+    escalation: int             # ESCALATION[action]
+    #: shrink/grow sizing hint: device count to relayout to, or None for
+    #: the default shrink of one pod (the controller owns pod geometry)
+    target_devices: int | None = None
+
+
+@dataclasses.dataclass(frozen=True)
+class PolicyConfig:
+    max_retries: int = 2        # per incident
+    max_shrinks: int = 2        # escalation shrinks per run (capacity-
+    #                             forced shrinks are mandatory, not counted)
+    cooldown_steps: int = 8     # no grow (or straggler-shrink) within this
+    #                             many steps of the last resize
+    straggler_window: int = 8   # trailing steps the pressure is read over
+    straggler_high: int = 2     # shrink watermark (flags in window)
+    straggler_low: int = 0      # grow watermark — strictly below high
+    queue_grow_depth: int | None = None   # serve backlog that motivates a
+    #                             grow; None = grow on any spare capacity
+    min_devices: int = 1
+
+    def __post_init__(self):
+        if self.straggler_low >= self.straggler_high:
+            raise ValueError(
+                f"hysteresis gap inverted: straggler_low "
+                f"{self.straggler_low} >= straggler_high "
+                f"{self.straggler_high}")
+
+
+class FleetPolicy:
+    """The state machine. One instance per controller run."""
+
+    def __init__(self, cfg: PolicyConfig | None = None):
+        self.cfg = cfg or PolicyConfig()
+        self.history: list[Decision] = []
+        self._halted = False
+        self._retries = 0               # within the open incident
+        self._shrinks = 0               # escalation shrinks, whole run
+        self._incident_commit: int | None = None   # None = no open incident
+        self._last_resize_step: int | None = None
+        self._marks: list[tuple[int, int]] = []    # (step, cum. stragglers)
+
+    # -- observability -------------------------------------------------
+    @property
+    def halted(self) -> bool:
+        return self._halted
+
+    @property
+    def shrinks(self) -> int:
+        return self._shrinks
+
+    # -- internals -----------------------------------------------------
+    def _mk(self, action: str, reason: str, sig: FleetSignals,
+            target: int | None = None) -> Decision:
+        return Decision(action=action, reason=reason, step=sig.step,
+                        escalation=ESCALATION[action], target_devices=target)
+
+    def _cooldown_ok(self, step: int) -> bool:
+        lr = self._last_resize_step
+        return lr is None or step - lr >= self.cfg.cooldown_steps
+
+    def _note_resize(self, step: int) -> None:
+        # max(): under out-of-order steps the cooldown must anchor to the
+        # LATEST resize ever seen, or a stale low step would reopen the
+        # grow gate early (the hypothesis oscillation property)
+        lr = self._last_resize_step
+        self._last_resize_step = step if lr is None else max(lr, step)
+
+    def _stragglers_in_window(self, sig: FleetSignals) -> int:
+        """Delta of the cumulative straggler counter over the trailing
+        window. Before a mark old enough to anchor the window exists, the
+        earliest mark is the baseline (undercounts — conservative against
+        a spurious shrink); the very first signal reports 0, so counter
+        state carried in from an earlier run never reads as pressure."""
+        cutoff = sig.step - self.cfg.straggler_window
+        base = self._marks[0][1] if self._marks else sig.stragglers
+        for s, c in self._marks:
+            if s <= cutoff:
+                base = c
+            else:
+                break
+        self._marks.append((sig.step, sig.stragglers))
+        while len(self._marks) >= 2 and self._marks[1][0] <= cutoff:
+            self._marks.pop(0)
+        return max(0, sig.stragglers - base)
+
+    def _shrink(self, sig: FleetSignals, reason: str, *,
+                target: int | None = None, count: bool = True) -> Decision:
+        if count:
+            self._shrinks += 1
+        self._note_resize(sig.step)
+        # a resize closes the incident: the ladder restarts on the new
+        # layout instead of inheriting a stale retry budget
+        self._retries = 0
+        self._incident_commit = None
+        return self._mk("shrink", reason, sig, target=target)
+
+    def _halt(self, sig: FleetSignals, reason: str) -> Decision:
+        self._halted = True
+        return self._mk("halt", reason, sig)
+
+    def _incident(self, sig: FleetSignals) -> Decision:
+        cfg = self.cfg
+        if self._incident_commit is None:
+            self._incident_commit = sig.committed_step
+        elif sig.committed_step > self._incident_commit:
+            # real progress since the incident opened: a NEW incident,
+            # not a crash loop — the retry budget resets
+            self._incident_commit = sig.committed_step
+            self._retries = 0
+        if self._retries < cfg.max_retries:
+            self._retries += 1
+            return self._mk(
+                "retry", f"incident retry {self._retries}/{cfg.max_retries} "
+                f"(commit {sig.committed_step})", sig)
+        if self._shrinks < cfg.max_shrinks and sig.devices > cfg.min_devices:
+            return self._shrink(sig, "crash loop: retry budget exhausted")
+        return self._halt(sig, "retries and shrinks exhausted")
+
+    # -- the entry point -----------------------------------------------
+    def decide(self, sig: FleetSignals) -> Decision:
+        d = self._decide(sig)
+        self.history.append(d)
+        return d
+
+    def _decide(self, sig: FleetSignals) -> Decision:
+        cfg = self.cfg
+        if self._halted:
+            return self._mk("halt", "halted-degraded is absorbing", sig)
+        pressure = self._stragglers_in_window(sig)
+        if sig.kind in ("kill", "fault"):
+            return self._incident(sig)
+        if sig.kind == "preemption":
+            return self._mk("retry",
+                            "preemption drained at a commit; resume", sig)
+        # ---- tick ----------------------------------------------------
+        if sig.ckpt_state == "failed":
+            # the checkpoint writer is dead: progress cannot commit, so
+            # this is an incident even though the step loop still runs
+            return self._incident(sig)
+        if 0 < sig.capacity < cfg.min_devices:
+            return self._halt(sig, f"capacity {sig.capacity} below "
+                                   f"min_devices {cfg.min_devices}")
+        if sig.capacity and sig.capacity < sig.devices:
+            # revoked capacity: mandatory, exempt from cooldown and from
+            # the escalation shrink budget (the devices are simply gone)
+            return self._shrink(
+                sig, f"capacity revoked: {sig.capacity} < {sig.devices}",
+                target=sig.capacity, count=False)
+        if (pressure >= cfg.straggler_high and self._cooldown_ok(sig.step)
+                and sig.devices > cfg.min_devices
+                and self._shrinks < cfg.max_shrinks):
+            return self._shrink(
+                sig, f"straggler pressure: {pressure} flag(s) in "
+                f"{cfg.straggler_window} steps")
+        if (sig.capacity > sig.devices and self._cooldown_ok(sig.step)
+                and pressure <= cfg.straggler_low
+                and sig.ckpt_state == "ok"
+                and (cfg.queue_grow_depth is None
+                     or sig.queue_depth >= cfg.queue_grow_depth)):
+            self._note_resize(sig.step)
+            return self._mk(
+                "grow", f"capacity {sig.capacity} > live {sig.devices}, "
+                f"cooldown passed, pressure {pressure}", sig,
+                target=sig.capacity)
+        return self._mk("none", "healthy", sig)

@@ -12,9 +12,10 @@ from __future__ import annotations
 import dataclasses
 import signal
 import threading
+import time
 
 from repro.faults import ProcessKilled
-from repro.telemetry import TelemetryEvent
+from repro.telemetry import TelemetryEvent, get_registry
 
 
 class SimulatedFault(RuntimeError):
@@ -32,10 +33,15 @@ class FaultInjector:
 
     fail_at_steps: tuple[int, ...] = ()
     kill_at_steps: tuple[int, ...] = ()
+    #: steps at which the injector SLEEPS inside the timed step region —
+    #: the deterministic straggler the chaos soak drives StepMonitor with
+    delay_at_steps: tuple[int, ...] = ()
+    delay_s: float = 0.25
 
     def __post_init__(self):
         self._pending = set(self.fail_at_steps)
         self._kills = set(self.kill_at_steps)
+        self._delays = set(self.delay_at_steps)
 
     def check(self, step: int) -> None:
         if step in self._kills:
@@ -44,6 +50,19 @@ class FaultInjector:
         if step in self._pending:
             self._pending.discard(step)
             raise SimulatedFault(f"injected failure at step {step}")
+
+    def delay(self, step: int, *, floor_s: float = 0.0) -> float:
+        """Injected straggler (once per armed step): sleep long enough that
+        the step lands above the monitor's flagging threshold. ``floor_s``
+        lets the caller scale the sleep to the live EWMA (a fixed delay can
+        sit under ``k×ewma`` once real steps are slow); the larger of the
+        two is used. Returns the seconds slept (0.0 when unarmed)."""
+        if step not in self._delays:
+            return 0.0
+        self._delays.discard(step)
+        d = max(self.delay_s, floor_s)
+        time.sleep(d)
+        return d
 
 
 class PreemptionSignal:
@@ -55,14 +74,35 @@ class PreemptionSignal:
     Trigger paths: :meth:`trigger` (tests, embedding runtimes),
     ``at_steps`` (deterministic test schedules), or a real SIGTERM when
     constructed with ``install_sigterm=True`` (opt-in: library code must
-    not steal the host process's handlers by default)."""
+    not steal the host process's handlers by default). The installed
+    handler CHAINS to whatever handler was registered before it — an
+    embedding runtime's own SIGTERM logic keeps running — and
+    :meth:`uninstall` restores the previous handler exactly."""
 
     def __init__(self, at_steps: tuple[int, ...] = (), *,
                  install_sigterm: bool = False):
         self._event = threading.Event()
         self._at = set(at_steps)
+        self._prev_handler = None
+        self._installed = False
         if install_sigterm:
-            signal.signal(signal.SIGTERM, lambda *_: self.trigger())
+            def _handler(signum, frame):
+                self.trigger()
+                prev = self._prev_handler
+                if callable(prev):        # SIG_DFL/SIG_IGN are ints: skip
+                    prev(signum, frame)
+            self._prev_handler = signal.signal(signal.SIGTERM, _handler)
+            self._installed = True
+
+    def uninstall(self) -> None:
+        """Restore the SIGTERM handler that was active before this signal
+        installed its own (no-op unless ``install_sigterm=True``)."""
+        if self._installed:
+            prev = self._prev_handler
+            signal.signal(signal.SIGTERM,
+                          prev if prev is not None else signal.SIG_DFL)
+            self._prev_handler = None
+            self._installed = False
 
     def trigger(self) -> None:
         self._event.set()
@@ -92,6 +132,19 @@ class StepMonitor:
     _ewma: float = 0.0
     _n: int = 0
     _last_algorithm: str | None = None
+    _stragglers: int = 0
+
+    def reset(self) -> None:
+        """Forget the timing statistics (EWMA + warmup), keeping the
+        cumulative straggler count and the last-seen algorithm.
+
+        Call on every step-function rebuild: after an elastic restart the
+        EWMA still describes the OLD topology, so the first steps on a
+        smaller/slower mesh would be falsely flagged as stragglers (and a
+        faster mesh would mask real ones). The algorithm survives so the
+        collective-change event still fires only on an actual change."""
+        self._ewma = 0.0
+        self._n = 0
 
     def record(self, dt: float,
                algorithm: str | None = None) -> list[TelemetryEvent]:
@@ -124,6 +177,11 @@ class StepMonitor:
             self._ewma = dt
             return events
         if dt > self.k * self._ewma:
+            # mirrored into a counter so the fleet controller (and the CI
+            # schema gate) can read the straggler pressure without
+            # scraping the event stream
+            self._stragglers += 1
+            get_registry().count("runtime/stragglers")
             events.append(TelemetryEvent(
                 f"straggler: step took {dt:.3f}s "
                 f"(ewma {self._ewma:.3f}s, k={self.k})",
@@ -135,3 +193,8 @@ class StepMonitor:
     @property
     def ewma(self) -> float:
         return self._ewma
+
+    @property
+    def stragglers(self) -> int:
+        """Cumulative flagged-straggler count (survives :meth:`reset`)."""
+        return self._stragglers

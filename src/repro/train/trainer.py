@@ -72,7 +72,8 @@ class Trainer:
                  preemption: PreemptionSignal | None = None,
                  log: Callable[[str], None] = print,
                  tracer: telemetry.Tracer | None = None,
-                 registry: telemetry.MetricsRegistry | None = None):
+                 registry: telemetry.MetricsRegistry | None = None,
+                 step_hook: Callable[["Trainer"], None] | None = None):
         self.model_cfg = model_cfg
         self.mesh = mesh
         self.tcfg = tcfg
@@ -87,6 +88,10 @@ class Trainer:
         self.ckpt = CheckpointManager(tcfg.ckpt_dir, keep_last=tcfg.keep_last)
         self.events: list[TelemetryEvent] = []
         self.log = log
+        # called at the top of every loop iteration (before the preemption
+        # poll) with the trainer itself: the fleet controller's tick — it
+        # may flip ``self.preemption`` to request a graceful resize drain
+        self.step_hook = step_hook
         self.tracer = tracer or telemetry.get_tracer()
         self.registry = registry or telemetry.get_registry()
         self.metrics_history: list[dict] = []
@@ -122,6 +127,10 @@ class Trainer:
                 grad_sync=t.grad_sync, fsdp=t.fsdp, seq_shard=t.seq_shard,
                 prefetch_depth=t.prefetch_depth,
                 shape=self._abstract_batch())
+        # the EWMA describes the topology the old step function ran on —
+        # carrying it across an elastic rebuild falsely flags the first
+        # steps on a slower mesh (see StepMonitor.reset)
+        self.monitor.reset()
         if t.grad_sync == "auto":
             self.log(f"[trainer] grad_sync=auto -> "
                      f"{self.artifacts.grad_sync} "
@@ -273,6 +282,8 @@ class Trainer:
         reg = self.registry
         self.status = "running"
         while self.step < t.steps:
+            if self.step_hook is not None:
+                self.step_hook(self)
             if self._preempt():
                 break
             try:
@@ -285,6 +296,11 @@ class Trainer:
                         self.state, metrics = self._step_callable(
                             self.state, device_batch)
                         jax.block_until_ready(metrics["loss"])
+                    # injected straggler: the sleep lands INSIDE the timed
+                    # region, scaled past k×ewma so the monitor must flag it
+                    slept = self.faults.delay(
+                        self.step, floor_s=2 * t.straggler_k *
+                        self.monitor.ewma)
                     dt = time.perf_counter() - t0
                 self.faults.check(self.step)
             except SimulatedFault as e:
@@ -293,6 +309,9 @@ class Trainer:
                 self.log(f"[trainer] {e} -> recovering")
                 self.recover()
                 continue
+            if slept:
+                self._event(f"injected straggler: slept {slept:.3f}s",
+                            kind="fault", attrs={"slept": slept}, log=False)
             for ev in self.monitor.record(
                     dt, algorithm=self.artifacts.grad_algorithm):
                 # surfaced immediately — a straggler between log_every

@@ -85,6 +85,8 @@ except ProcessKilled as e:
     print("KILLED", tr.step, e)
 else:
     raise AssertionError("kill did not fire")
+tr.ckpt.wait()   # quiesce the async writer: the in-process "kill" leaves
+                 # it alive, and committed_step below must not race it
 assert committed_step(kdir) == 4, committed_step(kdir)
 
 # --- resume the killed run on (4,2): auto-restore, bitwise tail -------
