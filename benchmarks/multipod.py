@@ -27,6 +27,15 @@ Paper Fig. 7/8 analogue on the compiled artifact, two halves:
      continuous scheduler and requires every comm-ledger label (prefill,
      migrate, decode) to reconcile predicted == actual exactly.
 
+   * MoE expert dispatch ("moe-multipod") on 2×8 and 3×8 ('pod','data')
+     meshes: the qwen2-moe train step with ``moe_dispatch="locality"``
+     (two-tier ``locality_all_to_all`` + token transport — the batch block
+     crosses the DCN once per destination pod and only int32 slot tables
+     ride the exchange) vs ``moe_dispatch="xla"`` (flat slot all-to-all).
+     Gated exactly like the other cells — strictly fewer inter-pod bytes
+     AND messages — plus a structural check that the locality step lowers
+     without a single grouped all-to-all op (DESIGN.md §12).
+
    * BOTH halves again on THREE-pod meshes (3×8 ('pod','data')) — the
      non-power region count that exercises Algorithm 2's allgatherv
      adaptation (partial final-round payloads; Bruck-transpose grad
@@ -428,6 +437,59 @@ print("JSON" + json.dumps(out))
 """
 
 
+MOE_HLO_CODE = r"""
+import json, dataclasses
+import jax, numpy as np
+from repro import configs
+from repro.core.hlo_analysis import collective_stats, op_payloads
+from repro.core.topology import device_pod_map
+from repro.train.step import custom_batch_specs, make_train_step
+
+out = {}
+base = configs.get_smoke("qwen2-moe-a2.7b")
+# E = p so the expert dimension shards exactly across the composite DP span;
+# q=3 exercises the non-power partial-round geometry of the inter-pod phase
+for key, (q, pl) in (("moe_2pod", (2, 8)), ("moe_3pod", (3, 8))):
+    p = q * pl
+    devs = np.asarray(jax.devices()[:p]).reshape(q, pl)
+    mesh = jax.sharding.Mesh(devs, ("pod", "data"))
+    jax.set_mesh(mesh)
+    cfg = dataclasses.replace(base, n_layers=2, n_experts=p)
+    bspec = custom_batch_specs(cfg, p, 32)
+    pod_map = device_pod_map(mesh, ("pod",))
+    cell = {"mesh": f"{q}x{pl} (pod,data)", "n_devices": p}
+    for name, md in (("locality", "locality"), ("flat_xla", "xla")):
+        art = make_train_step(cfg, mesh, grad_sync="locality", shape=bspec,
+                              donate=False, moe_dispatch=md)
+        assert art.moe_dispatch == md, art
+        hlo = art.step_fn.lower(art.abstract_state, bspec).compile().as_text()
+        st = collective_stats(hlo, pod_map)
+        cell[name] = {
+            "counts": dict(st.counts),
+            "transport": art.moe_transport,
+            "permute_edges_nonlocal": st.permute_edges_nonlocal,
+            "permute_bytes_nonlocal": st.permute_bytes_nonlocal,
+            "group_msgs_nonlocal": st.group_msgs_nonlocal,
+            "group_bytes_nonlocal": st.group_bytes_nonlocal,
+            "nonlocal_msgs": st.nonlocal_msgs,
+            "nonlocal_bytes": st.nonlocal_bytes,
+        }
+        if name == "locality":
+            # token transport must engage (q < top_k * capacity_factor) and
+            # the whole step must lower without a single grouped all-to-all:
+            # every exchange beyond the minimized inter-pod phase is a
+            # collective-permute
+            assert art.moe_transport == "tokens", art
+            assert not op_payloads(hlo, "all-to-all"), \
+                "grouped all-to-all survived in the locality dispatch"
+        else:
+            assert op_payloads(hlo, "all-to-all"), \
+                "flat baseline lost its all-to-all"
+    out[key] = cell
+print("JSON" + json.dumps(out))
+"""
+
+
 def _reduction(cell: dict) -> dict:
     loc, flat = cell["locality"], cell["flat_xla"]
     return {
@@ -444,6 +506,7 @@ def main() -> list[tuple]:
                                ("serve_combine", SERVE_HLO_CODE, 512),
                                ("threepod", THREEPOD_HLO_CODE, 24),
                                ("cache_migrate", MIGRATE_HLO_CODE, 8),
+                               ("moe", MOE_HLO_CODE, 24),
                                ("numerics", NUMERICS_CODE, 8),
                                ("numerics_3pod", NUMERICS3_CODE, 6)):
         stdout = run_multidevice(code, devices=devices, timeout=3000)
@@ -456,10 +519,14 @@ def main() -> list[tuple]:
     for key in ("train_fsdp_3pod", "serve_combine_3pod"):
         results[key] = {"mesh": three["mesh"], "n_devices": three["n_devices"],
                         **three[key]}
+    # same for the two moe-multipod cells (one subprocess, q=2 and q=3)
+    moe = results.pop("moe")
+    results.update(moe)
 
     rows = []
     for key in ("train_fsdp", "serve_combine",
-                "train_fsdp_3pod", "serve_combine_3pod", "cache_migrate"):
+                "train_fsdp_3pod", "serve_combine_3pod", "cache_migrate",
+                "moe_2pod", "moe_3pod"):
         cell = results[key]
         loc, flat = cell["locality"], cell["flat_xla"]
         red = _reduction(cell)

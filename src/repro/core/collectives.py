@@ -1,4 +1,4 @@
-"""The paper's allgather algorithms as JAX collectives (shard_map + ppermute).
+"""The paper's collective algorithms as JAX collectives, behind one API.
 
 Every algorithm here is a *pure function of per-device shards*, usable inside
 ``jax.shard_map`` over any subset of mesh axes. Point-to-point MPI sends map
@@ -12,45 +12,49 @@ ICI). The flat rank over ``outer + local`` is region-major, matching
 Because each algorithm is a composition of linear ops (ppermute / concat /
 roll / slice), JAX autodiff transposes an allgather into the matching
 reduce-scatter with the *reversed schedule* for free — used by the FSDP
-parameter gathering in ``train/``.
+parameter gathering in ``train/`` and the expert-parallel return leg in
+``models/moe.py``.
 
-Algorithms (same five as ``core/schedules.py``, which is the oracle):
-  bruck_allgather           Algorithm 1  [Bruck et al. '97]
-  ring_allgather            [Chan et al. '07]
-  hierarchical_allgather    master-per-region [Träff '06]
-  multilane_allgather       one lane per local rank [Träff & Hunold '20]
-  locality_bruck_allgather  Algorithm 2 — THE paper's contribution
+Public surface (DESIGN.md §12) — one family function per collective *kind*,
+each taking ``(operands..., outer, local, algorithm=..., **kw)``:
 
-plus reductions built on them:
-  reduce_scatter            linear transpose of any allgather
-  locality_allreduce        local RS → per-lane outer allreduce → local AG
-                            (generic over the reduction op: sum / max / min)
-  locality_logsumexp_combine  numerically-safe combine of flash-style partial
-                            softmax stats: max-allreduce → rescale →
-                            packed sum-allreduce (the serve decode
-                            cache-combine executed by serve/engine.py)
+  allgather          kinds of gather: ``bruck`` (Algorithm 1 [Bruck '97]),
+                     ``ring`` [Chan '07], ``hierarchical`` [Träff '06],
+                     ``multilane`` [Träff & Hunold '20], and
+                     ``locality_bruck`` — Algorithm 2, THE paper's
+                     contribution. Same five as ``core/schedules.py``,
+                     which is the oracle the runtime is reconciled against.
+  reduce_scatter     linear transpose of any allgather (reversed schedule)
+  allreduce          ``locality``: local RS → per-lane outer allreduce →
+                     local AG (generic over sum / max / min), or ``psum``
+  all_to_all         ``locality``: two-tier expert dispatch — intra-pod
+                     exchange + one minimized inter-pod phase shipping
+                     per-destination-pod aggregates (reuses Algorithm 2's
+                     partial-round geometry); ``xla``: flat lax.all_to_all
+  logsumexp_combine  numerically-safe combine of flash-style partial
+                     softmax stats: max-allreduce → rescale → packed
+                     sum-allreduce (the serve decode cache-combine)
+  cache_migrate      serve-time KV-cache resharding (serve/scheduler.py)
 
-and split (async-style) halves for the overlap pipeline (DESIGN.md §5):
-  allgather_start/finish    the non-local ``outer`` ppermute rounds run in
-                            ``start``; the final local redistribution
-                            completes in ``finish`` at the consumer —
-                            call start for layer i+1 before layer i's
-                            compute and the wire time is off the critical
-                            path (XLA overlaps the independent rounds)
-  allreduce_start/finish    program-order split (reduction rounds form one
-                            dependency chain, so start runs them all; the
-                            value is issuing them before independent
-                            compute in trace order)
-  locality_logsumexp_combine_start/finish
-                            the max-allreduce of the running maxima needs
-                            only ``m`` — issue it right after the scores
-                            and hide it behind the o/l accumulation
+Each family has ``_start``/``_finish`` split halves for the overlap pipeline
+(DESIGN.md §5): the non-local ``outer`` rounds issue in ``start``; the local
+redistribution completes in ``finish`` at the consumer, so calling start for
+layer i+1 before layer i's compute takes the wire time off the critical path.
+
+``collective(kind, *operands, outer=..., local=..., algorithm=...)`` is the
+uniform string-keyed entry point over the same table (``KINDS`` /
+``ALGORITHMS_BY_KIND`` / ``DEFAULT_ALGORITHM``); ``algorithm="auto"``
+defers to the tuning policy (``tuning/policy.py``). The pre-redesign names
+(``bruck_allgather``, ``locality_bruck_allgather``, ``locality_allreduce``,
+``locality_logsumexp_combine``, ...) remain as deprecated aliases that warn
+once per process and forward to the family functions.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
 import math
+import warnings
 from typing import Sequence
 
 import jax
@@ -94,7 +98,7 @@ def _out(buf: jax.Array, tiled: bool, x_shape: tuple[int, ...]) -> jax.Array:
 # =============================================================================
 # Algorithm 1 — standard Bruck allgather: log2(p) rounds, doubling buffers.
 # =============================================================================
-def bruck_allgather(x: jax.Array, axes: Axes, *, tiled: bool = False,
+def _bruck_allgather(x: jax.Array, axes: Axes, *, tiled: bool = False,
                     assume_varying: bool = False) -> jax.Array:
     """Bruck allgather over ``axes``. Returns [p, *x.shape] (or tiled concat).
 
@@ -130,7 +134,7 @@ def bruck_allgather(x: jax.Array, axes: Axes, *, tiled: bool = False,
 # =============================================================================
 # Ring allgather: p-1 neighbor rounds (bandwidth-optimal, locality-friendly).
 # =============================================================================
-def ring_allgather(x: jax.Array, axes: Axes, *, tiled: bool = False) -> jax.Array:
+def _ring_allgather(x: jax.Array, axes: Axes, *, tiled: bool = False) -> jax.Array:
     axes = _tup(axes)
     p = _size(axes)
     x = _varying(x, axes)
@@ -153,13 +157,13 @@ def ring_allgather(x: jax.Array, axes: Axes, *, tiled: bool = False) -> jax.Arra
 # Hierarchical allgather [Träff '06]: binomial gather to a master per region,
 # Bruck among masters, binomial broadcast. Non-masters idle during phase 2.
 # =============================================================================
-def hierarchical_allgather(x: jax.Array, outer: Axes, local: Axes, *,
+def _hierarchical_allgather(x: jax.Array, outer: Axes, local: Axes, *,
                            tiled: bool = False) -> jax.Array:
     outer, local = _tup(outer), _tup(local)
     r, pl = _size(outer), _size(local)
     x = _varying(x, outer + local)
     if pl == 1:
-        return bruck_allgather(x, outer + local, tiled=tiled)
+        return _bruck_allgather(x, outer + local, tiled=tiled)
     R = lax.axis_index(outer)
     l = lax.axis_index(local)
     flat = lambda Rg, lg: Rg * pl + lg
@@ -221,14 +225,14 @@ def hierarchical_allgather(x: jax.Array, outer: Axes, local: Axes, *,
 # regions concurrently (its own block only), then one local allgather combines
 # the lanes. Non-local bytes drop by p_local; message count unchanged.
 # =============================================================================
-def multilane_allgather(x: jax.Array, outer: Axes, local: Axes, *,
+def _multilane_allgather(x: jax.Array, outer: Axes, local: Axes, *,
                         tiled: bool = False) -> jax.Array:
     outer, local = _tup(outer), _tup(local)
     r, pl = _size(outer), _size(local)
     x = _varying(x, outer + local)
     with jax.named_scope(f"multilane_ag_r{r}_pl{pl}"):
-        lane = bruck_allgather(x, outer)      # [r, ...] canonical region order
-        allb = bruck_allgather(lane, local)   # [pl, r, ...] lane-major
+        lane = _bruck_allgather(x, outer)      # [r, ...] canonical region order
+        allb = _bruck_allgather(lane, local)   # [pl, r, ...] lane-major
         buf = jnp.moveaxis(allb, 1, 0)        # [r, pl, ...] region-major
         buf = buf.reshape((r * pl,) + x.shape)
     return _out(buf, tiled, x.shape)
@@ -291,7 +295,7 @@ def _nonlocal_exchange(buf: jax.Array, axes: tuple[str, ...], r: int, pl: int,
         return jnp.where(l == last, part, recv)
 
 
-def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
+def _locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
                              tiled: bool = False,
                              assume_varying: bool = False) -> jax.Array:
     """Paper Algorithm 2 over mesh axes — ANY outer region count.
@@ -313,7 +317,7 @@ def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
     full-buffer exchange, identical message count, slightly padded local
     traffic.
 
-    assume_varying: as for :func:`bruck_allgather` — required when this
+    assume_varying: as for :func:`_bruck_allgather` — required when this
     gather is differentiated inside a ``check_vma=False`` region (the
     two-tier FSDP param gather of train/step.py).
     """
@@ -322,14 +326,14 @@ def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
     if not assume_varying:
         x = _varying(x, outer + local)
     if pl == 1:
-        return bruck_allgather(x, outer + local, tiled=tiled,
+        return _bruck_allgather(x, outer + local, tiled=tiled,
                                assume_varying=True)
     R = lax.axis_index(outer)
     l = lax.axis_index(local)
 
     with jax.named_scope(f"loc_bruck_ag_r{r}_pl{pl}"):
         # Step 0 (Alg. 2 line 1): local allgather of initial values.
-        buf = bruck_allgather(x, local, assume_varying=True)
+        buf = _bruck_allgather(x, local, assume_varying=True)
         # Invariant: buf = region chunks [R, R+group) (mod r), chunk = pl blocks.
         group = 1
         step = 0
@@ -341,7 +345,7 @@ def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
             # no new data (their unit is discarded below).
             unit = jnp.where(l == 0, buf, recv)
             with jax.named_scope(f"redistribute_step{step}"):
-                stacked = bruck_allgather(unit, local,  # [pl, group*pl, ...]
+                stacked = _bruck_allgather(unit, local,  # [pl, group*pl, ...]
                                           assume_varying=True)
             stacked = stacked[:active]
             buf = stacked.reshape((active * group * pl,) + x.shape)
@@ -359,15 +363,15 @@ def locality_bruck_allgather(x: jax.Array, outer: Axes, local: Axes, *,
 # Dispatcher
 # =============================================================================
 ALLGATHERS = {
-    "bruck": lambda x, outer, local, tiled: bruck_allgather(
+    "bruck": lambda x, outer, local, tiled: _bruck_allgather(
         x, _tup(outer) + _tup(local), tiled=tiled),
-    "ring": lambda x, outer, local, tiled: ring_allgather(
+    "ring": lambda x, outer, local, tiled: _ring_allgather(
         x, _tup(outer) + _tup(local), tiled=tiled),
-    "hierarchical": lambda x, outer, local, tiled: hierarchical_allgather(
+    "hierarchical": lambda x, outer, local, tiled: _hierarchical_allgather(
         x, outer, local, tiled=tiled),
-    "multilane": lambda x, outer, local, tiled: multilane_allgather(
+    "multilane": lambda x, outer, local, tiled: _multilane_allgather(
         x, outer, local, tiled=tiled),
-    "locality_bruck": lambda x, outer, local, tiled: locality_bruck_allgather(
+    "locality_bruck": lambda x, outer, local, tiled: _locality_bruck_allgather(
         x, outer, local, tiled=tiled),
     "xla": lambda x, outer, local, tiled: lax.all_gather(
         x, _tup(outer) + _tup(local), tiled=tiled),
@@ -390,17 +394,31 @@ def _resolve_auto(collective: str, x: jax.Array, outer: tuple[str, ...],
 
 
 def allgather(x: jax.Array, outer: Axes, local: Axes = (), *,
-              algorithm: str = "locality_bruck", tiled: bool = False) -> jax.Array:
+              algorithm: str = "locality_bruck", tiled: bool = False,
+              assume_varying: bool = False) -> jax.Array:
     """Gather ``x`` shards over ``outer + local`` mesh axes (region-major).
 
     ``algorithm="auto"`` selects via the tuning policy: the persisted
     measured crossover table when one exists, the postal model otherwise.
+
+    assume_varying: skip the vma normalization (see
+    :func:`_bruck_allgather`) — only the Bruck schedules support being
+    differentiated inside a ``check_vma=False`` region.
     """
     if algorithm == "auto":
         algorithm = _resolve_auto("allgather", x, _tup(outer), _tup(local))
     if not _tup(local):
         algorithm = "bruck" if algorithm in ("locality_bruck", "hierarchical",
                                              "multilane") else algorithm
+    if assume_varying:
+        if algorithm == "bruck":
+            return _bruck_allgather(x, _tup(outer) + _tup(local), tiled=tiled,
+                                    assume_varying=True)
+        if algorithm == "locality_bruck":
+            return _locality_bruck_allgather(x, outer, local, tiled=tiled,
+                                             assume_varying=True)
+        raise ValueError(f"assume_varying is only supported for the Bruck "
+                         f"schedules, not algorithm={algorithm!r}")
     return ALLGATHERS[algorithm](x, outer, local, tiled)
 
 
@@ -419,7 +437,7 @@ def cache_migrate(x: jax.Array, outer: Axes, local: Axes = (), *,
     over every rank, and the destination insert needs the full slab on the
     owning ranks — a gatherv-shaped replication where the Algorithm-2
     machinery applies directly (uneven tails ride the allgatherv adaptation
-    inside :func:`locality_bruck_allgather`). Priced as its own tuning cell
+    inside :func:`_locality_bruck_allgather`). Priced as its own tuning cell
     (``"cache_migrate"``) because the slab-sized payloads sit in a different
     α/β regime than activation allgathers.
     """
@@ -489,7 +507,7 @@ class PendingCollective:
         return cls(tuple(arrays), meta)
 
 
-def locality_bruck_allgather_start(x: jax.Array, outer: Axes, local: Axes, *,
+def _locality_bruck_allgather_start(x: jax.Array, outer: Axes, local: Axes, *,
                                    tiled: bool = False,
                                    assume_varying: bool = False
                                    ) -> PendingCollective:
@@ -510,13 +528,13 @@ def locality_bruck_allgather_start(x: jax.Array, outer: Axes, local: Axes, *,
     if not assume_varying:
         x = _varying(x, outer + local)
     if pl == 1:
-        full = bruck_allgather(x, outer + local, tiled=tiled,
+        full = _bruck_allgather(x, outer + local, tiled=tiled,
                                assume_varying=True)
         return PendingCollective((full,), _SplitMeta("allgather", "done"))
     l = lax.axis_index(local)
 
     with jax.named_scope(f"loc_bruck_ag_start_r{r}_pl{pl}"):
-        buf = bruck_allgather(x, local, assume_varying=True)
+        buf = _bruck_allgather(x, local, assume_varying=True)
         if r == 1:
             return PendingCollective(
                 (buf,), _SplitMeta("allgather", "local_done", outer, local,
@@ -535,14 +553,14 @@ def locality_bruck_allgather_start(x: jax.Array, outer: Axes, local: Axes, *,
                                             rem=rem))
             unit = jnp.where(l == 0, buf, recv)
             with jax.named_scope(f"redistribute_step{step}"):
-                stacked = bruck_allgather(unit, local, assume_varying=True)
+                stacked = _bruck_allgather(unit, local, assume_varying=True)
             stacked = stacked[:active]
             buf = stacked.reshape((active * group * pl,) + x.shape)
             group = span
             step += 1
 
 
-def locality_bruck_allgather_finish(pending: PendingCollective) -> jax.Array:
+def _locality_bruck_allgather_finish(pending: PendingCollective) -> jax.Array:
     """Complete a split Algorithm 2: final local redistribution + reorder."""
     meta = pending.meta
     if meta.kind == "done":
@@ -558,7 +576,7 @@ def locality_bruck_allgather_finish(pending: PendingCollective) -> jax.Array:
             l = lax.axis_index(local)
             unit = jnp.where(l == 0, buf, recv)
             with jax.named_scope("redistribute_final"):
-                stacked = bruck_allgather(unit, local, assume_varying=True)
+                stacked = _bruck_allgather(unit, local, assume_varying=True)
             stacked = stacked[:meta.active]
             buf = stacked.reshape((meta.active * meta.group * pl,) + x_shape)
             # the uneven geometry recorded at start: the last lane carried
@@ -580,7 +598,7 @@ def allgather_start(x: jax.Array, outer: Axes, local: Axes = (), *,
     """Issue an allgather; complete it with :func:`allgather_finish`.
 
     For ``locality_bruck`` the non-local rounds genuinely complete in start
-    (locality_bruck_allgather_start); every other algorithm has no local
+    (_locality_bruck_allgather_start); every other algorithm has no local
     tail to defer, so start runs the whole gather and the split is a
     program-order hook — still the mechanism that lets a double-buffered
     caller issue it before independent compute.
@@ -591,10 +609,10 @@ def allgather_start(x: jax.Array, outer: Axes, local: Axes = (), *,
         algorithm = "bruck" if algorithm in ("locality_bruck", "hierarchical",
                                              "multilane") else algorithm
     if algorithm == "locality_bruck":
-        return locality_bruck_allgather_start(
+        return _locality_bruck_allgather_start(
             x, outer, local, tiled=tiled, assume_varying=assume_varying)
     if algorithm == "bruck":
-        full = bruck_allgather(x, _tup(outer) + _tup(local), tiled=tiled,
+        full = _bruck_allgather(x, _tup(outer) + _tup(local), tiled=tiled,
                                assume_varying=assume_varying)
     else:
         full = ALLGATHERS[algorithm](x, outer, local, tiled)
@@ -604,7 +622,239 @@ def allgather_start(x: jax.Array, outer: Axes, local: Axes = (), *,
 def allgather_finish(pending: PendingCollective) -> jax.Array:
     """Complete an :func:`allgather_start`; bit-identical to the eager path."""
     assert pending.meta.op == "allgather", pending.meta
-    return locality_bruck_allgather_finish(pending)
+    return _locality_bruck_allgather_finish(pending)
+
+
+# =============================================================================
+# Locality-aware all-to-all — the MoE expert-dispatch collective family.
+# =============================================================================
+# The paper's two-tier decomposition applied to personalized exchange: block
+# (i → j) must cross the DCN at most once, and every inter-pod message is the
+# AGGREGATE of a whole pod-pair's blocks instead of a rank-pair's.  Three
+# phases, all ppermute (the compiled HLO carries explicit source_target_pairs,
+# so collective_stats classifies every edge exactly):
+#
+#   1. intra-pod collect   — offsets o ∈ [1, q) to the q-1 other pods are
+#      assigned round-robin to the p_ℓ lanes (offset o → lane (o-1) mod p_ℓ,
+#      round (o-1) div p_ℓ — the same modular lane assignment as Algorithm
+#      2's non-local rounds); a local all-to-all hands lane ℓ every local
+#      rank's blocks destined to ℓ's pods.
+#   2. inter-pod rounds    — ceil((q-1)/p_ℓ) rounds; in round t, active lane
+#      ℓ ships ONE aggregated (p_ℓ × p_ℓ)-block slab to pod R + (t·p_ℓ+ℓ+1)
+#      and receives the mirror slab.  The last round runs with only
+#      (q-1) - (nrounds-1)·p_ℓ active lanes — the non-power-q partial-round
+#      geometry of `_nonlocal_round_geometry`, here with group = 1 (no
+#      doubling: every block already knows its destination).  q-1 aggregated
+#      DCN messages per pod total vs p_ℓ²·(q-1) for the flat pairwise
+#      exchange.
+#   3. intra-pod deliver   — a second local all-to-all fans the received
+#      slabs' columns out to their destination lanes (own-pod blocks ride
+#      the same ppermutes), and a static reassembly restores canonical
+#      source-rank order.
+#
+# Linear throughout (roll / reshape / pad / ppermute), so jax.vjp transposes
+# the whole exchange into the reversed all-to-all for free — the MoE return
+# leg and the router-gradient path reuse the same machinery.
+
+#: Canonical algorithm names for the all_to_all family.
+ALL_TO_ALL_ALGORITHMS = ("locality", "xla")
+
+
+def _a2a_rounds(q: int, pl: int) -> int:
+    """Inter-pod round count of the two-tier all-to-all: offsets 1..q-1
+    spread over p_ℓ lanes."""
+    return -(-(q - 1) // pl) if q > 1 else 0
+
+
+def _a2a_active(q: int, pl: int, t: int) -> int:
+    """Active lanes in inter-pod round ``t`` (partial on the last round of a
+    non-power q, mirroring `_nonlocal_round_geometry`'s ``active``)."""
+    return max(0, min(pl, (q - 1) - t * pl))
+
+
+def _local_exchange(struct: jax.Array, axes: tuple[str, ...], q: int, pl: int,
+                    l: jax.Array, tag: str) -> jax.Array:
+    """Local all-to-all of ``struct`` (leading dim p_ℓ: entry λ is the
+    payload for local rank λ).  Returns the mirrored structure: entry m is
+    the payload local rank m addressed to us.  p_ℓ - 1 intra-pod ppermutes
+    (offset k pairs lane m with lane m+k), plus the rank's own entry.
+    """
+    flat = lambda Rg, lg: Rg * pl + lg
+    sends = jnp.roll(struct, -l, axis=0)          # sends[k] -> lane (l+k)%pl
+    arr = [sends[0]]                              # k = 0: own payload
+    with jax.named_scope(tag):
+        for k in range(1, pl):
+            pairs = [(flat(Rg, m), flat(Rg, (m + k) % pl))
+                     for Rg in range(q) for m in range(pl)]
+            arr.append(lax.ppermute(sends[k], axes, pairs))
+    # arr[k] came from lane (l-k)%pl; reindex to source-lane order.
+    return jnp.roll(jnp.stack(arr)[::-1], l + 1, axis=0)
+
+
+def locality_all_to_all_start(x: jax.Array, outer: Axes, local: Axes = (), *,
+                              tiled: bool = False,
+                              assume_varying: bool = False
+                              ) -> PendingCollective:
+    """Two-tier all-to-all, split: the intra-pod collect and ALL inter-pod
+    rounds run here — every DCN byte is on the wire when start returns; only
+    the intra-pod delivery + static reassembly remain in finish."""
+    outer, local = _tup(outer), _tup(local)
+    q, pl = _size(outer), _size(local)
+    p = q * pl
+    if not assume_varying:
+        x = _varying(x, outer + local)
+    assert x.shape[0] % p == 0, \
+        f"all_to_all leading dim {x.shape[0]} not divisible by p={p}"
+    blk = (x.shape[0] // p,) + x.shape[1:]
+    xb = x.reshape((q, pl) + blk)                 # [dest_pod][dest_lane]
+    if p == 1:
+        return PendingCollective((x,), _SplitMeta("all_to_all", "done"))
+    axes = outer + local
+    l = lax.axis_index(local) if pl > 1 else jnp.int32(0)
+    nrounds = _a2a_rounds(q, pl)
+
+    with jax.named_scope(f"loc_a2a_start_q{q}_pl{pl}"):
+        if q > 1:
+            R = lax.axis_index(outer)
+            # xs[s] = block-slab destined to pod (R+1+s)%q; xs[q-1] = own pod.
+            xs = jnp.roll(xb, -(R + 1), axis=0)
+            own = xs[q - 1]                       # (pl_dst, *blk)
+            rs = xs[: q - 1]
+            pad = [(0, nrounds * pl - (q - 1))] + [(0, 0)] * (rs.ndim - 1)
+            rs = jnp.pad(rs, pad)                 # zero slots: inactive lanes
+            # offset slot s = t·pl + λ  →  send-structure [λ][t][dest_lane]
+            sendst = jnp.moveaxis(
+                rs.reshape((nrounds, pl, pl) + blk), 1, 0)
+            # Phase 1: lane λ collects every local rank's slabs for λ's pods.
+            coll = _local_exchange(sendst, axes, q, pl, l, "a2a_collect")
+            # coll: (pl_src, nrounds, pl_dst, *blk) → per-round slabs
+            A = jnp.moveaxis(coll, 1, 0)          # (nrounds, pl_src, pl_dst, ...)
+            # Phase 2: one aggregated DCN message per active lane per round.
+            recvs = []
+            for t in range(nrounds):
+                active = _a2a_active(q, pl, t)
+                pairs = [(Rg * pl + lg,
+                          ((Rg + t * pl + lg + 1) % q) * pl + lg)
+                         for lg in range(active) for Rg in range(q)]
+                with jax.named_scope(f"a2a_nonlocal_round{t}"):
+                    recvs.append(lax.ppermute(A[t], axes, pairs))
+            slabs = jnp.stack(recvs)              # (nrounds, pl_src, pl_dst, ...)
+            return PendingCollective(
+                (slabs, own), _SplitMeta("all_to_all", "pending", outer,
+                                         local, tiled, blk, group=nrounds,
+                                         active=_a2a_active(q, pl,
+                                                            nrounds - 1)))
+        # q == 1: nothing crosses the pod boundary; delivery happens in finish.
+        own = xb[0]                               # (pl_dst, *blk)
+        return PendingCollective(
+            (own,), _SplitMeta("all_to_all", "local_only", outer, local,
+                               tiled, blk))
+
+
+def locality_all_to_all_finish(pending: PendingCollective) -> jax.Array:
+    """Complete a split two-tier all-to-all: intra-pod delivery of the
+    received slab columns (+ own-pod blocks) and canonical reordering."""
+    meta = pending.meta
+    assert meta.op == "all_to_all", meta
+    if meta.kind == "done":
+        return pending.arrays[0]
+    outer, local, blk = meta.outer, meta.local, meta.x_shape
+    q = _size(outer) if outer else 1
+    pl = _size(local) if local else 1
+    p = q * pl
+    axes = outer + local
+    l = lax.axis_index(local) if pl > 1 else jnp.int32(0)
+    nrounds = meta.group if meta.kind == "pending" else 0
+
+    with jax.named_scope(f"loc_a2a_finish_q{q}_pl{pl}"):
+        if meta.kind == "pending":
+            slabs, own = pending.arrays
+            # Phase 3 payload for dest lane m: the m-columns of every
+            # received slab, then the own-pod block — one structure so the
+            # own-pod blocks ride the same p_ℓ-1 local ppermutes.
+            cols = jnp.moveaxis(slabs, 2, 0)      # (pl_dst, nrounds, pl_src, ...)
+            cols = cols.reshape((pl, nrounds * pl) + blk)
+            struct = jnp.concatenate([cols, own[:, None]], axis=1)
+        else:
+            (own,) = pending.arrays
+            struct = own[:, None]                 # (pl_dst, 1, *blk)
+        got = _local_exchange(struct, axes, q, pl, l, "a2a_deliver")
+        # got[λ][s] for s < nrounds·pl: block from pod (R - (t·pl+λ+1))%q,
+        # src lane s%pl; got[λ][-1]: own-pod block from lane λ.
+        own_blocks = got[:, -1]                   # (pl_src, *blk)
+        if q > 1:
+            rem = jnp.moveaxis(
+                got[:, :-1].reshape((pl, nrounds, pl) + blk), 1, 0)
+            rem = rem.reshape((nrounds * pl, pl) + blk)[: q - 1]
+            stacked = jnp.concatenate([own_blocks[None], rem], axis=0)
+            # stacked[o] = blocks from pod (R-o)%q → canonical pod order.
+            R = lax.axis_index(outer)
+            canon = jnp.roll(stacked[::-1], R + 1, axis=0)
+        else:
+            canon = own_blocks[None]
+        buf = canon.reshape((p,) + blk)
+    # unlike allgather, the exchange preserves shape: block i of the output
+    # (same leading-dim split as the input) came from rank i
+    return buf.reshape((p * blk[0],) + blk[1:])
+
+
+def locality_all_to_all(x: jax.Array, outer: Axes, local: Axes = (), *,
+                        tiled: bool = False,
+                        assume_varying: bool = False) -> jax.Array:
+    """Two-tier personalized exchange over ``outer + local`` (region-major).
+
+    ``x``'s leading dim is split into p equal blocks; block j goes to rank j
+    and the output's block i came from rank i — ``lax.all_to_all`` with
+    ``split_axis=concat_axis=0, tiled=True`` semantics.  Composed of the
+    split halves so the eager and overlapped paths cannot drift.
+    """
+    return locality_all_to_all_finish(locality_all_to_all_start(
+        x, outer, local, tiled=tiled, assume_varying=assume_varying))
+
+
+def all_to_all(x: jax.Array, outer: Axes, local: Axes = (), *,
+               algorithm: str = "locality", tiled: bool = False,
+               assume_varying: bool = False) -> jax.Array:
+    """All-to-all dispatcher: 'locality' (two-tier, minimized inter-pod
+    phase), 'xla' (lax.all_to_all — direct pairwise under the analyzer's
+    pricing), or 'auto' (tuning policy)."""
+    if algorithm == "auto":
+        algorithm = _resolve_auto("all_to_all", x, _tup(outer), _tup(local))
+    if algorithm == "locality":
+        return locality_all_to_all(x, outer, local, tiled=tiled,
+                                   assume_varying=assume_varying)
+    if algorithm == "xla":
+        axes = _tup(outer) + _tup(local)
+        if not assume_varying:
+            x = _varying(x, axes)
+        if _size(axes) == 1:
+            return x
+        return lax.all_to_all(x, axes, split_axis=0, concat_axis=0,
+                              tiled=True)
+    raise ValueError(f"unknown all_to_all algorithm {algorithm!r}; "
+                     f"known: {ALL_TO_ALL_ALGORITHMS + ('auto',)}")
+
+
+def all_to_all_start(x: jax.Array, outer: Axes, local: Axes = (), *,
+                     algorithm: str = "locality", tiled: bool = False,
+                     assume_varying: bool = False) -> PendingCollective:
+    """Issue an all-to-all; complete with :func:`all_to_all_finish`.  For
+    'locality' the DCN rounds genuinely complete in start; 'xla' has no
+    local tail, so the split is a program-order hook."""
+    if algorithm == "auto":
+        algorithm = _resolve_auto("all_to_all", x, _tup(outer), _tup(local))
+    if algorithm == "locality":
+        return locality_all_to_all_start(x, outer, local, tiled=tiled,
+                                         assume_varying=assume_varying)
+    full = all_to_all(x, outer, local, algorithm=algorithm, tiled=tiled,
+                      assume_varying=assume_varying)
+    return PendingCollective((full,), _SplitMeta("all_to_all", "done"))
+
+
+def all_to_all_finish(pending: PendingCollective) -> jax.Array:
+    """Complete an :func:`all_to_all_start`; bit-identical to eager."""
+    assert pending.meta.op == "all_to_all", pending.meta
+    return locality_all_to_all_finish(pending)
 
 
 # =============================================================================
@@ -724,7 +974,7 @@ def _rd_allreduce(x: jax.Array, axes: tuple[str, ...],
 
 
 
-def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
+def _locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
                        outer_algorithm: str = "rhd",
                        op: str = "sum") -> jax.Array:
     """Locality-aware allreduce (paper's structure applied to reductions).
@@ -788,7 +1038,7 @@ def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
                     rs = reduce_scatter(part, outer, algorithm="bruck")
                 else:
                     rs = _rhd_reduce_scatter(part, outer)
-                part = bruck_allgather(rs, outer, tiled=True)
+                part = _bruck_allgather(rs, outer, tiled=True)
                 if pad2:
                     part = part[:npart]
             elif outer_algorithm == "rd":
@@ -798,7 +1048,7 @@ def locality_allreduce(x: jax.Array, outer: Axes, local: Axes, *,
             else:
                 raise ValueError(f"unknown outer_algorithm {outer_algorithm!r}")
         if pl > 1:
-            full = bruck_allgather(part, local, tiled=True)
+            full = _bruck_allgather(part, local, tiled=True)
         else:
             full = part
     if pad:
@@ -818,7 +1068,7 @@ def allreduce(x: jax.Array, outer: Axes, local: Axes = (), *,
     if algorithm == "xla" or (not local) or _size(local) == 1:
         return _XLA_REDUCERS[op](x, outer + local)
     if algorithm == "locality":
-        return locality_allreduce(x, outer, local,
+        return _locality_allreduce(x, outer, local,
                                   outer_algorithm=outer_algorithm, op=op)
     raise ValueError(f"unknown allreduce algorithm {algorithm!r}")
 
@@ -847,7 +1097,7 @@ def allreduce_finish(pending: PendingCollective) -> jax.Array:
 # =============================================================================
 # Logsumexp combine — the serve decode cache-combine (§Perf, serve/engine.py)
 # =============================================================================
-def locality_logsumexp_combine(o: jax.Array, m: jax.Array, l: jax.Array,
+def logsumexp_combine(o: jax.Array, m: jax.Array, l: jax.Array,
                                outer: Axes, local: Axes = (), *,
                                algorithm: str = "locality",
                                outer_algorithm: str = "rhd"
@@ -874,14 +1124,14 @@ def locality_logsumexp_combine(o: jax.Array, m: jax.Array, l: jax.Array,
     finished after the o/l accumulation) cannot drift.
     """
     with jax.named_scope("logsumexp_combine"):
-        pending = locality_logsumexp_combine_start(m, outer, local,
+        pending = logsumexp_combine_start(m, outer, local,
                                                    algorithm=algorithm)
-        return locality_logsumexp_combine_finish(
+        return logsumexp_combine_finish(
             o, l, pending, algorithm=algorithm,
             outer_algorithm=outer_algorithm)
 
 
-def locality_logsumexp_combine_start(m: jax.Array, outer: Axes,
+def logsumexp_combine_start(m: jax.Array, outer: Axes,
                                      local: Axes = (), *,
                                      algorithm: str = "locality"
                                      ) -> PendingCollective:
@@ -898,7 +1148,7 @@ def locality_logsumexp_combine_start(m: jax.Array, outer: Axes,
                                                 outer, local))
 
 
-def locality_logsumexp_combine_finish(o: jax.Array, l: jax.Array,
+def logsumexp_combine_finish(o: jax.Array, l: jax.Array,
                                       pending: PendingCollective, *,
                                       algorithm: str = "locality",
                                       outer_algorithm: str = "rhd"
@@ -916,3 +1166,203 @@ def locality_logsumexp_combine_finish(o: jax.Array, l: jax.Array,
                         outer_algorithm=outer_algorithm, op="sum")
     n_o = o32.size
     return tot[:n_o].reshape(o32.shape), tot[n_o:].reshape(l32.shape)
+
+
+# =============================================================================
+# Unified collective surface (DESIGN.md §12) — ONE entry point, one vocabulary
+# =============================================================================
+#: Canonical collective kinds. "combine" is the decode logsumexp cache-combine
+#: (tuning cell name: "logsumexp_combine" — accepted as a kind alias).
+KINDS = ("allgather", "allreduce", "reduce_scatter", "all_to_all",
+         "cache_migrate", "combine")
+
+#: THE algorithm vocabulary, per kind.  These exact strings are what the
+#: tuning cache keys (tuning/cache.make_key), the policy crossover tables,
+#: and the comm-ledger labels (telemetry: "train/moe_dispatch:locality") use
+#: — one enum, no per-subsystem drift.  "auto" resolves through
+#: repro.tuning.policy at trace time.
+ALGORITHMS_BY_KIND = {
+    "allgather": ("bruck", "ring", "hierarchical", "multilane",
+                  "locality_bruck", "xla", "auto"),
+    "allreduce": ("locality", "xla", "auto"),
+    "reduce_scatter": ("bruck", "ring", "hierarchical", "multilane",
+                       "locality_bruck", "xla"),
+    "all_to_all": ("locality", "xla", "auto"),
+    "cache_migrate": ("locality_bruck", "multilane", "xla", "auto"),
+    "combine": ("locality", "xla", "auto"),
+}
+
+#: Per-kind default when ``algorithm`` is omitted — the locality schedule
+#: everywhere one exists, matching each family function's own default.
+DEFAULT_ALGORITHM = {
+    "allgather": "locality_bruck", "allreduce": "locality",
+    "reduce_scatter": "locality_bruck", "all_to_all": "locality",
+    "cache_migrate": "auto", "combine": "locality",
+}
+
+_KIND_ALIASES = {"logsumexp_combine": "combine"}
+
+
+def _norm_kind(kind: str) -> str:
+    kind = _KIND_ALIASES.get(kind, kind)
+    if kind not in KINDS:
+        raise ValueError(f"unknown collective kind {kind!r}; known: {KINDS}")
+    return kind
+
+
+def collective(kind: str, *operands: jax.Array, outer: Axes,
+               local: Axes = (), algorithm: str | None = None,
+               start: bool = False, **kwargs):
+    """The single collective entry point (thin dispatch, zero new math).
+
+    ``collective(kind, x, outer=..., local=..., algorithm=...)`` runs the
+    named family eagerly; ``start=True`` returns a :class:`PendingCollective`
+    to complete with :func:`finish`.  Operands per kind: one array for
+    allgather / allreduce / reduce_scatter / all_to_all / cache_migrate;
+    ``(o, m, l)`` for the eager "combine" and just ``(m,)`` for its start
+    half (o and l are supplied to :func:`finish`).  Remaining ``kwargs``
+    (``tiled``, ``op``, ``outer_algorithm``, ``assume_varying``) pass
+    through to the family function.
+    """
+    kind = _norm_kind(kind)
+    if algorithm is None:
+        algorithm = DEFAULT_ALGORITHM[kind]
+    if algorithm not in ALGORITHMS_BY_KIND[kind]:
+        raise ValueError(
+            f"unknown algorithm {algorithm!r} for kind {kind!r}; known: "
+            f"{ALGORITHMS_BY_KIND[kind]}")
+    if kind == "combine":
+        if start:
+            (m,) = operands
+            return logsumexp_combine_start(m, outer, local,
+                                           algorithm=algorithm, **kwargs)
+        o, m, l = operands
+        return logsumexp_combine(o, m, l, outer, local, algorithm=algorithm,
+                                 **kwargs)
+    (x,) = operands
+    if kind == "reduce_scatter":
+        if start:
+            raise NotImplementedError(
+                "reduce_scatter has no start/finish split (its rounds form "
+                "one dependency chain ending at the caller)")
+        return reduce_scatter(x, outer, local, algorithm=algorithm, **kwargs)
+    eager, starter = {
+        "allgather": (allgather, allgather_start),
+        "allreduce": (allreduce, allreduce_start),
+        "all_to_all": (all_to_all, all_to_all_start),
+        "cache_migrate": (cache_migrate, None),
+    }[kind]
+    if start:
+        if starter is None:
+            raise NotImplementedError(f"{kind} has no start/finish split")
+        return starter(x, outer, local, algorithm=algorithm, **kwargs)
+    return eager(x, outer, local, algorithm=algorithm, **kwargs)
+
+
+def finish(pending: PendingCollective, *operands: jax.Array, **kwargs):
+    """Complete any ``collective(..., start=True)``; dispatches on the
+    pending op.  The "combine" kind takes its deferred ``(o, l)`` operands
+    here; every other kind takes none."""
+    op = pending.meta.op
+    if op == "logsumexp":
+        o, l = operands
+        return logsumexp_combine_finish(o, l, pending, **kwargs)
+    assert not operands, (op, len(operands))
+    return {"allgather": allgather_finish, "allreduce": allreduce_finish,
+            "all_to_all": all_to_all_finish}[op](pending, **kwargs)
+
+
+@dataclasses.dataclass(frozen=True)
+class Collective:
+    """A configured collective: kind + algorithm + axes bound once, applied
+    many times — ``Collective("allgather", outer=("pod",), local=("data",))``
+    then ``c(x)`` / ``c.start(x)`` + ``c.finish(pending)``.  Pure sugar over
+    :func:`collective`; exists so call sites carry ONE object instead of
+    re-threading (kind, algorithm, outer, local) through every layer."""
+
+    kind: str
+    outer: tuple[str, ...] = ()
+    local: tuple[str, ...] = ()
+    algorithm: str | None = None
+
+    def __post_init__(self):
+        object.__setattr__(self, "outer", _tup(self.outer))
+        object.__setattr__(self, "local", _tup(self.local))
+        _norm_kind(self.kind)
+
+    def __call__(self, *operands, **kwargs):
+        return collective(self.kind, *operands, outer=self.outer,
+                          local=self.local, algorithm=self.algorithm,
+                          **kwargs)
+
+    def start(self, *operands, **kwargs) -> PendingCollective:
+        return self(*operands, start=True, **kwargs)
+
+    @staticmethod
+    def finish(pending: PendingCollective, *operands, **kwargs):
+        return finish(pending, *operands, **kwargs)
+
+
+# =============================================================================
+# Deprecated aliases (DESIGN.md §12 deprecation policy)
+# =============================================================================
+# The algorithm-specific entry points predate the unified surface; they warn
+# ONCE per process and forward unchanged.  Removal one release out.  The
+# family functions (allgather/allreduce/reduce_scatter/all_to_all/
+# cache_migrate/logsumexp_combine, their _start/_finish halves, and
+# collective()/Collective/finish) are the supported API.
+_WARNED: set[str] = set()
+
+
+def _deprecated(name: str, replacement: str, fn):
+    @functools.wraps(fn)
+    def wrapper(*args, **kwargs):
+        if name not in _WARNED:
+            _WARNED.add(name)
+            warnings.warn(
+                f"repro.core.collectives.{name} is deprecated; use "
+                f"{replacement} (removal one release out, see DESIGN.md §12)",
+                DeprecationWarning, stacklevel=2)
+        return fn(*args, **kwargs)
+    wrapper.__name__ = name
+    wrapper.__qualname__ = name
+    return wrapper
+
+
+bruck_allgather = _deprecated(
+    "bruck_allgather", 'collective("allgather", ..., algorithm="bruck")',
+    _bruck_allgather)
+ring_allgather = _deprecated(
+    "ring_allgather", 'collective("allgather", ..., algorithm="ring")',
+    _ring_allgather)
+hierarchical_allgather = _deprecated(
+    "hierarchical_allgather",
+    'collective("allgather", ..., algorithm="hierarchical")',
+    _hierarchical_allgather)
+multilane_allgather = _deprecated(
+    "multilane_allgather",
+    'collective("allgather", ..., algorithm="multilane")',
+    _multilane_allgather)
+locality_bruck_allgather = _deprecated(
+    "locality_bruck_allgather",
+    'collective("allgather", ..., algorithm="locality_bruck")',
+    _locality_bruck_allgather)
+locality_bruck_allgather_start = _deprecated(
+    "locality_bruck_allgather_start",
+    'collective("allgather", ..., algorithm="locality_bruck", start=True)',
+    _locality_bruck_allgather_start)
+locality_bruck_allgather_finish = _deprecated(
+    "locality_bruck_allgather_finish", "finish(pending)",
+    _locality_bruck_allgather_finish)
+locality_allreduce = _deprecated(
+    "locality_allreduce", 'collective("allreduce", ..., '
+    'algorithm="locality")', _locality_allreduce)
+locality_logsumexp_combine = _deprecated(
+    "locality_logsumexp_combine", 'collective("combine", o, m, l, ...)',
+    logsumexp_combine)
+locality_logsumexp_combine_start = _deprecated(
+    "locality_logsumexp_combine_start",
+    'collective("combine", m, ..., start=True)', logsumexp_combine_start)
+locality_logsumexp_combine_finish = _deprecated(
+    "locality_logsumexp_combine_finish", "finish(pending, o, l)",
+    logsumexp_combine_finish)

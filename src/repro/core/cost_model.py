@@ -421,6 +421,67 @@ def cache_migrate_model(algorithm: str, p: int, p_local: int,
     raise ValueError(f"unknown cache_migrate algorithm {algorithm!r}")
 
 
+def xla_all_to_all_model(p: int, p_local: int, block_bytes: float,
+                         m: MachineParams) -> float:
+    """Flat pairwise all-to-all (the XLA baseline): every rank sends one
+    ``block_bytes`` message straight to each peer — ``p_ℓ-1`` local,
+    ``p - p_ℓ`` crossing the region boundary. ``block_bytes`` is one
+    (source, destination)-pair payload, i.e. b/p of the per-rank buffer."""
+    if p <= 1:
+        return 0.0
+    n_nl = p - p_local
+    n_l = p_local - 1
+    return m.cost(n_local=n_l, s_local=n_l * block_bytes,
+                  n_nonlocal=n_nl, s_nonlocal=n_nl * block_bytes)
+
+
+def locality_all_to_all_model(p: int, p_local: int, block_bytes: float,
+                              m: MachineParams) -> float:
+    """Two-tier all-to-all (collectives.locality_all_to_all): pod offsets
+    o ∈ [1, q) are lane-assigned round-robin, so lane λ ships
+    ``n_off(λ) = ceil((q-1-λ)/p_ℓ)`` aggregated p_ℓ²-block DCN messages —
+    q-1 per region total vs p_ℓ²·(q-1) pairwise — bracketed by the local
+    collect and delivery exchanges. Same unpadded per-rank accounting as
+    the ``schedules.locality_all_to_all`` oracle (Eq. 2 over the worst
+    rank), so this closed form and ``schedule_cost(mode="postal")`` agree
+    exactly. ``block_bytes`` is one (source, destination)-pair payload."""
+    region = RegionMap(p=p, p_local=p_local)
+    q, pl = region.n_regions, p_local
+    if p <= 1:
+        return 0.0
+    nrounds = -(-(q - 1) // pl) if q > 1 else 0
+    n_off = [sum(1 for t in range(nrounds) if t * pl + lam + 1 <= q - 1)
+             for lam in range(pl)]
+    b = block_bytes
+    worst = 0.0
+    for lam in range(pl):
+        # collect: one message per peer lane that owns any offset
+        n_l = sum(1 for o in range(pl) if o != lam and n_off[o] > 0)
+        s_l = ((q - 1) - n_off[lam]) * pl * b
+        # delivery: own-region block + received slab columns to every lane
+        n_l += pl - 1
+        s_l += (pl - 1) * (1 + n_off[lam] * pl) * b
+        cost = m.cost(n_local=n_l, s_local=s_l, n_nonlocal=n_off[lam],
+                      s_nonlocal=n_off[lam] * pl * pl * b)
+        worst = max(worst, cost)
+    return worst
+
+
+def all_to_all_model(algorithm: str, p: int, p_local: int, block_bytes: float,
+                     m: MachineParams | str) -> float:
+    """Closed-form price of a personalized exchange (collectives.all_to_all)
+    under the canonical algorithm vocabulary. ``block_bytes`` is one
+    (source, destination)-pair payload — the b/p unit the all-to-all
+    schedules count blocks in."""
+    if isinstance(m, str):
+        m = MACHINES[m]
+    if algorithm == "locality":
+        return locality_all_to_all_model(p, p_local, block_bytes, m)
+    if algorithm == "xla":
+        return xla_all_to_all_model(p, p_local, block_bytes, m)
+    raise ValueError(f"unknown all_to_all algorithm {algorithm!r}")
+
+
 def checkpoint_replication_model(q: int, shard_bytes: float,
                                  m: MachineParams | str, *,
                                  rf: int = 2) -> float:

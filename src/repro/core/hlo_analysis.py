@@ -44,8 +44,12 @@ COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
                "collective-permute")
 
 _SHAPE_RE = re.compile(r"(" + "|".join(_DTYPE_BYTES) + r")\[([\d,]*)\]")
+# A result type is either a scalar/array type token or a parenthesised
+# tuple. Tuple types may carry `/*index=N*/` element comments (CPU-backend
+# tuple-shaped all-to-all), so the tuple branch matches on balanced parens,
+# not on "no '=' inside".
 _OP_RE = re.compile(
-    r"=\s+((?:\([^=]*?\))|(?:\S+))\s+"
+    r"=\s+((?:\([^()]*\))|(?:\S+))\s+"
     r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
     r"(?:-start)?\(")
 _PAIRS_RE = re.compile(r"source_target_pairs=\{([\d,{} ]*)\}")

@@ -363,3 +363,141 @@ ALGORITHMS = {
     "multilane": lambda p, pl: multilane(p, pl),
     "locality_bruck": lambda p, pl: locality_bruck(p, pl),
 }
+
+
+# =============================================================================
+# All-to-all oracles — personalized exchange (the MoE dispatch collective)
+# =============================================================================
+# A block here is a (source, destination) pair, encoded src·p + dst; every
+# rank starts owning the p blocks {r·p + d} and must end holding the p blocks
+# {s·p + r}. ``Schedule.buffers`` lists the blocks each rank RECEIVED (own
+# block r·p+r included); ``validate_all_to_all`` replaces the allgather
+# ``Schedule.validate``. ``per_rank_stats`` works unchanged, so the postal
+# model prices these schedules through the same ``cost_model.schedule_cost``.
+
+
+def a2a_block(src: int, dst: int, p: int) -> int:
+    return src * p + dst
+
+
+def validate_all_to_all(sched: Schedule) -> None:
+    """Every rank must end with exactly the p blocks addressed to it."""
+    p = sched.p
+    for r, buf in enumerate(sched.buffers):
+        want = [a2a_block(s, r, p) for s in range(p)]
+        if sorted(set(buf)) != want:
+            missing = set(want) - set(buf)
+            raise AssertionError(
+                f"{sched.algorithm}: rank {r} missing blocks for sources "
+                f"{sorted(b // p for b in missing)[:8]}")
+
+
+def _a2a_deliver(delivered: list[set], sends: list[Send], p: int) -> None:
+    """Credit every block that just reached its destination rank."""
+    for s in sends:
+        for b in s.blocks:
+            if b % p == s.dst:
+                delivered[s.dst].add(b)
+
+
+def xla_all_to_all(p: int, p_local: int | None = None) -> Schedule:
+    """Flat direct pairwise exchange — the XLA baseline the analyzer prices:
+    p-1 rotation rounds, each rank shipping one block straight to its
+    destination (b/p bytes per ordered pair)."""
+    region = RegionMap(p, p_local) if p_local else None
+    delivered = [{a2a_block(r, r, p)} for r in range(p)]
+    rounds: list[Round] = []
+    for k in range(1, p):
+        sends = [Send(src=r, dst=(r + k) % p,
+                      blocks=(a2a_block(r, (r + k) % p, p),))
+                 for r in range(p)]
+        _a2a_deliver(delivered, sends, p)
+        rounds.append(Round(sends=tuple(sends), phase=f"a2a-pairwise-k{k}"))
+    return Schedule(p=p, rounds=rounds, buffers=[sorted(d) for d in delivered],
+                    algorithm="xla", region=region)
+
+
+def locality_all_to_all(p: int, p_local: int) -> Schedule:
+    """Two-tier all-to-all (collectives.locality_all_to_all's oracle).
+
+    Offsets o ∈ [1, q) are lane-assigned round-robin (offset o → lane
+    (o-1) mod p_ℓ, round (o-1) div p_ℓ — Algorithm 2's modular lane
+    geometry, partial last round for non-power q). Three phases:
+    intra-region collect (each lane accumulates the whole region's blocks
+    for its pods), one aggregated p_ℓ²-block inter-region message per
+    active lane per round — q-1 DCN messages per region total vs
+    p_ℓ²·(q-1) for the flat exchange — then intra-region delivery.
+    Local sends are counted unpadded (the executable ships zero-padded
+    uniform slabs on the partial round; DCN counts are exact either way).
+    """
+    region = RegionMap(p=p, p_local=p_local)
+    pl, q = p_local, region.n_regions
+    delivered = [{a2a_block(r, r, p)} for r in range(p)]
+    rounds: list[Round] = []
+    nrounds = -(-(q - 1) // pl) if q > 1 else 0
+
+    def lane_offsets(lam: int) -> list[int]:
+        return [t * pl + lam + 1 for t in range(nrounds)
+                if t * pl + lam + 1 <= q - 1]
+
+    # Phase 1: local collect — rank (R, m) hands lane (m+k)%pl the blocks
+    # destined to that lane's assigned pods.
+    for k in range(1, pl):
+        sends = []
+        for R in range(q):
+            for m in range(pl):
+                lam = (m + k) % pl
+                src = region.rank_of(R, m)
+                blocks = tuple(
+                    a2a_block(src, region.rank_of((R + o) % q, dl), p)
+                    for o in lane_offsets(lam) for dl in range(pl))
+                if blocks:
+                    sends.append(Send(src=src, dst=region.rank_of(R, lam),
+                                      blocks=blocks))
+        if sends:
+            _a2a_deliver(delivered, sends, p)
+            rounds.append(Round(sends=tuple(sends), phase=f"a2a-collect-k{k}"))
+
+    # Phase 2: aggregated inter-region rounds (the minimized DCN phase).
+    for t in range(nrounds):
+        active = min(pl, (q - 1) - t * pl)
+        sends = []
+        for lam in range(active):
+            o = t * pl + lam + 1
+            for R in range(q):
+                src = region.rank_of(R, lam)
+                dst = region.rank_of((R + o) % q, lam)
+                blocks = tuple(
+                    a2a_block(region.rank_of(R, sm),
+                              region.rank_of((R + o) % q, dl), p)
+                    for sm in range(pl) for dl in range(pl))
+                sends.append(Send(src=src, dst=dst, blocks=blocks))
+        _a2a_deliver(delivered, sends, p)
+        rounds.append(Round(sends=tuple(sends), phase=f"a2a-nonlocal-t{t}"))
+
+    # Phase 3: local delivery of the received slab columns + own-region blocks.
+    for k in range(1, pl):
+        sends = []
+        for R in range(q):
+            for m in range(pl):
+                dst_lane = (m + k) % pl
+                src = region.rank_of(R, m)
+                dst = region.rank_of(R, dst_lane)
+                blocks = [a2a_block(src, dst, p)]       # own-region block
+                for o in lane_offsets(m):
+                    Rs = (R - o) % q
+                    blocks.extend(a2a_block(region.rank_of(Rs, sm), dst, p)
+                                  for sm in range(pl))
+                sends.append(Send(src=src, dst=dst, blocks=tuple(blocks)))
+        _a2a_deliver(delivered, sends, p)
+        rounds.append(Round(sends=tuple(sends), phase=f"a2a-deliver-k{k}"))
+    return Schedule(p=p, rounds=rounds, buffers=[sorted(d) for d in delivered],
+                    algorithm="locality", region=region)
+
+
+#: All-to-all schedule generators, keyed by the canonical algorithm strings
+#: (collectives.ALL_TO_ALL_ALGORITHMS).
+ALL_TO_ALL_SCHEDULES = {
+    "locality": locality_all_to_all,
+    "xla": lambda p, pl: xla_all_to_all(p, pl),
+}

@@ -54,30 +54,36 @@ def model_flops(cfg, shape) -> float:
 
 
 def lower_cell(cfg, shape, mesh, *, grad_sync="locality", fsdp=True,
-               seq_shard=False, remat=True):
-    """Returns the jax ``Lowered`` for one cell."""
+               seq_shard=False, remat=True, moe_dispatch="auto"):
+    """Returns the jax ``Lowered`` for one cell (plus the step artifacts
+    for train, so the caller can record the resolved MoE dispatch)."""
     if shape.kind == "train":
+        # "auto" lets make_train_step resolve expert-parallel dispatch per
+        # cell: the tuning policy picks the algorithm where the config is
+        # eligible (MoE arch, E and B divisible by the DP span), and the
+        # cell degrades to "none" everywhere else
         art = make_train_step(cfg, mesh, grad_sync=grad_sync, fsdp=fsdp,
                               seq_shard=seq_shard, remat=remat,
-                              shape=shape)
+                              shape=shape, moe_dispatch=moe_dispatch)
         return art.step_fn.lower(art.abstract_state,
-                                 dict(cfg.input_specs(shape)))
+                                 dict(cfg.input_specs(shape))), art
     if shape.kind == "prefill":
         art = make_serve_fns(cfg, mesh, ServeSpec(batch=shape.global_batch,
                                                   cache_len=shape.seq_len))
         return art.prefill_fn.lower(art.abstract_params,
-                                    dict(cfg.input_specs(shape)))
+                                    dict(cfg.input_specs(shape))), art
     # decode: cache of seq_len context + one-token step
     art = make_serve_fns(cfg, mesh, ServeSpec(batch=shape.global_batch,
                                               cache_len=shape.seq_len))
     c_specs = cache_specs(cfg, shape.global_batch, shape.seq_len)
     tok = jax.ShapeDtypeStruct((shape.global_batch, 1), np.int32)
-    return art.decode_fn.lower(art.abstract_params, c_specs, tok)
+    return art.decode_fn.lower(art.abstract_params, c_specs, tok), art
 
 
 def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
              grad_sync="locality", fsdp=True, seq_shard=False, remat=True,
-             tag="", out_dir=RESULTS_DIR, force=False) -> dict:
+             moe_dispatch="auto", tag="", out_dir=RESULTS_DIR,
+             force=False) -> dict:
     os.makedirs(out_dir, exist_ok=True)
     fname = f"{arch}__{shape_name}__{mesh_kind}{('__' + tag) if tag else ''}.json"
     path = os.path.join(out_dir, fname)
@@ -103,8 +109,12 @@ def run_cell(arch: str, shape_name: str, mesh_kind: str, *,
            "n_chips": n_chips}
     try:
         with jax.set_mesh(mesh):
-            lowered = lower_cell(cfg, shape, mesh, grad_sync=grad_sync,
-                                 fsdp=fsdp, seq_shard=seq_shard, remat=remat)
+            lowered, art = lower_cell(cfg, shape, mesh, grad_sync=grad_sync,
+                                      fsdp=fsdp, seq_shard=seq_shard,
+                                      remat=remat, moe_dispatch=moe_dispatch)
+            if shape.kind == "train":
+                res["moe_dispatch"] = art.moe_dispatch
+                res["moe_transport"] = art.moe_transport
             compiled = lowered.compile()
             mem = compiled.memory_analysis()
             cost = compiled.cost_analysis()
@@ -175,6 +185,8 @@ def main() -> None:
     ap.add_argument("--shape", default=None)
     ap.add_argument("--mesh", default="single", choices=["single", "multi"])
     ap.add_argument("--grad-sync", default="locality")
+    ap.add_argument("--moe-dispatch", default="auto",
+                    choices=["none", "locality", "xla", "auto"])
     ap.add_argument("--no-fsdp", action="store_true")
     ap.add_argument("--seq-shard", action="store_true")
     ap.add_argument("--no-remat", action="store_true")
@@ -196,8 +208,8 @@ def main() -> None:
     for arch, s in cells:
         r = run_cell(arch, s, args.mesh, grad_sync=args.grad_sync,
                      fsdp=not args.no_fsdp, seq_shard=args.seq_shard,
-                     remat=not args.no_remat, tag=args.tag,
-                     out_dir=args.out, force=args.force)
+                     remat=not args.no_remat, moe_dispatch=args.moe_dispatch,
+                     tag=args.tag, out_dir=args.out, force=args.force)
         if r["status"] == "ok":
             roof = r["roofline"]
             print(f"[dryrun] {arch:24s} {s:12s} {args.mesh:6s} OK "

@@ -5,11 +5,25 @@ Dispatch never materializes a (B,S,E,C) one-hot: per batch row, the S·K
 expert, and converted into a static (E, C) gather/scatter index table.
 Dropped tokens (rank ≥ capacity) fall through via the residual connection.
 
-Sharding: expert-parallelism shards the leading E dim of expert weights and
-of the dispatched (B, E, C, d) activations over the ``model`` mesh axis (the
-``shard`` hooks 'experts' / 'moe_act'). Router compute is replicated.
+Sharding: two expert-parallel layouts.
+
+* GSPMD (default): the leading E dim of expert weights and of the dispatched
+  (B, E, C, d) activations shards over the ``model`` mesh axis (the ``shard``
+  hooks 'experts' / 'moe_act'). Router compute is replicated.
+* Locality dispatch (paper mode, DESIGN.md §12): inside the manual-DP
+  shard_map the E dim shards over the composite ('pod','data') DP axes — each
+  rank owns E/p experts and token slots travel through
+  ``core/collectives.all_to_all`` (a :class:`MoeDispatch` hook threaded from
+  ``train/step.py``). Two transports: "slots" ships the dispatched
+  (B, E, C, d) slot table both ways; "tokens" allgathers each rank's token
+  block ONCE (the locality-Bruck schedule ships one aggregated copy per
+  destination pod), routes only the small int32 index tables through the
+  all-to-all, and gathers at the owner — strictly fewer inter-pod bytes than
+  the flat exchange whenever top_k · capacity_factor exceeds the pod count.
 """
 from __future__ import annotations
+
+import dataclasses
 
 import jax
 import jax.numpy as jnp
@@ -17,6 +31,24 @@ import jax.numpy as jnp
 from .layers import dense_init
 
 AUX_LOSS_W = 0.01
+
+
+@dataclasses.dataclass(frozen=True)
+class MoeDispatch:
+    """Expert-parallel dispatch hook (train/step.py → moe_apply).
+
+    When set, the expert weights arriving at ``moe_apply`` are per-rank
+    shards of E // p experts and the exchange runs over the manual
+    ``outer + local`` mesh axes with ``core/collectives.all_to_all``.
+    ``algorithm`` is resolved (never "auto") so the transport choice and the
+    comm-ledger label are static.
+    """
+
+    outer: tuple          # ('pod',) on multi-pod meshes, () otherwise
+    local: tuple          # intra-pod DP axes, e.g. ('data',)
+    algorithm: str        # "locality" | "xla"
+    transport: str        # "tokens" | "slots"
+    p: int                # total DP ranks = expert-parallel degree
 
 
 def moe_init(rng, cfg) -> dict:
@@ -85,8 +117,81 @@ def _dispatch_tables(idx, gates, E: int, S: int, K: int, C: int):
     return tok_idx, weight
 
 
-def moe_apply(params: dict, x: jax.Array, cfg, *, shard=None):
-    """x: (B, S, d). Returns (out, aux_loss)."""
+def _expert_mlp(params: dict, h_in: jax.Array, dt) -> jax.Array:
+    """The per-expert SwiGLU on dispatched slots: (B, E, C, d) -> same."""
+    g = jnp.einsum("becd,edf->becf", h_in, params["gate"].astype(dt))
+    u = jnp.einsum("becd,edf->becf", h_in, params["up"].astype(dt))
+    h = jax.nn.silu(g) * u
+    return jnp.einsum("becf,efd->becd", h, params["down"].astype(dt))
+
+
+def _ep_apply(params: dict, x_pad: jax.Array, tok_idx: jax.Array, cfg,
+              dispatch: MoeDispatch, C_cap: int) -> jax.Array:
+    """Expert-parallel slot compute: route token slots to the rank owning
+    their expert, apply the shard's experts, route results home.
+
+    Runs inside the manual-DP shard_map; ``params`` hold (E/p, d, f) shards.
+    Both transports deliver bitwise-identical slot values to the owner (pure
+    permutations / exact-copy gathers), so the forward output and the router
+    gradients are bitwise-equal across transports AND across algorithms.
+    Returns (B, E·C, d) pre-combine slot outputs in global expert-major
+    order (the layout the caller's ``weight`` table indexes).
+    """
+    from repro.core import collectives as C
+
+    Bl, S1, d = x_pad.shape
+    E = cfg.n_experts
+    p, alg = dispatch.p, dispatch.algorithm
+    Ep = E // p
+    o, l = dispatch.outer, dispatch.local
+    dt = x_pad.dtype
+
+    if dispatch.transport == "tokens":
+        # Ship each rank's (sentinel-padded) token block ONCE — on the
+        # locality-Bruck schedule a pod's aggregate crosses the DCN one time
+        # per destination pod — and move only the int32 slot tables through
+        # the all-to-all; the owner gathers its slots from the full copy.
+        with jax.named_scope(f"moe_dispatch_{alg}_tokens"):
+            ag = "locality_bruck" if (alg == "locality" and o) else "bruck"
+            if alg == "xla":
+                ag = "xla"
+            xg = C.allgather(x_pad.reshape(Bl * S1, d), o, l,
+                             algorithm=ag, tiled=True)
+            xg = xg.reshape(p, Bl, S1, d)
+            ii = jnp.moveaxis(tok_idx.reshape(Bl, p, Ep * C_cap), 1, 0)
+            ri = C.all_to_all(ii.reshape(p * Bl, Ep * C_cap), o, l,
+                              algorithm=alg)
+            ri = ri.reshape(p, Bl, Ep * C_cap)
+            h_in = jnp.take_along_axis(xg, ri[..., None], axis=2)
+            h_in = h_in.reshape(p * Bl, Ep, C_cap, d)
+    else:
+        # Slot-table transport: dispatch at home, ship the (E/p)·C slot
+        # slabs to their owners. alg="xla" is the flat GSPMD-equivalent
+        # exchange the multipod gate baselines against.
+        with jax.named_scope(f"moe_dispatch_{alg}_slots"):
+            disp = jnp.take_along_axis(x_pad, tok_idx[..., None], axis=1)
+            dd = jnp.moveaxis(disp.reshape(Bl, p, Ep * C_cap, d), 1, 0)
+            h_in = C.all_to_all(dd.reshape(p * Bl, Ep * C_cap, d), o, l,
+                                algorithm=alg)
+            h_in = h_in.reshape(p * Bl, Ep, C_cap, d)
+
+    y = _expert_mlp(params, h_in, dt)                   # (p·Bl, Ep, C, d)
+
+    with jax.named_scope(f"moe_return_{alg}"):
+        back = C.all_to_all(y.reshape(p * Bl, Ep * C_cap, d), o, l,
+                            algorithm=alg)
+    yb = back.reshape(p, Bl, Ep, C_cap, d)
+    return jnp.moveaxis(yb, 0, 1).reshape(Bl, E * C_cap, d)
+
+
+def moe_apply(params: dict, x: jax.Array, cfg, *, shard=None,
+              dispatch: MoeDispatch | None = None):
+    """x: (B, S, d). Returns (out, aux_loss).
+
+    dispatch: expert-parallel hook (paper mode) — expert weights are per-rank
+    E/p shards and slot routing runs over the manual DP axes; None keeps the
+    replicated-expert GSPMD path.
+    """
     shard = shard or (lambda t, _k: t)
     B, S, d = x.shape
     E, K = cfg.n_experts, cfg.top_k
@@ -111,16 +216,16 @@ def moe_apply(params: dict, x: jax.Array, cfg, *, shard=None):
         lambda i, g: _dispatch_tables(i, g, E, S, K, C))(idx, gates)  # (B,E*C)
 
     x_pad = jnp.concatenate([x, jnp.zeros((B, 1, d), dt)], axis=1)   # sentinel
-    disp = jnp.take_along_axis(x_pad, tok_idx[..., None], axis=1)    # (B,E*C,d)
-    disp = disp.reshape(B, E, C, d)
-    disp = shard(disp, "moe_act")
-
-    g = jnp.einsum("becd,edf->becf", disp, params["gate"].astype(dt))
-    u = jnp.einsum("becd,edf->becf", disp, params["up"].astype(dt))
-    h = jax.nn.silu(g) * u
-    y = jnp.einsum("becf,efd->becd", h, params["down"].astype(dt))
-    y = shard(y, "moe_act")
-    y = (y.reshape(B, E * C, d) * weight[..., None].astype(dt))
+    if dispatch is not None:
+        y = _ep_apply(params, x_pad, tok_idx, cfg, dispatch, C)
+    else:
+        disp = jnp.take_along_axis(x_pad, tok_idx[..., None], axis=1)  # (B,E*C,d)
+        disp = disp.reshape(B, E, C, d)
+        disp = shard(disp, "moe_act")
+        y = _expert_mlp(params, disp, dt)
+        y = shard(y, "moe_act")
+        y = y.reshape(B, E * C, d)
+    y = y * weight[..., None].astype(dt)
 
     out = jnp.zeros((B, S + 1, d), dt).at[
         jnp.arange(B)[:, None], tok_idx].add(y, mode="drop")[:, :S]

@@ -92,7 +92,8 @@ def _shared_attn_init(rng, cfg) -> dict:
 
 
 def _apply_layer(lp, x, cfg, spec, *, positions, cache, build_cache,
-                 cache_len, pos, shard: Shard, decode_combine=None):
+                 cache_len, pos, shard: Shard, decode_combine=None,
+                 moe_dispatch=None):
     """Returns (x, aux, new_cache)."""
     aux = jnp.zeros((), jnp.float32)
     if spec.mixer == "mamba2":
@@ -139,7 +140,8 @@ def _apply_layer(lp, x, cfg, spec, *, positions, cache, build_cache,
 
     h = norm_apply(cfg, lp["ln2"], x)
     if spec.mlp == "moe":
-        m, aux = moe_apply(lp["moe"], h, cfg, shard=shard)
+        m, aux = moe_apply(lp["moe"], h, cfg, shard=shard,
+                           dispatch=moe_dispatch)
     elif spec.mlp == "dense":
         m = mlp_apply(lp["mlp"], h, cfg.mlp_act)
     else:
@@ -183,7 +185,7 @@ def init_params(rng, cfg) -> dict:
 
 def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
             cache_len=0, shard: Shard | None = None, remat=True,
-            decode_combine=None, prefetch=None):
+            decode_combine=None, prefetch=None, moe_dispatch=None):
     """Returns (logits, aux, new_cache).
 
     train:   logits (B,S,Vpad); new_cache None.
@@ -192,6 +194,9 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
     decode:  tokens (B,1); cache required; logits (B,1,Vpad).
     decode_combine: serve-layer hook for the decode cache write + attention
              over a sequence-sharded cache (see models/attention.attention).
+    moe_dispatch: expert-parallel dispatch hook (models/moe.MoeDispatch) —
+             train-mode paper path where MoE expert weights arrive as E/p
+             per-rank shards and slot routing runs over the manual DP axes.
     prefetch: train-layer hook for the double-buffered FSDP pipeline
              (DESIGN.md §5). When set (train mode only), ``params["blocks"]``
              holds per-device SHARDS and the scan becomes a pipelined
@@ -241,7 +246,8 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
             x_carry, aux, nc = _apply_layer(
                 lp, x_carry, cfg, spec, positions=positions, cache=c,
                 build_cache=build_cache, cache_len=cache_len, pos=pos,
-                shard=shard, decode_combine=decode_combine)
+                shard=shard, decode_combine=decode_combine,
+                moe_dispatch=moe_dispatch if mode == "train" else None)
             aux_acc += aux
             ncs[f"slot{j}"] = nc
         return x_carry, (aux_acc, ncs)
@@ -272,7 +278,8 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
                 x_carry, aux, _ = _apply_layer(
                     lp, x_carry, cfg, spec, positions=positions, cache=None,
                     build_cache=False, cache_len=cache_len, pos=pos,
-                    shard=shard, decode_combine=None)
+                    shard=shard, decode_combine=None,
+                    moe_dispatch=moe_dispatch)
                 aux_acc += aux
             return x_carry, aux_acc
 
@@ -317,7 +324,8 @@ def forward(params, cfg, tokens, *, img_embeds=None, mode="train", cache=None,
         x, aux, nc = _apply_layer(
             lp, x, cfg, spec, positions=positions, cache=c,
             build_cache=build_cache, cache_len=cache_len, pos=pos, shard=shard,
-            decode_combine=decode_combine)
+            decode_combine=decode_combine,
+            moe_dispatch=moe_dispatch if mode == "train" else None)
         aux_total += aux
         rest_ncs.append(nc)
 

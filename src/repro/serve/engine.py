@@ -21,7 +21,7 @@ the sequence-parallel cache reduction:
     regions, see DESIGN.md §3): per-shard flash-style partial stats
     (o-accumulator, running max, sumexp) from
     ``models.attention.decode_partial_stats``, combined with the explicit
-    ``core.collectives.locality_logsumexp_combine``
+    ``core.collectives.logsumexp_combine``
     (max-allreduce → rescale → packed sum-allreduce). The cache write lands
     on the owning shard via a masked device-local dynamic_update_slice —
     no gather of the sharded cache, and no all-reduce of the stat payload
@@ -331,7 +331,7 @@ def _make_locality_decode_combine(cfg, mesh, seq_cand: tuple[str, ...],
          ring caches use slot ``pos % L``);
       2. computes the masked scores + running max over the local cache
          slice and IMMEDIATELY issues the combine's max-allreduce
-         (``locality_logsumexp_combine_start`` — split halves of
+         (``logsumexp_combine_start`` — split halves of
          core/collectives). On a ``('pod','data')``-sharded cache the max
          runs HIERARCHICALLY: intra-pod recursive doubling first, then the
          inter-pod exchange — rd_rounds(q) tiny DCN messages for ANY pod
@@ -399,10 +399,10 @@ def _make_locality_decode_combine(cfg, mesh, seq_cand: tuple[str, ...],
                 ring=ring)
             mx = jnp.max(s, axis=-1)                 # (B, KV/m, G)
             B_, KV_, G_ = mx.shape
-            pend = C.locality_logsumexp_combine_start(
+            pend = C.logsumexp_combine_start(
                 mx.reshape(B_, 1, KV_ * G_), outer, local)
             o, l = stats_ops.accumulate(s, smask, mx, v_c, impl=stats_impl)
-            o, l = C.locality_logsumexp_combine_finish(o, l, pend)
+            o, l = C.logsumexp_combine_finish(o, l, pend)
             out = (o / l[..., None]).astype(v_c.dtype)
             return out, k_c, v_c
 

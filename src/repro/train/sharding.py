@@ -53,15 +53,26 @@ def _div(dim: int, n: int) -> bool:
     return n > 1 and dim % n == 0
 
 
+def moe_expert_leaf(path: tuple[str, ...], shape: tuple[int, ...]) -> bool:
+    """True for routed-expert weight leaves — the (E, d_in, d_out) stacks
+    locality expert parallelism shards over the DP axes (shared-expert and
+    dense-MLP projections are 2-D and never match)."""
+    return path[-1] in ("gate", "up", "down") and len(shape) == 3 \
+        and "shared" not in path
+
+
 def _leaf_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh,
-               fs_axes: tuple[str, ...]) -> P:
+               fs_axes: tuple[str, ...],
+               ep_axes: tuple[str, ...] = ()) -> P:
     """Heuristic spec from the leaf's key name; leading stacked dims are
     handled by the caller. ``fs_axes`` are the DP axes the FSDP dim may
-    shard over (empty = no FSDP)."""
+    shard over (empty = no FSDP); ``ep_axes`` the DP axes routed-expert
+    E dims shard over (empty = replicated/TP experts)."""
     name = path[-1]
     m = _axsize(mesh, MODEL_AXIS)
     d = _axsize(mesh, "data")
     full = math.prod(_axsize(mesh, a) for a in fs_axes) if fs_axes else 1
+    ep = math.prod(_axsize(mesh, a) for a in ep_axes) if ep_axes else 1
 
     def fdim(dim):
         # FSDP: prefer the full composite ('pod','data') span; dims only
@@ -93,10 +104,14 @@ def _leaf_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh,
         return P(mdim(shape[0]), fdim(shape[1]))
     if name in ("gate", "up"):
         if len(shape) == 3:                    # MoE experts (E, d, f): EP
+            if moe_expert_leaf(path, shape) and _div(shape[0], ep):
+                return P(tuple(ep_axes), None, None)
             return P(mdim(shape[0]), fdim(shape[1]), None)
         return P(fdim(shape[0]), mdim(shape[1]))
     if name == "down":
         if len(shape) == 3:                    # (E, f, d)
+            if moe_expert_leaf(path, shape) and _div(shape[0], ep):
+                return P(tuple(ep_axes), None, None)
             return P(mdim(shape[0]), None, fdim(shape[2]))
         return P(mdim(shape[0]), fdim(shape[1]))
     if name == "conv_w":                       # (W, Ch) depthwise
@@ -110,13 +125,19 @@ def _leaf_spec(path: tuple[str, ...], shape: tuple[int, ...], mesh,
 
 
 def param_specs(abstract_params, mesh, *, fsdp: bool = False,
-                fsdp_axes: str | tuple[str, ...] = "auto"):
+                fsdp_axes: str | tuple[str, ...] = "auto",
+                moe_ep: bool = False):
     """PartitionSpec pytree for a params tree (use jax.eval_shape output).
 
     fsdp_axes: DP axes the FSDP dim shards over — "auto" uses every DP axis
     on the mesh (('pod','data') on multi-pod, the locality-aware layout);
     pass ("data",) to force the legacy intra-pod layout (pods replicate
     params; benchmarks use this as the flat baseline).
+
+    moe_ep: shard routed-expert weight E dims over the full DP composite
+    (the locality-dispatch layout — each rank owns E/p experts and tokens
+    travel, DESIGN.md §12). Only leaves whose E is divisible by the DP size
+    take the EP spec; others keep the TP/FSDP layout.
     """
     if not fsdp:
         fs_axes: tuple[str, ...] = ()
@@ -125,6 +146,7 @@ def param_specs(abstract_params, mesh, *, fsdp: bool = False,
     else:
         fs_axes = tuple(a for a in normalize_axes(fsdp_axes)
                         if a in mesh.axis_names)
+    ep_axes = dp_axes(mesh) if moe_ep else ()
 
     def visit(path, leaf):
         keys = tuple(getattr(p, "key", getattr(p, "idx", None)) for p in path)
@@ -133,9 +155,22 @@ def param_specs(abstract_params, mesh, *, fsdp: bool = False,
         # reps dim; encdec stacks under enc_layers/dec_layers.
         stacked = any(k in ("blocks",) or k.endswith("_layers") for k in keys)
         spec = _leaf_spec(keys, leaf.shape[1:] if stacked else leaf.shape,
-                          mesh, fs_axes)
+                          mesh, fs_axes, ep_axes)
         return P(None, *spec) if stacked else spec
 
+    return jax.tree_util.tree_map_with_path(visit, abstract_params)
+
+
+def moe_ep_mask(abstract_params):
+    """Per-leaf bool pytree: True for routed-expert weight leaves (the
+    leaves ``param_specs(..., moe_ep=True)`` shards over DP and the paper
+    mode must NOT gather — their grads arrive complete at the owner)."""
+    def visit(path, leaf):
+        keys = tuple(str(getattr(p, "key", getattr(p, "idx", None)))
+                     for p in path)
+        stacked = any(k in ("blocks",) or k.endswith("_layers") for k in keys)
+        shape = leaf.shape[1:] if stacked else leaf.shape
+        return moe_expert_leaf(keys, shape)
     return jax.tree_util.tree_map_with_path(visit, abstract_params)
 
 

@@ -33,7 +33,8 @@ from repro.models import encdec, transformer
 from repro.optim import AdamW, TrainState
 from .sharding import (DP_AXES, batch_spec, block_slice_dims, dp_axes,
                        fsdp_param_axes, fsdp_param_dims, gather_outer_local,
-                       make_shard_fn, normalize_axes, param_specs)
+                       make_shard_fn, moe_ep_mask, normalize_axes,
+                       param_specs)
 
 
 # ---------------------------------------------------------------------------
@@ -63,7 +64,7 @@ def xent_loss(logits: jax.Array, labels: jax.Array) -> jax.Array:
 def make_loss_fn(cfg, *, remat: bool = True):
     model = encdec if cfg.family == "audio" else transformer
 
-    def loss_fn(params, batch, shard, prefetch=None):
+    def loss_fn(params, batch, shard, prefetch=None, moe_dispatch=None):
         kw: dict[str, Any] = {}
         if cfg.family == "audio":
             kw["frames"] = batch["frames"]
@@ -71,6 +72,8 @@ def make_loss_fn(cfg, *, remat: bool = True):
             kw["img_embeds"] = batch["img_embeds"]
         if prefetch is not None:
             kw["prefetch"] = prefetch
+        if moe_dispatch is not None:
+            kw["moe_dispatch"] = moe_dispatch
         logits, aux, _ = model.forward(params, cfg, batch["tokens"],
                                        mode="train", shard=shard, remat=remat,
                                        **kw)
@@ -190,6 +193,10 @@ class StepArtifacts:
     prefetch_depth: int = 0           # resolved FSDP gather lookahead (0=eager)
     prefetch_source: str = ""         # "table"|"model"|"dispatch"|"explicit"|"n/a"
     fsdp_axes: tuple = ()             # resolved FSDP sharding domain
+    moe_dispatch: str = "none"        # resolved EP algorithm ("none" = off)
+    moe_transport: str = ""           # "tokens" | "slots" when dispatch is on
+    moe_dispatch_source: str = ""     # "table" | "model" | "explicit" | "n/a"
+    events: tuple = ()                # TelemetryEvents raised while building
 
 
 def abstract_batch(cfg, shape) -> dict:
@@ -220,7 +227,8 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                     bucket_mb: float = 64.0, compress: bool = False,
                     donate: bool = True, shape="train_4k",
                     grad_accum: int = 1,
-                    prefetch_depth: int | str = 0) -> StepArtifacts:
+                    prefetch_depth: int | str = 0,
+                    moe_dispatch: str = "none") -> StepArtifacts:
     """grad_accum > 1 splits the per-device batch into microbatches inside a
     lax.scan: activation residency drops ~grad_accum×, the DP sync still
     happens once per step on the accumulated grads (the paper's collective
@@ -250,10 +258,29 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
     the measured per-dispatch overhead of the live backend — a host-CPU
     harness with no real wire resolves to 0. Applies to paper-mode FSDP
     on the transformer family; degrades to eager where the in-scan gather
-    cannot run (legacy partial-auto split, encdec)."""
+    cannot run (legacy partial-auto split, encdec).
+
+    moe_dispatch: locality expert parallelism (DESIGN.md §12) — "none" keeps
+    replicated experts; "locality" / "xla" shard routed-expert weights over
+    the full DP composite and route token slots through
+    ``core/collectives.all_to_all`` with that algorithm; "auto" resolves via
+    the tuning policy's all_to_all cell. Engages only in paper mode
+    (grad_sync != "xla") on transformer-family MoE configs whose expert and
+    batch counts divide the DP size; otherwise records "n/a" and keeps the
+    replicated path."""
     optimizer = optimizer or AdamW()
     model = encdec if cfg.family == "audio" else transformer
     loss_fn = make_loss_fn(cfg, remat=remat)
+
+    build_events: list = []
+
+    def _warn(msg: str, **attrs) -> None:
+        # degradations must be LOUD: a structured event on the artifact
+        # (Trainer surfaces it) plus a stdlib warning for direct callers
+        import warnings
+        from repro.telemetry import TelemetryEvent
+        build_events.append(TelemetryEvent(msg, kind="warning", attrs=attrs))
+        warnings.warn(msg, stacklevel=3)
 
     grad_algorithm = grad_sync
     grad_sync_source = "explicit"
@@ -279,14 +306,6 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
     # --- abstract state + shardings ------------------------------------------
     a_params = jax.eval_shape(
         lambda k: model.init_params(k, cfg), jax.random.PRNGKey(0))
-    pspecs = param_specs(a_params, mesh, fsdp=fsdp, fsdp_axes=fsdp_axes)
-    resolved_fsdp_axes = (() if not fsdp else
-                          dp_axes(mesh) if fsdp_axes == "auto" else
-                          tuple(a for a in normalize_axes(fsdp_axes)
-                                if a in mesh.axis_names))
-    a_state = jax.eval_shape(TrainState.create, a_params)
-    state_specs = TrainState(params=pspecs, mu=pspecs, nu=pspecs, step=P())
-    state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
 
     dp = dp_axes(mesh)
     outer = ("pod",) if "pod" in mesh.axis_names else ()
@@ -300,6 +319,63 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
     dp_size = 1
     for ax in dp:
         dp_size *= mesh.devices.shape[list(mesh.axis_names).index(ax)]
+
+    # --- locality expert-parallel dispatch resolution (DESIGN.md §12) -------
+    from repro import _jax_compat
+    from repro.models.moe import MoeDispatch
+    _names = list(mesh.axis_names)
+    n_pods = mesh.devices.shape[_names.index("pod")] if "pod" in _names else 1
+    moe_algorithm = moe_dispatch
+    moe_transport = ""
+    moe_dispatch_source = "explicit"
+    ep_ok = (moe_dispatch != "none" and grad_sync != "xla"
+             and cfg.family != "audio" and getattr(cfg, "n_experts", 0) > 0
+             and dp_size > 1 and cfg.n_experts % dp_size == 0
+             and int(b_abstract["tokens"].shape[0]) % dp_size == 0
+             and not (_jax_compat.LEGACY_PARTIAL_AUTO
+                      and set(mesh.axis_names) - set(dp)))
+    if not ep_ok:
+        moe_algorithm = "none"
+        moe_dispatch_source = "n/a"
+    elif moe_dispatch == "auto":
+        # price the slot-table exchange (the larger of the two transports)
+        # through the tuning policy's all_to_all cell
+        from repro.models.moe import capacity as _moe_capacity
+        from repro.tuning.policy import default_policy as _dpol
+        S = int(b_abstract["tokens"].shape[1])
+        slot_bytes = ((int(b_abstract["tokens"].shape[0]) // dp_size)
+                      * cfg.n_experts * _moe_capacity(cfg, S)
+                      * cfg.d_model * jnp.dtype(cfg.dtype).itemsize)
+        sel = _dpol().select("all_to_all", dp_size, dp_size // n_pods,
+                             slot_bytes)
+        moe_algorithm, moe_dispatch_source = sel.algorithm, sel.source
+    ep_on = moe_algorithm != "none"
+    moe_hook = None
+    if ep_on:
+        # tokens transport wins bytes when one pod-aggregated copy of the
+        # token block undercuts K·cf slot copies (strict for qwen2's
+        # K·cf = 5 at q in {2,3}); algorithm="xla" stays on slots — it IS
+        # the flat baseline the multipod gate compares against.
+        kcf = cfg.top_k * cfg.capacity_factor
+        span = n_pods if n_pods > 1 else dp_size
+        moe_transport = ("tokens"
+                        if moe_algorithm == "locality" and span < kcf
+                        else "slots")
+        moe_hook = MoeDispatch(outer=outer, local=local,
+                               algorithm=moe_algorithm,
+                               transport=moe_transport, p=dp_size)
+
+    pspecs = param_specs(a_params, mesh, fsdp=fsdp, fsdp_axes=fsdp_axes,
+                         moe_ep=ep_on)
+    ep_tree = (moe_ep_mask(a_params) if ep_on
+               else jax.tree.map(lambda _: False, a_params))
+    resolved_fsdp_axes = (() if not fsdp else
+                          dp_axes(mesh) if fsdp_axes == "auto" else
+                          tuple(a for a in normalize_axes(fsdp_axes)
+                                if a in mesh.axis_names))
+    a_state = jax.eval_shape(TrainState.create, a_params)
+    state_specs = TrainState(params=pspecs, mu=pspecs, nu=pspecs, step=P())
+    state_sh = jax.tree.map(lambda s: NamedSharding(mesh, s), state_specs)
 
     # --- prefetch pipeline resolution (paper-mode FSDP, transformer only) ---
     names = list(mesh.axis_names)
@@ -346,7 +422,15 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
     else:
         resolved_depth = int(prefetch_depth)
         if resolved_depth and not can_prefetch:
-            resolved_depth = 0          # nothing to pipeline on this config
+            # nothing to pipeline on this config — encdec has no scanned
+            # transformer blocks, non-FSDP/flat-sync no in-scan gather
+            _warn(f"prefetch_depth={resolved_depth} requested but this "
+                  f"config cannot pipeline the FSDP gather (family="
+                  f"{cfg.family}, fsdp={fsdp}, grad_sync={grad_sync}): "
+                  f"degrading to eager",
+                  requested_depth=resolved_depth, family=cfg.family,
+                  fsdp=fsdp, grad_sync=grad_sync)
+            resolved_depth = 0
             prefetch_source = "n/a"
 
     # --- microbatch accumulation helper -------------------------------------
@@ -399,6 +483,10 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
         # alone keep the per-shard pod allreduce (1/p_ℓ of the bytes).
         fsdp_dims = fsdp_param_dims(pspecs)
         fsdp_axs = fsdp_param_axes(pspecs)
+        # EP expert leaves stay sharded through the forward (the dispatch
+        # all-to-all IS their exchange); gather-skip them here and let the
+        # return-leg transpose deliver their complete grads to the owner.
+        gdims = jax.tree.map(lambda k, e: -1 if e else k, fsdp_dims, ep_tree)
         param_in_specs = jax.tree.map(
             lambda sp, k: P(*[(sp[i] if i == k else None)
                               for i in range(len(sp))]),
@@ -413,12 +501,13 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                 x = jnp.moveaxis(x, k, 0)
                 g_outer, g_local = gather_outer_local(ax)
                 if g_outer:
-                    full = C.locality_bruck_allgather(x, g_outer, g_local,
-                                                      tiled=True,
-                                                      assume_varying=True)
+                    full = C.allgather(x, g_outer, g_local,
+                                       algorithm="locality_bruck", tiled=True,
+                                       assume_varying=True)
                 else:
-                    full = C.bruck_allgather(x, g_local or ("data",),
-                                             tiled=True, assume_varying=True)
+                    full = C.allgather(x, (), g_local or ("data",),
+                                       algorithm="bruck", tiled=True,
+                                       assume_varying=True)
                 return jnp.moveaxis(full, 0, k)
 
         def sync_pod(t):
@@ -437,7 +526,7 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
         # the forward, gathered per scanned layer with depth-ahead issue
         hook = None
         if resolved_depth > 0 and can_prefetch:
-            hook = BlockPrefetch(block_slice_dims(fsdp_dims["blocks"]),
+            hook = BlockPrefetch(block_slice_dims(gdims["blocks"]),
                                  fsdp_axs["blocks"], cfg.dtype,
                                  resolved_depth)
 
@@ -449,17 +538,19 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                     if hook is not None:
                         rest = {k: v for k, v in shards.items()
                                 if k != "blocks"}
-                        rdims = {k: v for k, v in fsdp_dims.items()
+                        rdims = {k: v for k, v in gdims.items()
                                  if k != "blocks"}
                         raxes = {k: v for k, v in fsdp_axs.items()
                                  if k != "blocks"}
                         full = jax.tree.map(_gather, rest, rdims, raxes)
                         full["blocks"] = shards["blocks"]
                         with jax.named_scope("repro:compute"):
-                            return loss_fn(full, mb, shard, prefetch=hook)
-                    full = jax.tree.map(_gather, shards, fsdp_dims, fsdp_axs)
+                            return loss_fn(full, mb, shard, prefetch=hook,
+                                           moe_dispatch=moe_hook)
+                    full = jax.tree.map(_gather, shards, gdims, fsdp_axs)
                     with jax.named_scope("repro:compute"):
-                        return loss_fn(full, mb, shard)
+                        return loss_fn(full, mb, shard,
+                                       moe_dispatch=moe_hook)
                 return jax.value_and_grad(sharded_loss, has_aux=True)(params)
 
             # microbatches accumulate per-device; the (locality-aware) DP
@@ -470,17 +561,22 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
             #   ('pod','data')-sharded: the gather transpose already
             #     reduce-scattered over BOTH tiers — scale to the mean,
             #     zero extra collectives;
+            #   EP expert shards: the return-leg all-to-all transpose
+            #     already summed every rank's cotangent at the owner —
+            #     scale only, same bucket;
             #   'data'-sharded: reduce-scattered intra-pod — finish with
             #     the pod allreduce;
             #   replicated: full locality allreduce over (pod, data).
             leaves, treedef = jax.tree.flatten(grads)
             dims = jax.tree.leaves(fsdp_dims)
             axs = jax.tree.leaves(fsdp_axs)
-            idx_done = [i for i, (k, a) in enumerate(zip(dims, axs))
-                        if k >= 0 and "pod" in a]
-            idx_rs = [i for i, (k, a) in enumerate(zip(dims, axs))
-                      if k >= 0 and "pod" not in a]
-            idx_full = [i for i, k in enumerate(dims) if k < 0]
+            eps = jax.tree.leaves(ep_tree)
+            idx_done = [i for i, (k, a, e) in enumerate(zip(dims, axs, eps))
+                        if e or (k >= 0 and "pod" in a)]
+            idx_rs = [i for i, (k, a, e) in enumerate(zip(dims, axs, eps))
+                      if not e and k >= 0 and "pod" not in a]
+            idx_full = [i for i, (k, e) in enumerate(zip(dims, eps))
+                        if not e and k < 0]
 
             for i in idx_done:
                 leaves[i] = leaves[i] / dp_size
@@ -517,6 +613,11 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
             # the step's final with_sharding_constraint re-scatters. The
             # prefetch pipeline needs the in-body gather, so it degrades
             # with it (reflected in StepArtifacts.prefetch_depth = 0).
+            if resolved_depth:
+                _warn(f"prefetch_depth={resolved_depth} requested but the "
+                      f"legacy partial-auto split cannot run the in-scan "
+                      f"gather: degrading to eager",
+                      requested_depth=resolved_depth, legacy=True)
             resolved_depth, prefetch_source = 0, "n/a"
             nogather_dims = jax.tree.map(lambda _: -1, fsdp_dims)
 
@@ -573,9 +674,9 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
             def grads_of(params, batch):
                 return sync(*compute(params, batch))
         else:
-            in_specs = (param_in_specs if fsdp else P(),
+            in_specs = (param_in_specs if (fsdp or ep_on) else P(),
                         {k: b_specs[k] for k in b_abstract})
-            out_specs = ((param_in_specs if fsdp else P()), P())
+            out_specs = ((param_in_specs if (fsdp or ep_on) else P()), P())
             grads_of = jax.shard_map(
                 body, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
                 axis_names=set(dp), check_vma=False)
@@ -604,7 +705,11 @@ def make_train_step(cfg, mesh, *, optimizer: AdamW | None = None,
                          grad_sync_source=grad_sync_source,
                          prefetch_depth=resolved_depth,
                          prefetch_source=prefetch_source,
-                         fsdp_axes=resolved_fsdp_axes)
+                         fsdp_axes=resolved_fsdp_axes,
+                         moe_dispatch=moe_algorithm,
+                         moe_transport=moe_transport,
+                         moe_dispatch_source=moe_dispatch_source,
+                         events=tuple(build_events))
 
 
 def init_state(cfg, mesh, artifacts: StepArtifacts, seed: int = 0) -> TrainState:

@@ -56,6 +56,7 @@ class TrainerConfig:
     fsdp: bool = False
     seq_shard: bool = False
     prefetch_depth: int | str = 0     # FSDP gather lookahead (DESIGN.md §5)
+    moe_dispatch: str = "none"        # locality expert parallelism (§12)
     lr: float = 3e-4
     seed: int = 0
     straggler_k: float = 3.0
@@ -126,7 +127,13 @@ class Trainer:
                 optimizer=AdamW(lr=t.lr),
                 grad_sync=t.grad_sync, fsdp=t.fsdp, seq_shard=t.seq_shard,
                 prefetch_depth=t.prefetch_depth,
+                moe_dispatch=t.moe_dispatch,
                 shape=self._abstract_batch())
+        # degradation warnings raised while building (e.g. a requested
+        # prefetch pipeline the config cannot run) surface immediately
+        for ev in self.artifacts.events:
+            self.events.append(ev)
+            self.log(f"[trainer] {ev}")
         # the EWMA describes the topology the old step function ran on —
         # carrying it across an elastic rebuild falsely flags the first
         # steps on a slower mesh (see StepMonitor.reset)
@@ -140,7 +147,13 @@ class Trainer:
             self.log(f"[trainer] prefetch_depth=auto -> "
                      f"{self.artifacts.prefetch_depth} "
                      f"({self.artifacts.prefetch_source})")
+        if t.moe_dispatch != "none":
+            self.log(f"[trainer] moe_dispatch={t.moe_dispatch} -> "
+                     f"{self.artifacts.moe_dispatch} "
+                     f"({self.artifacts.moe_transport or '-'}, "
+                     f"{self.artifacts.moe_dispatch_source})")
         self._stamp_comm(t)
+        self._stamp_moe_comm(t)
 
     def _stamp_comm(self, t: TrainerConfig) -> None:
         """AOT-compile the step ONCE ahead of time: the compiled executable
@@ -176,6 +189,81 @@ class Trainer:
                 kind="comm", attrs=report.asdict(), log=False)
         except Exception as e:            # pragma: no cover - backend quirks
             self._event(f"comm telemetry unavailable: "
+                        f"{type(e).__name__}: {e}", kind="warning")
+
+    def _stamp_moe_comm(self, t: TrainerConfig) -> None:
+        """Per-layer attribution ledger for the locality MoE dispatch: lower
+        ONE representative dispatch round-trip (collect -> expert shard ->
+        return) on the step's abstract shapes, stamp its CommReport under
+        ``train/moe_dispatch:<alg>`` and account ``n_moe_layers``
+        invocations per executed step — reconcile() stays exact by
+        construction while attributing the dispatch's share of the step's
+        inter-pod traffic to the MoE exchange specifically."""
+        self.moe_comm_label = None
+        self._moe_layers = 0
+        art = self.artifacts
+        if not t.comm_telemetry or art.moe_dispatch == "none":
+            return
+        try:
+            import jax.numpy as jnp
+            from jax.sharding import PartitionSpec as P
+            from repro.models import moe as moe_mod
+            from repro.models.moe import MoeDispatch
+            from repro.train.sharding import dp_axes
+
+            cfg = self.model_cfg
+            mesh = self.mesh
+            dp = dp_axes(mesh)
+            outer = ("pod",) if "pod" in mesh.axis_names else ()
+            local = tuple(a for a in dp if a != "pod")
+            names = list(mesh.axis_names)
+            p = 1
+            for ax in dp:
+                p *= np.asarray(mesh.devices).shape[names.index(ax)]
+            hook = MoeDispatch(outer=outer, local=local,
+                               algorithm=art.moe_dispatch,
+                               transport=art.moe_transport, p=p)
+            E, d = cfg.n_experts, cfg.d_model
+            dff = cfg.d_expert or cfg.d_ff
+            S = t.seq_len
+            C_cap = moe_mod.capacity(cfg, S)
+            dt = jnp.dtype(cfg.dtype)
+            pdt = jnp.dtype(cfg.param_dtype)
+
+            def body(params, x_pad, tok_idx):
+                return moe_mod._ep_apply(params, x_pad, tok_idx, cfg, hook,
+                                         C_cap)
+
+            fn = jax.shard_map(
+                body, mesh=mesh,
+                in_specs=({k: P(dp, None, None)
+                           for k in ("gate", "up", "down")},
+                          P(dp, None, None), P(dp, None)),
+                out_specs=P(dp, None, None),
+                axis_names=set(dp), check_vma=False)
+            B = t.global_batch
+            a_params = {
+                "gate": jax.ShapeDtypeStruct((E, d, dff), pdt),
+                "up": jax.ShapeDtypeStruct((E, d, dff), pdt),
+                "down": jax.ShapeDtypeStruct((E, dff, d), pdt),
+            }
+            a_x = jax.ShapeDtypeStruct((B, S + 1, d), dt)
+            a_idx = jax.ShapeDtypeStruct((B, E * C_cap), jnp.int32)
+            hlo = jax.jit(fn).lower(a_params, a_x, a_idx).compile().as_text()
+            label = f"train/moe_dispatch:{art.moe_dispatch}"
+            report = telemetry.comm_report(hlo, mesh, label=label)
+            self.registry.attach_comm_report(label, report)
+            self.moe_comm_label = label
+            self._moe_layers = sum(1 for s in cfg.layer_plan()
+                                   if s.mlp == "moe")
+            self._event(
+                f"moe dispatch comm ({art.moe_dispatch}/"
+                f"{art.moe_transport}): {report.nonlocal_bytes:.0f} "
+                f"inter-pod B / {report.nonlocal_msgs:.0f} msgs per layer "
+                f"x {self._moe_layers} layers/step",
+                kind="comm", attrs=report.asdict(), log=False)
+        except Exception as e:            # pragma: no cover - backend quirks
+            self._event(f"moe dispatch telemetry unavailable: "
                         f"{type(e).__name__}: {e}", kind="warning")
 
     def _init_or_restore(self, step: int | None = None) -> None:
@@ -327,6 +415,8 @@ class Trainer:
                 t.global_batch * t.seq_len / dt if dt else 0.0)
             if self.comm_report is not None:
                 reg.record_comm(self.comm_label)
+            if self.moe_comm_label is not None and self._moe_layers:
+                reg.record_comm(self.moe_comm_label, self._moe_layers)
             m = {k: float(v) for k, v in metrics.items()}
             m["step"], m["dt"] = self.step, dt
             m["grad_algorithm"] = self.artifacts.grad_algorithm

@@ -32,6 +32,7 @@ ALLREDUCE_ALGORITHMS = ("locality", "xla")
 LOGSUMEXP_ALGORITHMS = ("locality", "xla")
 OVERLAP_ALGORITHMS = ("eager", "prefetch")
 MIGRATE_ALGORITHMS = ("locality_bruck", "multilane", "xla")
+ALL_TO_ALL_ALGORITHMS = ("locality", "xla")   # == collectives.ALL_TO_ALL_ALGORITHMS
 
 # Serving head dims are 64-128; the running-max phase of the logsumexp
 # combine moves payload/(D+1) bytes. Priced at D=64 (the conservative end:
@@ -108,7 +109,7 @@ def simulate_allreduce(algorithm: str, p: int, p_local: int,
 
     "xla": flat ring reduce-scatter + ring allgather — 2(p-1) neighbor
     messages of nbytes/p, of which 2·r cross a region boundary.
-    "locality": core/collectives.locality_allreduce — local ring RS, per
+    "locality": core/collectives.allreduce(algorithm="locality") — local ring RS, per
     lane across regions a recursive-halving RS + Bruck AG (power-of-two
     region counts) or the Bruck-transpose RS + Bruck AG of the allgatherv
     adaptation (any other count) — both 2·ceil(log2 r) non-local messages
@@ -154,7 +155,7 @@ def simulate_logsumexp_combine(algorithm: str, p: int, p_local: int,
     (payload nbytes/(head_dim+1)) then the packed o+l sum-allreduce
     (payload nbytes). "xla" prices GSPMD's implicit combine (flat recursive
     doubling for the max, flat ring for the sum); "locality" the explicit
-    ``collectives.locality_logsumexp_combine`` structure. The two-phase
+    ``collectives.logsumexp_combine`` structure. The two-phase
     accounting replaces the single-sum-allreduce pricing the serve layer
     used before it could execute the combine.
     """
@@ -194,6 +195,28 @@ def simulate_cache_migrate(algorithm: str, p: int, p_local: int,
     return simulate_allgather(sched_alg, p, p_local, nbytes, machine)
 
 
+def simulate_all_to_all(algorithm: str, p: int, p_local: int,
+                        nbytes: float,
+                        machine: cost_model.MachineParams | str) -> float:
+    """Personalized exchange (``core/collectives.all_to_all`` — the MoE
+    dispatch transport). ``nbytes`` is the per-rank buffer; the schedules
+    count blocks in (source, destination)-pair units of ``nbytes / p``.
+    Round-synchronous pricing over the ``ALL_TO_ALL_SCHEDULES`` oracles:
+    "locality" is the two-tier exchange (q-1 aggregated DCN messages per
+    region), "xla" the flat p-1-round pairwise rotation GSPMD emits.
+    """
+    if isinstance(machine, str):
+        machine = cost_model.MACHINES[machine]
+    if algorithm not in ALL_TO_ALL_ALGORITHMS:
+        raise ValueError(f"unknown all_to_all algorithm {algorithm!r}")
+    if p <= 1:
+        return 0.0
+    sched = schedules.ALL_TO_ALL_SCHEDULES[algorithm](p, p_local)
+    region = RegionMap(p=p, p_local=p_local)
+    return cost_model.schedule_cost(sched, machine, nbytes / p,
+                                    region=region, mode="round")
+
+
 def simulate_overlap(algorithm: str, p: int, p_local: int, nbytes: float,
                      machine: cost_model.MachineParams | str, *,
                      flops: float | None = None,
@@ -227,6 +250,8 @@ def simulate(collective: str, algorithm: str, p: int, p_local: int,
                                           machine)
     if collective == "cache_migrate":
         return simulate_cache_migrate(algorithm, p, p_local, nbytes, machine)
+    if collective == "all_to_all":
+        return simulate_all_to_all(algorithm, p, p_local, nbytes, machine)
     if collective.startswith("overlap:i"):
         return simulate_overlap(algorithm, p, p_local, nbytes, machine,
                                 flops_per_byte=overlap_intensity(collective))
@@ -302,6 +327,13 @@ def _measure_real(collective: str, algorithm: str, p: int, p_local: int,
     elif collective == "allreduce":
         def body(s):
             return C.allreduce(s, "outer", "local", algorithm=algorithm)
+    elif collective == "all_to_all":
+        # per-rank buffer must split p ways: round the element count up
+        n_elems = -(-n_elems // p) * p
+        x = jnp.zeros((p * n_elems,), dtype=dtype)
+
+        def body(s):
+            return C.all_to_all(s, "outer", "local", algorithm=algorithm)
     elif collective == "logsumexp_combine":
         # payload layout mirrors the decode stats: (n, D) o-accumulator +
         # (n,) running max + (n,) sumexp, n rows per rank
@@ -311,7 +343,7 @@ def _measure_real(collective: str, algorithm: str, p: int, p_local: int,
              jnp.ones((p * n_rows,), dtype))
 
         def body(o, m, l):
-            ot, lt = C.locality_logsumexp_combine(
+            ot, lt = C.logsumexp_combine(
                 o, m, l, "outer", "local", algorithm=algorithm)
             return ot, lt
     else:

@@ -24,9 +24,10 @@ import os
 import threading
 
 from .cache import SchemaVersionError, TuningCache, bucket_bytes
-from .measure import (ALLREDUCE_ALGORITHMS, LOGSUMEXP_ALGORITHMS,
-                      MIGRATE_ALGORITHMS, OVERLAP_ALGORITHMS, Fingerprint,
-                      overlap_collective, overlap_intensity,
+from .measure import (ALL_TO_ALL_ALGORITHMS, ALLREDUCE_ALGORITHMS,
+                      LOGSUMEXP_ALGORITHMS, MIGRATE_ALGORITHMS,
+                      OVERLAP_ALGORITHMS, Fingerprint, overlap_collective,
+                      overlap_intensity, simulate_all_to_all,
                       simulate_allreduce, simulate_cache_migrate,
                       simulate_logsumexp_combine, simulate_overlap)
 
@@ -143,6 +144,18 @@ class Policy:
             costs = {a: simulate_cache_migrate(a, p, p_local, nbytes,
                                                self.machine)
                      for a in MIGRATE_ALGORITHMS}
+            if p_local <= 1 or p <= p_local:
+                return Selection("xla", "model", costs["xla"])
+            best = min(costs, key=costs.get)
+            return Selection(best, "model", costs[best])
+        if collective == "all_to_all":
+            # MoE dispatch transport: degenerate topologies (one region, or
+            # one rank per region with nothing to aggregate over) take
+            # GSPMD's flat pairwise exchange; otherwise price the two-tier
+            # schedule against it.
+            costs = {a: simulate_all_to_all(a, p, p_local, nbytes,
+                                            self.machine)
+                     for a in ALL_TO_ALL_ALGORITHMS}
             if p_local <= 1 or p <= p_local:
                 return Selection("xla", "model", costs["xla"])
             best = min(costs, key=costs.get)

@@ -20,17 +20,17 @@ from typing import Any, Sequence
 
 from repro.core import autotune
 from .cache import Entry, TuningCache, bucket_bytes, make_key
-from .measure import (ALLGATHER_ALGORITHMS, ALLREDUCE_ALGORITHMS,
-                      LOGSUMEXP_ALGORITHMS, MIGRATE_ALGORITHMS,
-                      OVERLAP_ALGORITHMS, OVERLAP_INTENSITY_OCTAVES,
-                      Fingerprint, measure, overlap_intensity,
-                      simulate_allreduce, simulate_logsumexp_combine,
-                      simulate_overlap)
+from .measure import (ALL_TO_ALL_ALGORITHMS, ALLGATHER_ALGORITHMS,
+                      ALLREDUCE_ALGORITHMS, LOGSUMEXP_ALGORITHMS,
+                      MIGRATE_ALGORITHMS, OVERLAP_ALGORITHMS,
+                      OVERLAP_INTENSITY_OCTAVES, Fingerprint, measure,
+                      overlap_intensity, simulate_allreduce,
+                      simulate_logsumexp_combine, simulate_overlap)
 from .policy import Policy
 
 DEFAULT_SIZES = tuple(2 ** k for k in range(6, 23, 2))   # 64 B .. 4 MiB
 DEFAULT_COLLECTIVES = ("allgather", "allreduce", "logsumexp_combine",
-                       "cache_migrate", "overlap")
+                       "cache_migrate", "all_to_all", "overlap")
 SMOKE_SIZES = (256, 4096, 65536)         # CI pre-merge: 3 octaves, 1 iter
 
 
@@ -40,7 +40,8 @@ def _algorithms_for(collective: str):
     return {"allgather": ALLGATHER_ALGORITHMS,
             "allreduce": ALLREDUCE_ALGORITHMS,
             "logsumexp_combine": LOGSUMEXP_ALGORITHMS,
-            "cache_migrate": MIGRATE_ALGORITHMS}[collective]
+            "cache_migrate": MIGRATE_ALGORITHMS,
+            "all_to_all": ALL_TO_ALL_ALGORITHMS}[collective]
 
 
 def _expand_collectives(collectives: Sequence[str]) -> list[str]:
@@ -127,6 +128,14 @@ def run_sweep(p: int = 16, p_local: int = 4, *,
                 modeled = {a: cache_migrate_model(a, p, p_local, nbytes,
                                                   machine)
                            for a in MIGRATE_ALGORITHMS}
+                self_cmp = False
+            elif collective == "all_to_all":
+                # closed forms (worst-rank postal) vs the round-simulated
+                # oracle schedules — a genuine comparison even on CPU
+                from repro.core.cost_model import all_to_all_model
+                modeled = {a: all_to_all_model(a, p, p_local, nbytes / p,
+                                               machine)
+                           for a in ALL_TO_ALL_ALGORITHMS}
                 self_cmp = False
             elif collective.startswith("overlap:i"):
                 fpb = overlap_intensity(collective)
